@@ -1,0 +1,129 @@
+"""Roofline analysis (deliverable g): aggregate the dry-run JSONs into the
+per-(arch x shape x mesh) three-term table, identify the dominant bottleneck,
+cross-check MODEL_FLOPS = 6ND (6*N_active*D for MoE) against HLO FLOPs, and
+emit EXPERIMENTS.md §Roofline content (experiments/roofline.md)."""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+from repro.config.model import SHAPES
+from repro.config.registry import list_archs
+from repro.launch import hw
+
+DRYRUN_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+OUT_MD = Path(__file__).resolve().parents[1] / "experiments" / "roofline.md"
+
+
+def model_flops_per_chip(rec: dict) -> float:
+    """6*N(_active)*D per optimizer step / chips — train cells only; decode
+    and prefill use 2*N*D (forward only)."""
+    shape = SHAPES[rec["shape"]]
+    n = rec["active_params"]
+    chips = rec["n_chips"]
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens / chips
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens / chips
+    tokens = shape.global_batch  # decode: one token per sequence
+    return 2.0 * n * tokens / chips
+
+
+def load_records() -> list[dict]:
+    recs = []
+    for path in sorted(DRYRUN_DIR.glob("*.json")):
+        try:
+            recs.append(json.loads(path.read_text()))
+        except json.JSONDecodeError:
+            continue
+    return recs
+
+
+def analyze(rec: dict) -> dict:
+    r = dict(rec)
+    roof = rec.get("roofline") or {}
+    terms = {
+        "compute": roof.get("compute_s") or 0.0,
+        "memory": roof.get("memory_s") or 0.0,
+        "collective": roof.get("collective_s") or 0.0,
+    }
+    dominant = max(terms, key=terms.get)
+    bound_s = terms[dominant]
+    mf = model_flops_per_chip(rec)
+    r["model_flops_chip"] = mf
+    r["useful_ratio"] = mf / rec["hlo_flops"] if rec.get("hlo_flops") else None
+    r["dominant"] = dominant
+    r["bound_s"] = bound_s
+    # roofline fraction: useful-model-compute time / dominant-term time
+    r["roofline_fraction"] = (mf / hw.PEAK_FLOPS_BF16) / bound_s if bound_s else None
+    return r
+
+
+def advice(r: dict) -> str:
+    d = r["dominant"]
+    if d == "collective":
+        return "re-shard to cut resharding/gather traffic (SP boundaries, FSDP gather grouping, larger microbatches)"
+    if d == "memory":
+        if SHAPES[r["shape"]].kind == "decode":
+            return "decode is weight/cache-streaming bound: quantize KV/weights or batch more sequences per step"
+        return "reduce remat re-reads / fuse CE head (bf16 chunk logits), bigger attention chunks"
+    return "compute-bound: increase per-chip arithmetic intensity is already optimal; tune MXU tiling"
+
+
+def to_markdown(recs: list[dict]) -> str:
+    ok = [r for r in recs if r.get("status") == "ok"]
+    skipped = [r for r in recs if r.get("status") == "skipped"]
+    lines = [
+        "# Roofline table (from the multi-pod dry-run)",
+        "",
+        f"v5e terms: compute = HLO_FLOPs/chip / {hw.PEAK_FLOPS_BF16:.0e}; memory = HLO_bytes/chip / {hw.HBM_BW:.0e}; "
+        f"collective = ICI bytes / {hw.ICI_BW:.0e} + cross-pod bytes / {hw.DCI_BW:.0e} (per chip).",
+        "",
+        "| arch | shape | mesh | compute_s | memory_s | collective_s | dominant | peak GB/dev | 6ND/HLO | roofline frac | next lever |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted((analyze(x) for x in ok), key=lambda z: (z["arch"], z["shape"], z["mesh"])):
+        roof = r["roofline"]
+        lines.append(
+            "| {arch} | {shape} | {mesh} | {c:.3g} | {m:.3g} | {k:.3g} | **{dom}** | {gb:.1f} | {ur} | {rf} | {adv} |".format(
+                arch=r["arch"], shape=r["shape"], mesh=r["mesh"],
+                c=roof.get("compute_s") or 0, m=roof.get("memory_s") or 0, k=roof.get("collective_s") or 0,
+                dom=r["dominant"], gb=r.get("peak_bytes_per_device", 0) / 1e9,
+                ur=f"{r['useful_ratio']:.2f}" if r["useful_ratio"] else "-",
+                rf=f"{r['roofline_fraction']:.3f}" if r["roofline_fraction"] else "-",
+                adv=advice(r),
+            )
+        )
+    lines.append("")
+    lines.append("## Skipped cells (spec'd inapplicability)")
+    for r in sorted(skipped, key=lambda z: (z["arch"], z["shape"], z["mesh"])):
+        lines.append(f"- {r['arch']} x {r['shape']} ({r['mesh']}): {r['reason']}")
+    return "\n".join(lines) + "\n"
+
+
+def main() -> list[str]:
+    t0 = time.perf_counter()
+    recs = load_records()
+    ok = [analyze(r) for r in recs if r.get("status") == "ok"]
+    md = to_markdown(recs)
+    OUT_MD.parent.mkdir(parents=True, exist_ok=True)
+    OUT_MD.write_text(md)
+    us = (time.perf_counter() - t0) * 1e6
+    by_dom = {}
+    for r in ok:
+        by_dom[r["dominant"]] = by_dom.get(r["dominant"], 0) + 1
+    fracs = [r["roofline_fraction"] for r in ok if r["roofline_fraction"]]
+    out = [
+        f"roofline_table,{us:.0f},cells_ok={len(ok)};skipped={sum(r.get('status')=='skipped' for r in recs)};"
+        f"dominant={by_dom};median_frac={sorted(fracs)[len(fracs)//2]:.3f}" if fracs else
+        f"roofline_table,{us:.0f},cells_ok={len(ok)};no-fractions-yet"
+    ]
+    return out
+
+
+if __name__ == "__main__":
+    for line in main():
+        print(line)

@@ -1,0 +1,21 @@
+"""Serve a small LM with batched requests.
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch qwen2-0.5b]
+"""
+import argparse
+
+from repro.launch import serve
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--requests", type=int, default=8)
+    args = ap.parse_args()
+    result = serve.main(["--arch", args.arch, "--requests", str(args.requests), "--max-new", "12"])
+    print(f"served {result['requests']} requests / {result['tokens']} tokens in {result['seconds']:.2f}s")
+    assert result["requests"] == args.requests
+
+
+if __name__ == "__main__":
+    main()

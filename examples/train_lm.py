@@ -1,0 +1,37 @@
+"""Train a ~20M-param reduced LM for a few hundred steps on CPU.
+
+    PYTHONPATH=src python examples/train_lm.py [--arch qwen2-0.5b] [--steps 200]
+
+Uses the real production train loop (repro.launch.train): AdamW + cosine
+schedule, checkpoint every 50 steps, resumable with --resume.
+"""
+import argparse
+
+from repro.launch import train
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+    argv = [
+        "--arch", args.arch,
+        "--steps", str(args.steps),
+        "--batch", "8",
+        "--seq", "128",
+        "--lr", "1e-3",
+        "--ckpt-every", "50",
+    ]
+    if args.resume:
+        argv.append("--resume")
+    result = train.main(argv)
+    print(f"final loss: {result['final_loss']:.4f} after {result['steps']} steps")
+    # uniform baseline is ln(512) ~= 6.24; the default 200 steps lands well below
+    threshold = 6.2 if args.steps < 150 else 6.0
+    assert result["final_loss"] < threshold, "training should beat the uniform baseline"
+
+
+if __name__ == "__main__":
+    main()

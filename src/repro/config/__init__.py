@@ -1,0 +1,4 @@
+from repro.config.model import ModelConfig, ShapeConfig, SHAPES
+from repro.config.registry import register_arch, get_arch, list_archs
+
+__all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "register_arch", "get_arch", "list_archs"]

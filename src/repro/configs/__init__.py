@@ -1,0 +1,2 @@
+# One module per assigned architecture (deliverable f). Selected via
+# ``--arch <id>`` through repro.config.registry.

@@ -1,0 +1,24 @@
+# The paper's primary contribution: the on-demand de-identification engine.
+# filter -> scrub -> anonymize stages, pseudonymization, manifests, rule DSL.
+from repro.core.pipeline import DeidPipeline, DeidRequest, build_request
+from repro.core.pseudonym import PseudonymService, TrustMode
+from repro.core.manifest import Manifest, ManifestEntry, Outcome
+from repro.core.filter import FilterStage
+from repro.core.scrub import ScrubStage, ScrubError, numpy_blank
+from repro.core.anonymize import AnonymizerStage
+
+__all__ = [
+    "DeidPipeline",
+    "DeidRequest",
+    "build_request",
+    "PseudonymService",
+    "TrustMode",
+    "Manifest",
+    "ManifestEntry",
+    "Outcome",
+    "FilterStage",
+    "ScrubStage",
+    "ScrubError",
+    "numpy_blank",
+    "AnonymizerStage",
+]

@@ -1,0 +1,142 @@
+"""The de-identification pipeline: filter -> scrub -> anonymize (Figure 2a).
+
+One :class:`DeidPipeline` instance is the unit each queue worker runs. It is
+deliberately stateless across instances (all request state rides in the
+:class:`DeidRequest`), which is what makes the horizontal scaling in
+``repro.queueing``/``repro.distributed`` safe.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.anonymize import AnonymizerStage
+from repro.core.filter import FilterStage
+from repro.core.manifest import Manifest, ManifestEntry, Outcome
+from repro.core.pseudonym import PseudonymService, TrustMode
+from repro.core.scrub import ScrubError, ScrubStage
+from repro.core import scripts as default_scripts
+from repro.dicom.dataset import DicomDataset
+from repro.dicom.generator import SyntheticStudy
+
+
+@dataclass
+class DeidRequest:
+    """One imaging study to de-identify under one research study's rules."""
+
+    research_study: str        # IRB protocol / pre-IRB request id
+    accession: str             # original imaging accession
+    anon_accession: str
+    anon_mrn: str
+    jitter: int
+    mode: str = TrustMode.POST_IRB.value
+
+    def script_params(self) -> Dict[str, str]:
+        return {
+            "accession": self.anon_accession,
+            "mrn": self.anon_mrn,
+            "jitter": str(self.jitter),
+            "uid_salt": f"{self.research_study}|{self.anon_accession}",
+        }
+
+
+def build_request(
+    pseudo: PseudonymService, accession: str, mrn: str
+) -> DeidRequest:
+    """Central-server side: validate + mint pseudonyms for one accession
+    (paper: 'a new anonymized accession number, patient MRN, and randomized
+    date jitter specific to the specific research study are created')."""
+    return DeidRequest(
+        research_study=pseudo.study_id,
+        accession=accession,
+        anon_accession=pseudo.accession(accession),
+        anon_mrn=pseudo.mrn(mrn),
+        jitter=pseudo.jitter_for(mrn),
+        mode=pseudo.mode.value,
+    )
+
+
+class DeidPipeline:
+    def __init__(
+        self,
+        filter_script: Optional[str] = None,
+        anonymizer_script: Optional[str] = None,
+        scrub_script: Optional[str] = None,
+        blank_fn=None,
+        recompress: bool = True,
+    ) -> None:
+        self.filter = FilterStage(filter_script or default_scripts.DEFAULT_FILTER_SCRIPT)
+        self.anonymizer = AnonymizerStage(
+            anonymizer_script or default_scripts.DEFAULT_ANONYMIZER_SCRIPT
+        )
+        scrub_kwargs = {} if blank_fn is None else {"blank_fn": blank_fn}
+        self.scrub = ScrubStage(
+            scrub_script or default_scripts.DEFAULT_SCRUB_SCRIPT,
+            recompress=recompress,
+            **scrub_kwargs,
+        )
+        self.script_shas = {
+            "filter": self.filter.sha,
+            "anonymizer": self.anonymizer.sha,
+            "scrubber": self.scrub.sha,
+        }
+
+    # ------------------------------------------------------------- instances
+    def process_instance(
+        self, ds: DicomDataset, request: DeidRequest, worker_id: str = ""
+    ) -> Tuple[Optional[DicomDataset], ManifestEntry]:
+        """Run one SOP instance through the three stages."""
+        params = request.script_params()
+        try:
+            decision = self.filter(ds)
+            if not decision.accepted:
+                entry = ManifestEntry(
+                    sop_uid_anon="",
+                    outcome=Outcome.FILTERED,
+                    modality=str(ds.get("Modality", "")),
+                    filter_rule=decision.rule,
+                    original_bytes=ds.nbytes(),
+                    worker_id=worker_id,
+                    script_shas=self.script_shas,
+                )
+                return None, entry
+
+            scrubbed = self.scrub(ds)
+            anon = self.anonymizer(scrubbed.dataset, params)
+            entry = ManifestEntry(
+                sop_uid_anon=str(anon.dataset.get("SOPInstanceUID", "")),
+                outcome=Outcome.ANONYMIZED,
+                modality=str(ds.get("Modality", "")),
+                scrub_rects=list(scrubbed.rects),
+                tag_actions=anon.tag_actions,
+                recompressed=scrubbed.recompressed,
+                compressed_bytes=scrubbed.compressed_bytes,
+                original_bytes=ds.nbytes(),
+                worker_id=worker_id,
+                script_shas=self.script_shas,
+            )
+            return anon.dataset, entry
+        except ScrubError as e:
+            entry = ManifestEntry(
+                sop_uid_anon="",
+                outcome=Outcome.FAILED,
+                modality=str(ds.get("Modality", "")),
+                original_bytes=ds.nbytes(),
+                error=str(e),
+                worker_id=worker_id,
+                script_shas=self.script_shas,
+            )
+            return None, entry
+
+    # --------------------------------------------------------------- studies
+    def process_study(
+        self, study: SyntheticStudy, request: DeidRequest, worker_id: str = ""
+    ) -> Tuple[List[DicomDataset], Manifest]:
+        manifest = Manifest(request_id=f"{request.research_study}/{request.anon_accession}")
+        delivered: List[DicomDataset] = []
+        for ds in study.datasets:
+            out, entry = self.process_instance(ds, request, worker_id)
+            manifest.add(entry)
+            if out is not None:
+                delivered.append(out)
+        return delivered, manifest

@@ -1,0 +1,100 @@
+"""Scrub stage: blank PHI pixel regions and recompress (paper Figure 2a).
+
+Looks up the device variant's scrub rectangles in the site scrub script,
+blanks them ("replaced by black pixels"), and recompresses with the
+JPEG-Lossless-style codec. The blanking compute itself is pluggable:
+
+* ``numpy_blank`` — host reference path (single instance);
+* ``repro.kernels.scrub.ops.scrub_images`` — the Pallas TPU kernel, used by
+  the distributed farm for batched scrubbing (DESIGN.md §3).
+
+Defense in depth: an ultrasound instance with no scrub rule should have been
+filtered upstream; the stage re-checks and fails closed rather than passing
+un-scrubbed US pixels through.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.rules import parse_scrub_script, script_sha
+from repro.dicom import codec
+from repro.dicom.dataset import DicomDataset
+from repro.dicom.devices import Rect
+
+
+def numpy_blank(pixels: np.ndarray, rects: Sequence[Rect]) -> np.ndarray:
+    """Reference blanking: set each (x, y, w, h) region to 0."""
+    out = pixels.copy()
+    H, W = out.shape[:2]
+    for x, y, w, h in rects:
+        out[max(0, y) : min(H, y + h), max(0, x) : min(W, x + w)] = 0
+    return out
+
+
+class ScrubError(RuntimeError):
+    pass
+
+
+@dataclass
+class ScrubResult:
+    dataset: DicomDataset
+    rects: List[Rect] = field(default_factory=list)
+    recompressed: bool = False
+    compressed_bytes: int = 0
+
+
+class ScrubStage:
+    def __init__(
+        self,
+        script_text: str,
+        blank_fn: Callable[[np.ndarray, Sequence[Rect]], np.ndarray] = numpy_blank,
+        recompress: bool = True,
+        sv: int = 1,
+    ) -> None:
+        self.script_text = script_text
+        self.rules = parse_scrub_script(script_text)
+        self.sha = script_sha(script_text)
+        self.blank_fn = blank_fn
+        self.recompress = recompress
+        self.sv = sv
+
+    def rects_for(self, ds: DicomDataset) -> Optional[Tuple[Rect, ...]]:
+        res = ds.resolution()
+        if res is None:
+            return None
+        key = (
+            str(ds.get("Modality", "")),
+            str(ds.get("Manufacturer", "")),
+            str(ds.get("ManufacturerModelName", "")),
+            res[0],
+            res[1],
+        )
+        return self.rules.get(key)
+
+    def __call__(self, ds: DicomDataset) -> ScrubResult:
+        if ds.pixels is None:
+            raise ScrubError("no pixel data to scrub (object should have been filtered)")
+        rects = self.rects_for(ds)
+        if rects is None:
+            if ds.get("Modality") == "US":
+                # fail closed: whitelist miss must never pass pixels through
+                raise ScrubError(
+                    f"no scrub rule for ultrasound variant "
+                    f"{ds.get('Manufacturer')}/{ds.get('ManufacturerModelName')}/"
+                    f"{ds.resolution()} — filter should have rejected it"
+                )
+            rects = ()
+        out = ds.copy()
+        result = ScrubResult(out, list(rects))
+        if rects:
+            out.pixels = np.asarray(self.blank_fn(out.pixels, rects))
+        if self.recompress and out.pixels is not None:
+            # "recompressed using the JPEG Lossless syntax"
+            compressed = codec.encode(out.pixels, self.sv)
+            result.recompressed = True
+            result.compressed_bytes = len(compressed)
+            out["TransferSyntaxUID"] = "1.2.840.10008.1.2.4.70"
+        return result

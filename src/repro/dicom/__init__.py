@@ -1,0 +1,15 @@
+from repro.dicom.tags import TAGS, TagInfo, keyword_for
+from repro.dicom.dataset import DicomDataset, new_uid
+from repro.dicom.generator import StudyGenerator, SyntheticStudy
+from repro.dicom import codec
+
+__all__ = [
+    "TAGS",
+    "TagInfo",
+    "keyword_for",
+    "DicomDataset",
+    "new_uid",
+    "StudyGenerator",
+    "SyntheticStudy",
+    "codec",
+]

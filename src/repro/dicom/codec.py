@@ -1,0 +1,231 @@
+"""JPEG-Lossless-style codec (DICOM transfer syntax 1.2.840.10008.1.2.4.70).
+
+The paper's scrub stage recompresses blanked images with the JPEG Lossless
+syntax. Real JPEG-Lossless = per-pixel predictor (selection values 1-7) +
+Huffman entropy coding. We implement the same two-phase structure:
+
+* **prediction** — vectorizable; the numpy implementation here doubles as the
+  oracle for the Pallas ``kernels/jls`` TPU kernel (prediction is pointwise on
+  shifted planes, a perfect VPU workload);
+* **entropy coding** — Golomb-Rice with per-image parameter + escape codes.
+  Entropy coding is sequential bit-packing with no TPU analogue (see
+  DESIGN.md §3); it stays on the host, exactly like the paper keeps it on CPU.
+
+Round-trips are exact (lossless) — asserted by unit + property tests.
+"""
+from __future__ import annotations
+
+import struct
+from typing import Tuple
+
+import numpy as np
+
+MAGIC = b"RJLS"
+_QMAX = 23  # unary quotient cap; larger quotients use a 32-bit escape
+
+
+# --------------------------------------------------------------- prediction
+def predict(img: np.ndarray, sv: int = 1) -> np.ndarray:
+    """Predicted plane for selection value ``sv`` (JPEG lossless T.81 Annex H).
+
+    Border convention: (0,0) predicted by 2^(P-1); row 0 by Ra (left);
+    column 0 by Rb (above). Works on any unsigned integer dtype.
+    """
+    if img.ndim != 2:
+        raise ValueError("predict expects a 2D plane")
+    bits = img.dtype.itemsize * 8
+    x = img.astype(np.int64)
+    ra = np.empty_like(x)  # left
+    rb = np.empty_like(x)  # above
+    rc = np.empty_like(x)  # above-left
+    ra[:, 1:], ra[:, 0] = x[:, :-1], 0
+    rb[1:, :], rb[0, :] = x[:-1, :], 0
+    rc[1:, 1:], rc[0, :], rc[1:, 0] = x[:-1, :-1], 0, 0
+
+    if sv == 1:
+        pred = ra
+    elif sv == 2:
+        pred = rb
+    elif sv == 3:
+        pred = rc
+    elif sv == 4:
+        pred = ra + rb - rc
+    elif sv == 5:
+        pred = ra + ((rb - rc) >> 1)
+    elif sv == 6:
+        pred = rb + ((ra - rc) >> 1)
+    elif sv == 7:
+        pred = (ra + rb) >> 1
+    else:
+        raise ValueError(f"selection value must be 1..7, got {sv}")
+
+    # border overrides (same for every sv)
+    pred[0, 1:] = ra[0, 1:]
+    pred[1:, 0] = rb[1:, 0]
+    pred[0, 0] = 1 << (bits - 1)
+    return pred
+
+
+def residuals(img: np.ndarray, sv: int = 1) -> np.ndarray:
+    """Signed modulo-2^P residuals, centered in [-2^(P-1), 2^(P-1))."""
+    bits = img.dtype.itemsize * 8
+    mask = (1 << bits) - 1
+    r = (img.astype(np.int64) - predict(img, sv)) & mask
+    r = np.where(r >= (1 << (bits - 1)), r - (1 << bits), r)
+    return r.astype(np.int32)
+
+
+def reconstruct(res: np.ndarray, sv: int, bits: int) -> np.ndarray:
+    """Invert :func:`residuals`. sv 1/2 use vectorized cumsum; others loop."""
+    mask = (1 << bits) - 1
+    r = res.astype(np.int64)
+    H, W = r.shape
+    if sv == 1:
+        # column 0 reconstructs downward, rows reconstruct left->right
+        col0 = np.cumsum(r[:, 0], axis=0) + (1 << (bits - 1))
+        rows = r.copy()
+        rows[:, 0] = col0
+        out = np.cumsum(rows, axis=1)
+        return (out & mask).astype(np.uint16 if bits > 8 else np.uint8)
+    if sv == 2:
+        row0 = np.cumsum(r[0, :], axis=0) + (1 << (bits - 1))
+        cols = r.copy()
+        cols[0, :] = row0
+        out = np.cumsum(cols, axis=0)
+        return (out & mask).astype(np.uint16 if bits > 8 else np.uint8)
+    # general (sequential) path — used only for small images in tests
+    out = np.zeros((H, W), np.int64)
+    for i in range(H):
+        for j in range(W):
+            if i == 0 and j == 0:
+                pred = 1 << (bits - 1)
+            elif i == 0:
+                pred = out[0, j - 1]
+            elif j == 0:
+                pred = out[i - 1, 0]
+            else:
+                ra, rb, rc = out[i, j - 1], out[i - 1, j], out[i - 1, j - 1]
+                pred = {3: rc, 4: ra + rb - rc, 5: ra + ((rb - rc) >> 1),
+                        6: rb + ((ra - rc) >> 1), 7: (ra + rb) >> 1}[sv]
+            out[i, j] = (pred + r[i, j]) & mask
+    return out.astype(np.uint16 if bits > 8 else np.uint8)
+
+
+# --------------------------------------------------------------- rice coding
+def _zigzag(r: np.ndarray) -> np.ndarray:
+    return ((r.astype(np.int64) << 1) ^ (r.astype(np.int64) >> 63)).astype(np.uint64)
+
+
+def _unzigzag(u: np.ndarray) -> np.ndarray:
+    u = u.astype(np.int64)
+    return (u >> 1) ^ -(u & 1)
+
+
+def _rice_k(u: np.ndarray) -> int:
+    mean = float(u.mean()) if u.size else 0.0
+    k = 0
+    while (1 << k) < mean + 1 and k < 30:
+        k += 1
+    return k
+
+
+def rice_encode(res: np.ndarray) -> Tuple[bytes, int]:
+    """Vectorized Golomb-Rice encoder. Returns (payload, k)."""
+    u = _zigzag(res.ravel())
+    k = _rice_k(u)
+    q = (u >> k).astype(np.int64)
+    rem = (u & ((1 << k) - 1)).astype(np.uint64)
+    esc = q > _QMAX
+    # bit lengths: unary(q)+stop + k remainder; escape: QMAX+1 ones + stop + 64 raw
+    lens = np.where(esc, _QMAX + 2 + 64, q + 1 + k)
+    offs = np.concatenate([[0], np.cumsum(lens)])
+    total = int(offs[-1])
+    bits = np.zeros(total, np.uint8)
+
+    # unary ones via range-marking + cumsum (vectorized run fill)
+    delta = np.zeros(total + 1, np.int32)
+    q_eff = np.where(esc, _QMAX + 1, q)
+    nz = q_eff > 0
+    np.add.at(delta, offs[:-1][nz], 1)
+    np.add.at(delta, (offs[:-1] + q_eff)[nz], -1)
+    bits[np.cumsum(delta[:-1]) > 0] = 1
+
+    # remainder bits (k small): one vectorized pass per bit position
+    if k and (~esc).any():
+        base = (offs[:-1] + q + 1)[~esc]
+        rne = rem[~esc]
+        for j in range(k):
+            bits[base + j] = (rne >> np.uint64(k - 1 - j)) & np.uint64(1)
+    # escapes: rare; raw 64-bit value after the capped unary + stop
+    for idx in np.flatnonzero(esc):
+        base = int(offs[idx]) + _QMAX + 2
+        val = int(u[idx])
+        for j in range(64):
+            bits[base + j] = (val >> (63 - j)) & 1
+    return np.packbits(bits).tobytes(), k
+
+
+def rice_decode(payload: bytes, k: int, n: int) -> np.ndarray:
+    bits = np.unpackbits(np.frombuffer(payload, np.uint8))
+    zeros = np.flatnonzero(bits == 0)
+    out = np.empty(n, np.uint64)
+    p = 0
+    zi = 0
+    for i in range(n):
+        # find first zero at/after p (the unary terminator)
+        zi = int(np.searchsorted(zeros, p))
+        zpos = int(zeros[zi])
+        q = zpos - p
+        p = zpos + 1
+        if q == _QMAX + 1:  # escape: raw 64-bit
+            val = 0
+            for j in range(64):
+                val = (val << 1) | int(bits[p + j])
+            p += 64
+            out[i] = val
+        else:
+            rem = 0
+            for j in range(k):
+                rem = (rem << 1) | int(bits[p + j])
+            p += k
+            out[i] = (q << k) | rem
+    return _unzigzag(out)
+
+
+# --------------------------------------------------------------- container
+def encode(img: np.ndarray, sv: int = 1) -> bytes:
+    """Encode a 2D unsigned-int plane. Header: magic, dims, bits, sv, k, nbytes."""
+    if img.ndim == 3:  # multi-sample: encode planes back to back
+        planes = [encode(img[..., c], sv) for c in range(img.shape[-1])]
+        return MAGIC + b"M" + struct.pack("<H", len(planes)) + b"".join(
+            struct.pack("<I", len(p)) + p for p in planes
+        )
+    bits = img.dtype.itemsize * 8
+    res = residuals(img, sv)
+    payload, k = rice_encode(res)
+    hdr = MAGIC + b"P" + struct.pack("<IIBBBI", img.shape[0], img.shape[1], bits, sv, k, len(payload))
+    return hdr + payload
+
+
+def decode(buf: bytes) -> np.ndarray:
+    if buf[:4] != MAGIC:
+        raise ValueError("not an RJLS stream")
+    kind = buf[4:5]
+    if kind == b"M":
+        (nplanes,) = struct.unpack("<H", buf[5:7])
+        off = 7
+        planes = []
+        for _ in range(nplanes):
+            (ln,) = struct.unpack("<I", buf[off : off + 4])
+            off += 4
+            planes.append(decode(buf[off : off + ln]))
+            off += ln
+        return np.stack(planes, axis=-1)
+    H, W, bits, sv, k, nbytes = struct.unpack("<IIBBBI", buf[5:20])
+    payload = buf[20 : 20 + nbytes]
+    res = rice_decode(payload, k, H * W).reshape(H, W).astype(np.int32)
+    return reconstruct(res, sv, bits)
+
+
+def compression_ratio(img: np.ndarray, sv: int = 1) -> float:
+    return img.nbytes / max(1, len(encode(img, sv)))

@@ -1,0 +1,23 @@
+# Data-plane distribution: shard_map scrub farm over device meshes, elastic
+# pool resizing driven by the autoscaler, and gradient compression for the
+# training plane.
+from repro.distributed.scrub_farm import ScrubFarm, bucket_by_resolution
+from repro.distributed.elastic import ElasticFarmController
+from repro.distributed.compression import (
+    int8_compress,
+    int8_decompress,
+    topk_compress,
+    topk_decompress,
+    CompressionState,
+)
+
+__all__ = [
+    "ScrubFarm",
+    "bucket_by_resolution",
+    "ElasticFarmController",
+    "int8_compress",
+    "int8_decompress",
+    "topk_compress",
+    "topk_decompress",
+    "CompressionState",
+]

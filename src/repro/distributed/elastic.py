@@ -1,0 +1,80 @@
+"""Elastic farm controller: autoscaler targets -> device-mesh rebuilds.
+
+The paper's pool adds/deletes VM instances with queue depth. A TPU farm
+cannot conjure chips, but it can (a) resize the *active* sub-mesh it
+dispatches to, releasing slices back to the scheduler, and (b) survive device
+loss by re-meshing around failed hardware. Both are modeled here against the
+host device pool; the same controller drives real slices in production.
+
+Failure model: ``mark_failed(device_index)`` removes a device from the pool
+(as a health-check would), triggering a rebuild at the next reconcile. The
+in-flight batch on a failed device is lost — which is safe end to end,
+because the queue lease for that work expires and redelivers (tested in
+tests/test_distributed.py::test_device_failure_recovery).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import jax
+
+from repro.distributed.scrub_farm import ScrubFarm
+from repro.utils.logging import get_logger
+
+log = get_logger("distributed.elastic")
+
+
+@dataclass
+class MeshEvent:
+    t: float
+    kind: str  # "resize" | "device-failure"
+    size: int
+    detail: str = ""
+
+
+class ElasticFarmController:
+    def __init__(self, devices: Optional[List[jax.Device]] = None, clock=None) -> None:
+        self.pool: List[jax.Device] = list(devices) if devices is not None else list(jax.devices())
+        self.healthy: List[bool] = [True] * len(self.pool)
+        self.clock = clock
+        self.events: List[MeshEvent] = []
+        self.active = 0
+        self.farm: Optional[ScrubFarm] = None
+        self.rebuilds = 0
+
+    def _now(self) -> float:
+        return self.clock.now() if self.clock else 0.0
+
+    def healthy_devices(self) -> List[jax.Device]:
+        return [d for d, ok in zip(self.pool, self.healthy) if ok]
+
+    def mark_failed(self, device_index: int) -> None:
+        if self.healthy[device_index]:
+            self.healthy[device_index] = False
+            self.events.append(MeshEvent(self._now(), "device-failure", device_index))
+            if self.farm is not None and self.active > len(self.healthy_devices()):
+                # the active mesh includes the dead device: force re-mesh
+                self.reconcile(self.active)
+
+    def reconcile(self, target_workers: int) -> ScrubFarm:
+        """Resize the active mesh to min(target, healthy). Returns the farm."""
+        avail = self.healthy_devices()
+        if not avail:
+            # total pool loss: keep the last farm handle and surface an alert —
+            # in production this pages the operator; work stays queued (leases
+            # simply expire and redeliver when capacity returns)
+            self.events.append(MeshEvent(self._now(), "alert", 0, "no healthy devices"))
+            if self.farm is None:
+                self.farm = ScrubFarm(self.pool[:1])
+            return self.farm
+        size = max(1, min(target_workers, len(avail)))
+        if self.farm is None or size != self.active or any(
+            d not in avail for d in self.farm.mesh.devices.flat
+        ):
+            self.farm = ScrubFarm(avail[:size])
+            self.active = size
+            self.rebuilds += 1
+            self.events.append(MeshEvent(self._now(), "resize", size))
+            log.debug("re-meshed farm to %d workers", size)
+        return self.farm

@@ -1,0 +1,6 @@
+# Pallas TPU kernels for the de-identification compute hot-spots.
+#   scrub      — batched PHI rectangle blanking (the paper's scrub stage)
+#   phi_detect — burned-in-text detector (paper Future Work: OCR/ML, TPU-adapted)
+#   jls        — JPEG-Lossless predictor residuals (TPU half of the codec)
+# Each kernel ships <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+# wrapper with CPU interpret fallback) and ref.py (pure-jnp oracle).

@@ -1,0 +1,85 @@
+"""Pallas TPU kernel: JPEG-Lossless predictor residuals.
+
+The TPU half of the paper's "recompress with JPEG Lossless" step
+(DESIGN.md §3): prediction is pointwise over shifted planes — ideal VPU work —
+while the sequential entropy coder stays on the host.
+
+Blocking: full-width row stripes (1, bh, W). Left/above-left neighbors are
+in-block shifts along W (full row present); the above-neighbor of a stripe's
+first row lives in the *previous* stripe, so the wrapper passes a second input
+``above`` = image shifted down one row, read with the same BlockSpec. That
+costs one extra HBM read of the first row per stripe on TPU (negligible for
+bh>=64) and keeps the kernel halo-free.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _jls_kernel(img_ref, above_ref, out_ref, *, sv: int, bits: int, bh: int, W: int):
+    i = pl.program_id(1)
+    x = img_ref[0].astype(jnp.int32)      # (bh, W)
+    rb = above_ref[0].astype(jnp.int32)   # x shifted down by one row
+
+    zeros_col = jnp.zeros((bh, 1), jnp.int32)
+    ra = jnp.concatenate([zeros_col, x[:, :-1]], axis=1)
+    rc = jnp.concatenate([zeros_col, rb[:, :-1]], axis=1)
+
+    if sv == 1:
+        pred = ra
+    elif sv == 2:
+        pred = rb
+    elif sv == 3:
+        pred = rc
+    elif sv == 4:
+        pred = ra + rb - rc
+    elif sv == 5:
+        pred = ra + ((rb - rc) >> 1)
+    elif sv == 6:
+        pred = rb + ((ra - rc) >> 1)
+    elif sv == 7:
+        pred = (ra + rb) >> 1
+    else:
+        raise ValueError(sv)
+
+    rows = jax.lax.broadcasted_iota(jnp.int32, (bh, W), 0) + i * bh
+    cols = jax.lax.broadcasted_iota(jnp.int32, (bh, W), 1)
+    pred = jnp.where((rows == 0) & (cols > 0), ra, pred)
+    pred = jnp.where((rows > 0) & (cols == 0), rb, pred)
+    pred = jnp.where((rows == 0) & (cols == 0), 1 << (bits - 1), pred)
+
+    mask = (1 << bits) - 1
+    r = (x - pred) & mask
+    r = jnp.where(r >= (1 << (bits - 1)), r - (1 << bits), r)
+    out_ref[0] = r
+
+
+def jls_residuals_pallas(
+    images: jnp.ndarray,
+    above: jnp.ndarray,
+    *,
+    sv: int,
+    bits: int,
+    bh: int = 64,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """images, above: (N, H, W) with H % bh == 0. Returns int32 residuals."""
+    N, H, W = images.shape
+    assert H % bh == 0, (images.shape, bh)
+    grid = (N, H // bh)
+    kernel = functools.partial(_jls_kernel, sv=sv, bits=bits, bh=bh, W=W)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bh, W), lambda n, i: (n, i, 0)),
+            pl.BlockSpec((1, bh, W), lambda n, i: (n, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bh, W), lambda n, i: (n, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, H, W), jnp.int32),
+        interpret=interpret,
+    )(images, above)

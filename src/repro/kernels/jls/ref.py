@@ -1,0 +1,47 @@
+"""Pure-jnp oracle for the JPEG-Lossless predictor kernel.
+
+Must agree bit-exactly with the host codec (`repro.dicom.codec.residuals`) —
+a cross-check test asserts jnp-oracle == numpy-codec == pallas-kernel.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def residuals_ref(images: jnp.ndarray, sv: int, bits: int) -> jnp.ndarray:
+    """Batched signed modulo-2^bits predictor residuals. images: (N, H, W)."""
+    x = images.astype(jnp.int32)
+    N, H, W = x.shape
+    zeros_col = jnp.zeros((N, H, 1), jnp.int32)
+    zeros_row = jnp.zeros((N, 1, W), jnp.int32)
+    ra = jnp.concatenate([zeros_col, x[:, :, :-1]], axis=2)   # left
+    rb = jnp.concatenate([zeros_row, x[:, :-1, :]], axis=1)   # above
+    rc = jnp.concatenate([zeros_row, ra[:, :-1, :]], axis=1)  # above-left
+
+    if sv == 1:
+        pred = ra
+    elif sv == 2:
+        pred = rb
+    elif sv == 3:
+        pred = rc
+    elif sv == 4:
+        pred = ra + rb - rc
+    elif sv == 5:
+        pred = ra + ((rb - rc) >> 1)
+    elif sv == 6:
+        pred = rb + ((ra - rc) >> 1)
+    elif sv == 7:
+        pred = (ra + rb) >> 1
+    else:
+        raise ValueError(f"selection value must be 1..7, got {sv}")
+
+    rows = jnp.arange(H)[None, :, None]
+    cols = jnp.arange(W)[None, None, :]
+    pred = jnp.where((rows == 0) & (cols > 0), ra, pred)   # row 0: left
+    pred = jnp.where((rows > 0) & (cols == 0), rb, pred)   # col 0: above
+    pred = jnp.where((rows == 0) & (cols == 0), 1 << (bits - 1), pred)
+
+    mask = (1 << bits) - 1
+    r = (x - pred) & mask
+    r = jnp.where(r >= (1 << (bits - 1)), r - (1 << bits), r)
+    return r.astype(jnp.int32)

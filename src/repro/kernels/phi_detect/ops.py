@@ -1,0 +1,58 @@
+"""Jit'd wrapper for the PHI text detector."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.phi_detect.phi_detect import phi_detect_pallas
+
+# Default gradient threshold: burned-in glyph strokes are max-contrast
+# (value jumps of >50% full scale every ~3 px); anatomy gradients are smooth.
+DEFAULT_THRESH_FRAC = 0.25  # fraction of dtype max
+DEFAULT_TAU = 0.08          # tile flagged if >=8% of pixels are strong edges
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("thresh", "tile", "interpret"))
+def _detect(images, thresh, tile, interpret):
+    return phi_detect_pallas(images, thresh=thresh, tile=tile, interpret=interpret)
+
+
+def edge_density(
+    images: jnp.ndarray,
+    *,
+    thresh: float | None = None,
+    tile: tuple[int, int] = (32, 128),
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Per-tile strong-edge density for a batch of images (N, H, W)."""
+    if interpret is None:
+        interpret = _on_cpu()
+    images = jnp.asarray(images)
+    if thresh is None:
+        maxv = 255.0 if images.dtype == jnp.uint8 else 4095.0
+        thresh = maxv * DEFAULT_THRESH_FRAC
+    N, H, W = images.shape
+    th, tw = tile
+    Hp, Wp = (H + th - 1) // th * th, (W + tw - 1) // tw * tw
+    if (Hp, Wp) != (H, W):
+        images = jnp.pad(images, ((0, 0), (0, Hp - H), (0, Wp - W)))
+    return _detect(images, float(thresh), (th, tw), interpret)
+
+
+def suspicious_tiles(images, *, tau: float = DEFAULT_TAU, **kw) -> np.ndarray:
+    """Boolean heat map of tiles likely to contain burned-in text."""
+    return np.asarray(edge_density(images, **kw) >= tau)
+
+
+def audit_image(pixels: np.ndarray, *, tile=(32, 128), tau: float = DEFAULT_TAU) -> bool:
+    """True if any tile of a single image looks like burned-in text.
+    Used by the pipeline audit path (DESIGN.md §3) on *post-scrub* images:
+    a True here means a scrub rule missed a region."""
+    return bool(suspicious_tiles(jnp.asarray(pixels)[None], tau=tau, tile=tile).any())

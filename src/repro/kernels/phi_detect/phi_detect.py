@@ -1,0 +1,52 @@
+"""Pallas TPU kernel: burned-in-annotation (PHI text) detector.
+
+TPU-native first step of the paper's Future-Work "OCR and other machine
+learning approaches to improve image de-identification": a tiled
+edge-density reduction producing a per-tile text-likelihood heat map. Used to
+audit whitelist coverage (route images whose *unscrubbed* tiles light up to
+the filter) — the machine-checkable analogue of the paper's human review.
+
+Kernel shape: grid (N, H/th, W/tw); each program reduces one (th, tw) VMEM
+tile to one scalar density. This is a pure streaming reduction — reads each
+pixel exactly once, writes H/th * W/tw floats — so, like scrub, it runs at
+HBM bandwidth. The gradient is tile-local (no halo), which the oracle mirrors
+exactly; detection quality is insensitive to losing one boundary column per
+tile (text banners are hundreds of pixels wide).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _phi_kernel(img_ref, out_ref, *, thresh: float, th: int, tw: int):
+    tile = img_ref[0].astype(jnp.float32)  # (th, tw)
+    grad = jnp.abs(tile[:, 1:] - tile[:, :-1])
+    hits = jnp.sum((grad >= thresh).astype(jnp.float32))
+    out_ref[0, 0, 0] = hits / float(th * tw)
+
+
+def phi_detect_pallas(
+    images: jnp.ndarray,
+    *,
+    thresh: float,
+    tile: tuple[int, int] = (32, 128),
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """images: (N, H, W), tile-aligned. Returns (N, H/th, W/tw) f32 densities."""
+    N, H, W = images.shape
+    th, tw = tile
+    assert H % th == 0 and W % tw == 0, (images.shape, tile)
+    grid = (N, H // th, W // tw)
+    kernel = functools.partial(_phi_kernel, thresh=thresh, th=th, tw=tw)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, th, tw), lambda n, i, j: (n, i, j))],
+        out_specs=pl.BlockSpec((1, 1, 1), lambda n, i, j: (n, i, j)),
+        out_shape=jax.ShapeDtypeStruct((N, H // th, W // tw), jnp.float32),
+        interpret=interpret,
+    )(images)

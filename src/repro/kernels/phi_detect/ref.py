@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the burned-in-text detector.
+
+Semantics (tile-local by construction, so kernel and oracle agree exactly):
+the image is partitioned into (th, tw) tiles; within each tile we count
+strong horizontal gradients — |x[i, j+1] - x[i, j]| >= thresh, computed only
+for in-tile neighbor pairs — and return the count normalized by tile area.
+Burned-in text is a dense field of vertical strokes, so its edge density is
+an order of magnitude above anatomy (see tests for separation margins).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def edge_density_ref(images: jnp.ndarray, thresh: float, tile: tuple[int, int]) -> jnp.ndarray:
+    """images: (N, H, W); returns (N, H/th, W/tw) float32 densities in [0, 1]."""
+    N, H, W = images.shape
+    th, tw = tile
+    assert H % th == 0 and W % tw == 0, (images.shape, tile)
+    x = images.astype(jnp.float32)
+    t = x.reshape(N, H // th, th, W // tw, tw)  # tile-local view
+    grad = jnp.abs(t[..., 1:] - t[..., :-1])    # in-tile horizontal gradient
+    hits = (grad >= thresh).sum(axis=(2, 4))
+    return (hits / float(th * tw)).astype(jnp.float32)
+
+
+def phi_flags_ref(images: jnp.ndarray, thresh: float, tile: tuple[int, int], tau: float) -> jnp.ndarray:
+    return edge_density_ref(images, thresh, tile) >= tau

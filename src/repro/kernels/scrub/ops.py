@@ -1,0 +1,81 @@
+"""Jit'd public wrapper for the scrub kernel.
+
+Pads images to tile-aligned shapes, dispatches to the Pallas kernel (interpret
+mode on CPU, compiled on TPU), crops back, and offers a convenience adapter
+matching the ``ScrubStage`` ``blank_fn`` protocol.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.scrub.scrub import scrub_pallas
+
+_SUBLANE = {1: 32, 2: 16, 4: 8, 8: 8}  # dtype itemsize -> min sublane tile
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def default_block(dtype: jnp.dtype, H: int, W: int) -> tuple[int, int]:
+    """Pick a VMEM-friendly tile: lane dim multiple of 128, sublane dim a
+    multiple of the dtype tile, working set well under VMEM (~16 MB/core)."""
+    sub = _SUBLANE[jnp.dtype(dtype).itemsize]
+    bw = 128 if W <= 128 else min(512, (W + 127) // 128 * 128 if W < 512 else 512)
+    bh = max(sub, min(256, (H + sub - 1) // sub * sub if H < 256 else 256))
+    return bh, bw
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def _scrub_padded(images, rects, block, interpret):
+    return scrub_pallas(images, rects, block=block, interpret=interpret)
+
+
+def scrub_images(
+    images: jnp.ndarray,
+    rects: jnp.ndarray,
+    *,
+    block: tuple[int, int] | None = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Blank rectangles on a batch of images.
+
+    images: (N, H, W); rects: (N, R, 4) int32 (x, y, w, h); padding rects have
+    w<=0/h<=0. Returns same shape/dtype.
+    """
+    if interpret is None:
+        interpret = _on_cpu()
+    images = jnp.asarray(images)
+    rects = jnp.asarray(rects, jnp.int32)
+    N, H, W = images.shape
+    bh, bw = block or default_block(images.dtype, H, W)
+    Hp = (H + bh - 1) // bh * bh
+    Wp = (W + bw - 1) // bw * bw
+    padded = images
+    if (Hp, Wp) != (H, W):
+        padded = jnp.pad(images, ((0, 0), (0, Hp - H), (0, Wp - W)))
+    out = _scrub_padded(padded, rects, (bh, bw), interpret)
+    return out[:, :H, :W]
+
+
+def pack_rects(rect_lists: Sequence[Sequence[tuple[int, int, int, int]]], R: int | None = None) -> np.ndarray:
+    """Pack ragged per-image rect lists into a (N, R, 4) int32 array."""
+    R = R or max((len(r) for r in rect_lists), default=1) or 1
+    out = np.zeros((len(rect_lists), R, 4), np.int32)
+    for i, rl in enumerate(rect_lists):
+        for j, rect in enumerate(rl[:R]):
+            out[i, j] = rect
+    return out
+
+
+def blank_fn(pixels: np.ndarray, rects) -> np.ndarray:
+    """Adapter matching ``repro.core.scrub.ScrubStage(blank_fn=...)``:
+    single-image host entry point backed by the Pallas kernel."""
+    img = jnp.asarray(pixels)[None]
+    packed = pack_rects([list(rects)])
+    return np.asarray(scrub_images(img, packed)[0])

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the scrub kernel.
+
+Semantics: for each image n, every rectangle (x, y, w, h) in ``rects[n]`` is
+blanked to 0. Rectangles with w<=0 or h<=0 are padding no-ops (rect lists are
+ragged per device; callers pad to a fixed R).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def scrub_ref(images: jnp.ndarray, rects: jnp.ndarray) -> jnp.ndarray:
+    """images: (N, H, W) any integer/float dtype; rects: (N, R, 4) int32 x,y,w,h."""
+    N, H, W = images.shape
+    rows = jnp.arange(H, dtype=jnp.int32)[:, None]  # (H, 1)
+    cols = jnp.arange(W, dtype=jnp.int32)[None, :]  # (1, W)
+    x = rects[..., 0][:, :, None, None]  # (N, R, 1, 1)
+    y = rects[..., 1][:, :, None, None]
+    w = rects[..., 2][:, :, None, None]
+    h = rects[..., 3][:, :, None, None]
+    inside = (
+        (cols[None, None] >= x)
+        & (cols[None, None] < x + w)
+        & (rows[None, None] >= y)
+        & (rows[None, None] < y + h)
+        & (w > 0)
+        & (h > 0)
+    )  # (N, R, H, W)
+    mask = jnp.any(inside, axis=1)  # (N, H, W)
+    return jnp.where(mask, jnp.zeros((), images.dtype), images)

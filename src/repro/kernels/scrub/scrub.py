@@ -1,0 +1,76 @@
+"""Pallas TPU kernel: batched PHI rectangle blanking.
+
+TPU adaptation of the paper's scrub stage (DESIGN.md §3). The stage is
+bandwidth-bound (read pixel, maybe zero it, write pixel), so the kernel's job
+is to stream HBM->VMEM->HBM at full rate while folding the rectangle test into
+the VPU pipeline:
+
+* grid = (N, H/bh, W/bw); each program owns one (bh, bw) VMEM tile of one
+  image. bw is a multiple of 128 (VPU lane width); bh a multiple of the
+  dtype's sublane tile (32 for 8-bit, 16 for 16-bit, 8 for f32).
+* the per-image rectangle list (R, 4) rides in VMEM with the tile; the
+  coverage mask is built with ``broadcasted_iota`` + compares, unrolled over R
+  (R is small and static — devices stamp a handful of banners).
+* out-of-image padding (H, W not tile-aligned) is handled by the wrapper in
+  ops.py, keeping the kernel branch-free.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _scrub_kernel(rects_ref, img_ref, out_ref, *, bh: int, bw: int, n_rects: int):
+    i = pl.program_id(1)  # tile row index
+    j = pl.program_id(2)  # tile col index
+    tile = img_ref[0]  # (bh, bw)
+
+    # global pixel coordinates of this tile
+    row0 = i * bh
+    col0 = j * bw
+    rows = jax.lax.broadcasted_iota(jnp.int32, (bh, bw), 0) + row0
+    cols = jax.lax.broadcasted_iota(jnp.int32, (bh, bw), 1) + col0
+
+    mask = jnp.zeros((bh, bw), jnp.bool_)
+    for r in range(n_rects):  # static unroll: R is tiny (<=4 per device)
+        x = rects_ref[0, r, 0]
+        y = rects_ref[0, r, 1]
+        w = rects_ref[0, r, 2]
+        h = rects_ref[0, r, 3]
+        hit = (cols >= x) & (cols < x + w) & (rows >= y) & (rows < y + h)
+        hit &= (w > 0) & (h > 0)
+        mask |= hit
+
+    out_ref[0] = jnp.where(mask, jnp.zeros((), tile.dtype), tile)
+
+
+def scrub_pallas(
+    images: jnp.ndarray,
+    rects: jnp.ndarray,
+    *,
+    block: tuple[int, int] = (256, 256),
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """images: (N, H, W) with H % bh == 0 and W % bw == 0; rects: (N, R, 4)."""
+    N, H, W = images.shape
+    bh, bw = block
+    assert H % bh == 0 and W % bw == 0, (images.shape, block)
+    n_rects = rects.shape[1]
+    grid = (N, H // bh, W // bw)
+
+    kernel = functools.partial(_scrub_kernel, bh=bh, bw=bw, n_rects=n_rects)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            # whole rect list for image n, broadcast over the tile grid
+            pl.BlockSpec((1, n_rects, 4), lambda n, i, j: (n, 0, 0)),
+            pl.BlockSpec((1, bh, bw), lambda n, i, j: (n, i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bh, bw), lambda n, i, j: (n, i, j)),
+        out_shape=jax.ShapeDtypeStruct(images.shape, images.dtype),
+        interpret=interpret,
+    )(rects, images)

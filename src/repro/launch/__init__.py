@@ -1,0 +1,2 @@
+# Launch layer: production meshes, sharding rules, the multi-pod dry-run,
+# and the train/serve/deid-service entry points.

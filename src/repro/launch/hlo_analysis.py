@@ -1,0 +1,383 @@
+"""Static, while-loop-aware HLO cost analyzer.
+
+``compiled.cost_analysis()`` counts a ``lax.scan``/``while`` body ONCE
+regardless of trip count, which silently drops O(layers x attention-chunks)
+of the real cost on scan-over-layers programs. This analyzer parses the
+partitioned HLO text into computations, builds per-computation symbol tables
+(operand types are not inline in modern HLO), extracts every while loop's
+trip count from its condition constants, and aggregates bottom-up:
+
+  * flops       — 2 x |out| x |contraction| for dot/convolution ops;
+  * hbm bytes   — output + operand tensor bytes of compute ops (fusions count
+                  their boundary tensors — the fused-kernel traffic model;
+                  control flow, tuples and parameters are skipped);
+  * collectives — operand bytes per kind + cross-pod attribution;
+
+each multiplied by the product of enclosing while trip counts. Validated
+against 6ND model FLOPs in tests/test_dryrun.py.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
+_OPNAME_RE = re.compile(r"^\s*([a-z][\w\-]*)\(")
+
+
+def _opname(rhs: str) -> Optional[str]:
+    """Op name after the result type. The type is either 'dtype[dims]{layout}'
+    or a (possibly /*indexed*/-commented, nested) tuple '(...)'."""
+    s = rhs.lstrip()
+    if s.startswith("("):
+        depth = 0
+        for i, ch in enumerate(s):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    s = s[i + 1 :]
+                    break
+        else:
+            return None
+    else:
+        m = re.match(r"^[a-z0-9]+\[[0-9,]*\](\{[^}]*\})?", s)
+        if m:
+            s = s[m.end() :]
+    m = _OPNAME_RE.match(s)
+    return m.group(1) if m else None
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
+_BYTE_SKIP = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast", "while",
+    "conditional", "after-all", "partition-id", "replica-id", "iota", "call",
+    "broadcast", "reshape", "transpose",  # layout ops usually fuse away
+    # dtype converts: native on the TPU target (bf16 MXU inputs) / fused into
+    # neighbors — the CPU backend materializes them, which is backend noise
+    "convert",
+}
+
+
+def _dims(s: str) -> List[int]:
+    return [int(x) for x in s.split(",")] if s else []
+
+
+def _nbytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in _dims(dims):
+        n *= d
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclass
+class Computation:
+    name: str
+    lines: List[str] = field(default_factory=list)
+    symbols: Dict[str, Tuple[str, str]] = field(default_factory=dict)  # name -> (dtype, dims)
+
+
+def split_computations(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in hlo.splitlines():
+        s = raw.strip()
+        if cur is None:
+            m = re.match(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.*\{$", s)
+            if m:
+                cur = Computation(m.group(1))
+            continue
+        if s == "}" or s.startswith("} "):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        cur.lines.append(s)
+        dm = _DEF_RE.match(s)
+        if dm:
+            first_shape = _SHAPE_RE.search(dm.group(2))
+            if first_shape and not dm.group(2).lstrip().startswith("("):
+                cur.symbols[dm.group(1)] = (first_shape.group(1), first_shape.group(2))
+    return comps
+
+
+def _operand_names(rhs: str, opname: str) -> List[str]:
+    try:
+        inner = rhs.split(f"{opname}(", 1)[1]
+    except IndexError:
+        return []
+    depth, out, cur = 1, [], []
+    for ch in inner:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        if depth >= 1:
+            cur.append(ch)
+    args = "".join(cur)
+    return re.findall(r"%([\w\.\-]+)", args)
+
+
+def _group_spans_pods(line: str) -> bool:
+    gm = re.search(r"replica_groups=\{\{([0-9,]+)\}", line)
+    if gm:
+        ids = [int(x) for x in gm.group(1).split(",")]
+        return min(ids) < 256 <= max(ids)
+    gi = re.search(r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\](?:T\(([0-9,]+)\))?", line)
+    if gi:
+        G, N = int(gi.group(1)), int(gi.group(2))
+        dims = [int(x) for x in gi.group(3).split(",")]
+        total = int(np.prod(dims))
+        if total <= 256:
+            return False
+        arr = np.arange(total).reshape(dims)
+        if gi.group(4):
+            arr = arr.transpose([int(x) for x in gi.group(4).split(",")])
+        groups = arr.reshape(G, N)
+        return bool(((groups.min(1) < 256) & (groups.max(1) >= 256)).any())
+    return False
+
+
+@dataclass
+class CompCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, float] = field(default_factory=dict)
+    coll_cross: float = 0.0
+    whiles: List[Tuple[str, str]] = field(default_factory=list)   # (body, cond)
+    fusion_calls: List[str] = field(default_factory=list)
+    plain_calls: List[str] = field(default_factory=list)
+
+
+def _fusion_root_op(callee: Optional["Computation"]) -> Optional[str]:
+    if callee is None:
+        return None
+    for line in reversed(callee.lines):
+        if line.startswith("ROOT "):
+            dm = _DEF_RE.match(line)
+            if dm:
+                return _opname(dm.group(2))
+    return None
+
+
+def analyze_computation(comp: Computation, all_comps: Optional[Dict[str, "Computation"]] = None) -> CompCost:
+    cost = CompCost()
+    sym = comp.symbols
+    for line in comp.lines:
+        dm = _DEF_RE.match(line)
+        if not dm:
+            continue
+        rhs = dm.group(2)
+        opname = _opname(rhs)
+        if opname is None:
+            continue
+
+        if opname == "while":
+            bm = re.search(r"body=%?([\w\.\-]+)", line)
+            cm = re.search(r"condition=%?([\w\.\-]+)", line)
+            if bm and cm:
+                cost.whiles.append((bm.group(1), cm.group(1)))
+            continue
+        if opname in ("call", "conditional"):
+            for m in re.finditer(r"(?:to_apply|branch_computations=\{|calls=\{?)%?([\w\.\-]+)", line):
+                cost.plain_calls.append(m.group(1))
+            continue
+
+        kind = next((k for k in _COLL_KINDS if opname.startswith(k)), None)
+        if kind:
+            b = 0
+            for op in _operand_names(rhs, opname):
+                if op in sym:
+                    b += _nbytes(*sym[op])
+            if b == 0:
+                fs = _SHAPE_RE.search(rhs)
+                b = _nbytes(fs.group(1), fs.group(2)) if fs else 0
+            cost.coll[kind] = cost.coll.get(kind, 0) + b
+            if _group_spans_pods(line):
+                cost.coll_cross += b
+            continue
+
+        if opname in ("dot", "convolution"):
+            out_m = _SHAPE_RE.search(rhs)
+            out_elems = 1
+            for d in _dims(out_m.group(2)) if out_m else []:
+                out_elems *= d
+            ops = _operand_names(rhs, opname)
+            contract = 1
+            if opname == "dot":
+                cm2 = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+                if cm2 and ops and ops[0] in sym:
+                    lhs_dims = _dims(sym[ops[0]][1])
+                    for idx in _dims(cm2.group(1)):
+                        if idx < len(lhs_dims):
+                            contract *= lhs_dims[idx]
+            else:  # convolution: contraction ~ kernel elems / out features
+                if len(ops) > 1 and ops[1] in sym:
+                    kd = _dims(sym[ops[1]][1])
+                    contract = int(np.prod(kd[:-1])) if kd else 1
+            cost.flops += 2.0 * out_elems * contract
+
+        fusion_root = None
+        if opname == "fusion":
+            fm = re.search(r"calls=%?([\w\.\-]+)", line)
+            if fm:
+                cost.fusion_calls.append(fm.group(1))
+                if all_comps is not None:
+                    fusion_root = _fusion_root_op(all_comps.get(fm.group(1)))
+
+        if opname not in _BYTE_SKIP:
+            b = 0
+            out_m = _SHAPE_RE.search(rhs)
+            out_b = _nbytes(out_m.group(1), out_m.group(2)) if out_m else 0
+            if fusion_root == "dynamic-update-slice":
+                # in-place cache writeback wrapped in a fusion: traffic is the
+                # updated slice, not the whole (layers-stacked) buffer — the
+                # slice is the smallest non-buffer operand
+                ops = _operand_names(rhs, opname)
+                sizes = sorted(
+                    _nbytes(*sym[o]) for o in ops if o in sym and _nbytes(*sym[o]) < out_b
+                )
+                b = 2 * (sizes[0] if sizes else out_b)
+                cost.bytes += b
+                continue
+            if opname == "dynamic-slice":
+                # reads only the slice (= the output), not the whole operand
+                b = 2 * out_b
+            elif opname == "dynamic-update-slice":
+                # in-place on the donated buffer: traffic = the update slice
+                ops = _operand_names(rhs, opname)
+                upd = _nbytes(*sym[ops[1]]) if len(ops) > 1 and ops[1] in sym else 0
+                b = 2 * upd
+            else:
+                b = out_b
+                for op in _operand_names(rhs, opname):
+                    if op in sym:
+                        b += _nbytes(*sym[op])
+            cost.bytes += b
+    return cost
+
+
+def _trip_count(cond: Computation) -> int:
+    best = 1
+    for line in cond.lines:
+        for m in re.finditer(r"constant\((\d+)\)", line):
+            v = int(m.group(1))
+            if 1 < v <= 10_000_000:
+                best = max(best, v)
+    return best
+
+
+def analyze_hlo(hlo: str, entry_hint: str = "main") -> Dict[str, object]:
+    comps = split_computations(hlo)
+    costs = {name: analyze_computation(c, comps) for name, c in comps.items()}
+
+    entry = next((n for n in comps if n.startswith(entry_hint)), None)
+    if entry is None and comps:
+        entry = max(comps, key=lambda n: len(comps[n].lines))
+
+    memo: Dict[str, Dict[str, object]] = {}
+
+    def total(name: str, depth: int = 0) -> Dict[str, object]:
+        if name in memo:
+            return memo[name]
+        zero = {"flops": 0.0, "bytes": 0.0, "coll": {}, "coll_cross": 0.0}
+        if name not in costs or depth > 60:
+            return zero
+        c = costs[name]
+        agg = {"flops": c.flops, "bytes": c.bytes, "coll": dict(c.coll), "coll_cross": c.coll_cross}
+
+        def absorb(sub: Dict[str, object], mult: float, with_bytes: bool) -> None:
+            agg["flops"] += mult * sub["flops"]
+            if with_bytes:
+                agg["bytes"] += mult * sub["bytes"]
+            agg["coll_cross"] += mult * sub["coll_cross"]
+            for k, v in sub["coll"].items():
+                agg["coll"][k] = agg["coll"].get(k, 0) + mult * v
+
+        for body, cond in c.whiles:
+            trip = _trip_count(comps[cond]) if cond in comps else 1
+            absorb(total(body, depth + 1), trip, with_bytes=True)
+        for callee in c.plain_calls:
+            absorb(total(callee, depth + 1), 1, with_bytes=True)
+        for callee in c.fusion_calls:
+            # fusion boundary bytes were counted at the call site; inner ops
+            # contribute flops/collectives only
+            absorb(total(callee, depth + 1), 1, with_bytes=False)
+        memo[name] = agg
+        return agg
+
+    out = dict(total(entry)) if entry else {"flops": 0.0, "bytes": 0.0, "coll": {}, "coll_cross": 0.0}
+    out["coll_total"] = float(sum(out["coll"].values()))
+    out["coll_intra"] = out["coll_total"] - out["coll_cross"]
+    out["entry"] = entry
+    out["n_computations"] = len(comps)
+    return out
+
+
+def top_collectives(hlo: str, n: int = 12, entry_hint: str = "main") -> List[Tuple[float, str, str, int, int]]:
+    """Largest collective contributors with trip multipliers applied:
+    [(total_bytes, kind, shape, per_op_bytes, trip_multiplier), ...].
+    The §Perf hypothesis loop reads this to find what to kill first."""
+    comps = split_computations(hlo)
+    entry = next((c for c in comps if c.startswith(entry_hint)), None)
+    if entry is None and comps:
+        entry = max(comps, key=lambda c: len(comps[c].lines))
+
+    # trip multiplier per computation = product of enclosing while trips
+    mult: Dict[str, int] = {entry: 1}
+    frontier = [entry]
+    seen = set()
+    while frontier:
+        name = frontier.pop()
+        if name in seen or name not in comps:
+            continue
+        seen.add(name)
+        c = analyze_computation(comps[name])
+        m = mult.get(name, 1)
+        for body, cond in c.whiles:
+            trip = _trip_count(comps[cond]) if cond in comps else 1
+            mult[body] = max(mult.get(body, 0), m * trip)
+            frontier.append(body)
+        for callee in c.plain_calls + c.fusion_calls:
+            mult[callee] = max(mult.get(callee, 0), m)
+            frontier.append(callee)
+
+    rows: Dict[Tuple[str, str], List[float]] = {}
+    for name, m in mult.items():
+        comp = comps.get(name)
+        if comp is None:
+            continue
+        for line in comp.lines:
+            dm = _DEF_RE.match(line)
+            if not dm:
+                continue
+            rhs = dm.group(2)
+            op = _opname(rhs)
+            kind = next((k for k in _COLL_KINDS if op and op.startswith(k)), None)
+            if not kind:
+                continue
+            b = 0
+            for o in _operand_names(rhs, op):
+                if o in comp.symbols:
+                    b += _nbytes(*comp.symbols[o])
+            fs = _SHAPE_RE.search(rhs)
+            shape = f"{fs.group(1)}[{fs.group(2)}]" if fs else "?"
+            if b == 0 and fs:
+                b = _nbytes(fs.group(1), fs.group(2))
+            key = (kind, shape)
+            cur = rows.setdefault(key, [0.0, 0, 0])
+            cur[0] += b * m
+            cur[1] = b
+            cur[2] = max(cur[2], m)
+    out = [(v[0], k[0], k[1], int(v[1]), int(v[2])) for k, v in rows.items()]
+    return sorted(out, reverse=True)[:n]

@@ -1,0 +1,7 @@
+"""TPU v5e hardware constants for the roofline model (deliverable g)."""
+
+PEAK_FLOPS_BF16 = 197e12   # per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link (intra-pod)
+DCI_BW = 25e9              # bytes/s per chip across pods (data-center interconnect)
+HBM_PER_CHIP = 16e9        # v5e HBM capacity

@@ -1,0 +1,36 @@
+"""Production meshes (deliverable e).
+
+A function, not a module-level constant, so importing this module never
+touches jax device state (required: tests/benches must keep seeing exactly
+one real device; only dryrun.py forces 512 host devices).
+
+Topology (TPU v5e target):
+  single-pod: (data=16, model=16)       = 256 chips (one v5e pod)
+  multi-pod:  (pod=2, data=16, model=16) = 512 chips; 'pod' is pure DP and
+  rides the slower inter-pod DCI, so keeping it a separate axis makes XLA
+  schedule cross-pod all-reduces separately and lets the roofline attribute
+  their bytes (EXPERIMENTS.md §Roofline).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_smoke_mesh():
+    """1-device mesh with the production axis names — lets sharding-rule code
+    paths run in unit tests without the 512-device override."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def mesh_info(mesh) -> dict:
+    return {
+        "axes": dict(zip(mesh.axis_names, mesh.devices.shape)),
+        "n_devices": int(mesh.devices.size),
+        "multi_pod": "pod" in mesh.axis_names,
+    }

@@ -1,0 +1,204 @@
+"""Sharding rules: logical axis names -> mesh axes, per (mesh, shape-kind).
+
+Layout (DESIGN.md §5):
+  * params: TP over 'model' (heads / mlp / experts / vocab), layers stacked
+    dim replicated. Divisibility-aware: when a dim doesn't divide the axis
+    GSPMD pads (uneven sharding) — used deliberately for e.g. llava's 56
+    heads on tp=16 — except tiny dims (< axis size) which replicate.
+  * optimizer states: ZeRO-1 — m/v/master additionally shard their largest
+    replicated dim over ('pod','data').
+  * activations: batch over ('pod','data'); residual stream sequence-sharded
+    over 'model' between blocks (Megatron-SP, see act_sharding).
+  * decode caches: batch over ('pod','data') (long_500k: cache sequence over
+    ('pod','data') instead, batch=1), kv heads over 'model'.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config.model import ModelConfig, ShapeConfig
+from repro.models.model import Model
+from repro.models.spec import SpecTree, TensorSpec
+
+
+def _batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _divisible(n: int, mesh: Mesh, axis: str) -> bool:
+    return n % mesh.shape[axis] == 0
+
+
+def logical_rules(cfg: ModelConfig, mesh: Mesh) -> Dict[str, Optional[object]]:
+    """logical param-axis name -> mesh axis (or None)."""
+    tp = mesh.shape["model"]
+    rules: Dict[str, Optional[object]] = {
+        "layers": None,
+        "sublayers": None,
+        # hubert's 504-cluster head doesn't divide tp=16 -> replicate (tiny)
+        "vocab": "model" if cfg.vocab_size % tp == 0 else None,
+        "embed": None,
+        "heads": "model",
+        # param tensors carry kv flattened as KV*hd (always tp-divisible here)
+        "kv": "model",
+        "ssm_inner": "model",
+        "ssm_heads": "model",
+    }
+    if cfg.family == "moe":
+        if cfg.n_experts % tp == 0:
+            rules["experts"] = "model"   # expert parallelism (olmoe: 64/16)
+            rules["mlp"] = None
+        else:
+            rules["experts"] = None      # few big experts (mixtral: 8 on 16)
+            rules["mlp"] = "model"       # -> TP inside each expert
+    else:
+        rules["mlp"] = "model"
+    return rules
+
+
+def spec_to_pspec(spec: TensorSpec, rules: Dict[str, Optional[object]]) -> P:
+    return P(*[rules.get(a) if a is not None else None for a in spec.axes])
+
+
+_FSDP_CANDIDATES = ("embed", "mlp", "ssm_inner", "heads", "kv", "vocab")
+_FSDP_MIN_ELEMS = 1 << 20  # don't bother sharding small tensors
+
+
+def fsdp_pspec(spec: TensorSpec, rules: Dict[str, Optional[object]], mesh: Mesh) -> P:
+    """TP pspec + FSDP: the first large still-replicated logical dim of a big
+    tensor is sharded over 'data'. Weights live fully sharded (ZeRO-3-style);
+    GSPMD all-gathers each scanned layer's slice on use — which overlaps with
+    the previous layer's compute (MaxText's v5e recipe; see DESIGN.md §5)."""
+    base = [rules.get(a) if a is not None else None for a in spec.axes]
+    n_elems = 1
+    for d in spec.shape:
+        n_elems *= d
+    if n_elems >= _FSDP_MIN_ELEMS:
+        dp = mesh.shape["data"]
+        for i, (a, assigned) in enumerate(zip(spec.axes, base)):
+            if assigned is None and a in _FSDP_CANDIDATES and spec.shape[i] % dp == 0:
+                base[i] = "data"
+                break
+    return P(*base)
+
+
+def param_shardings(model: Model, mesh: Mesh, *, fsdp: bool = True) -> Any:
+    rules = logical_rules(model.cfg, mesh)
+    to_pspec = (lambda s: fsdp_pspec(s, rules, mesh)) if fsdp else (lambda s: spec_to_pspec(s, rules))
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, to_pspec(s)),
+        model.param_specs(),
+        is_leaf=lambda x: isinstance(x, TensorSpec),
+    )
+
+
+# ------------------------------------------------------- optimizer states
+def opt_state_shardings(model: Model, mesh: Mesh, state_abstract, *, fsdp: bool = True) -> Any:
+    """Shardings for a TrainState. With FSDP on, params AND all f32 optimizer
+    states are fully sharded over (model, data) — ZeRO-3-equivalent storage:
+    the m/v/master update is pointwise over identically-sharded trees, so the
+    optimizer step needs no gathers at all."""
+    from repro.training.train_step import TrainState  # local: avoid cycle
+
+    p_shard = param_shardings(model, mesh, fsdp=fsdp)
+    scalar = NamedSharding(mesh, P())
+    opt = type(state_abstract.opt)(step=scalar, m=p_shard, v=p_shard, master=p_shard)
+    comp = None
+    if state_abstract.comp is not None:
+        from repro.distributed.compression import CompressionState
+
+        comp = jax.tree.map(
+            lambda sh: CompressionState(sh), p_shard,
+            is_leaf=lambda x: isinstance(x, NamedSharding),
+        )
+    return TrainState(params=p_shard, opt=opt, comp=comp)
+
+
+# ------------------------------------------------------------- activations
+def activation_rules(mesh: Mesh, shape: ShapeConfig, cfg: Optional[ModelConfig] = None) -> Dict[str, object]:
+    """Interior activation layouts (Megatron-SP style):
+      residual    — sequence sharded over 'model' between blocks;
+      attn_q      — heads sharded, sequence gathered (TP inside attention);
+      attn_kv     — kv heads replicated, sequence gathered;
+      inner       — d_ff / d_inner sharded, sequence gathered (TP inside FFN/SSM);
+      logits      — vocab sharded CE chunks;
+      moe_in/hidden — expert-parallel or expert-internal TP per cfg.
+    """
+    b = _batch_axes(mesh)
+    if shape.name == "long_500k":
+        # batch=1: parallelism comes from sequence sharding
+        rules = {"residual": NamedSharding(mesh, P(None, b, "model"))}
+    else:
+        rules = {"residual": NamedSharding(mesh, P(b, "model", None))}
+    rules["attn_q"] = NamedSharding(mesh, P(b, None, "model", None))
+    rules["attn_kv"] = NamedSharding(mesh, P(b, None, None, None))
+    rules["inner"] = NamedSharding(mesh, P(b, None, "model"))
+    rules["logits"] = NamedSharding(mesh, P(b, None, "model"))
+    if cfg is not None and cfg.n_kv_heads:
+        # decode query/output (B, KV, G, hd): mirror the KV-cache TP layout
+        kv_div = cfg.n_kv_heads % mesh.shape["model"] == 0
+        bd = b if shape.global_batch > 1 else None
+        rules["decode_q"] = NamedSharding(
+            mesh, P(bd, "model", None, None) if kv_div else P(bd, None, None, "model")
+        )
+    if cfg is not None and cfg.family == "moe":
+        # row-local dispatch buffers are (B, E, C, d/f): batch stays on the
+        # data axes, experts or expert-interior on 'model'
+        if cfg.n_experts % mesh.shape["model"] == 0:
+            rules["moe_in"] = NamedSharding(mesh, P(b, "model", None, None))
+            rules["moe_hidden"] = NamedSharding(mesh, P(b, "model", None, None))
+        else:
+            rules["moe_in"] = NamedSharding(mesh, P(b, None, None, None))
+            rules["moe_hidden"] = NamedSharding(mesh, P(b, None, None, "model"))
+    return rules
+
+
+def input_shardings(model: Model, mesh: Mesh, shape: ShapeConfig, specs: Dict[str, Any]) -> Dict[str, Any]:
+    """NamedShardings matching the structure of model.input_specs(shape)."""
+    cfg = model.cfg
+    b = _batch_axes(mesh)
+    batch_first = P(b)
+    out: Dict[str, Any] = {}
+    for name, v in specs.items():
+        if name == "cache":
+            out[name] = cache_shardings(model, mesh, shape)
+        elif name == "pos":
+            out[name] = NamedSharding(mesh, P())
+        elif isinstance(v, jax.ShapeDtypeStruct):
+            if shape.name == "long_500k" and v.ndim >= 1 and v.shape[0] == 1:
+                out[name] = NamedSharding(mesh, P(*([None] * v.ndim)))
+            else:
+                out[name] = NamedSharding(mesh, P(*([b] + [None] * (v.ndim - 1))))
+        else:
+            raise TypeError(name)
+    return out
+
+
+def cache_shardings(model: Model, mesh: Mesh, shape: ShapeConfig) -> Any:
+    cfg = model.cfg
+    b = _batch_axes(mesh)
+    tp = mesh.shape["model"]
+    # KV cache TP dim: kv heads when divisible, else head_dim (contraction
+    # dim — partial attention scores psum'd by GSPMD); both divide tp for
+    # every assigned arch
+    kv_divisible = cfg.n_kv_heads and cfg.n_kv_heads % tp == 0
+    act_rules = {
+        "layers": None,
+        "sublayers": None,
+        "act_batch": b if shape.global_batch > 1 else None,
+        "cache_seq": b if shape.global_batch == 1 else None,  # long_500k: shard S
+        "kv": "model" if kv_divisible else None,
+        "hd": None if kv_divisible else "model",
+        "ssm_inner": "model",
+        "ssm_heads": "model",
+        "embed": None,
+    }
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, spec_to_pspec(s, act_rules)),
+        model.cache_specs(shape.global_batch, shape.seq_len),
+        is_leaf=lambda x: isinstance(x, TensorSpec),
+    )

@@ -1,0 +1,86 @@
+"""Training launcher: ``python -m repro.launch.train --arch qwen2-0.5b --steps 100``.
+
+On this CPU container it trains the *reduced* config by default (the full
+configs are exercised via the dry-run); pass --full on real hardware. Wires
+together: config registry -> model -> data pipeline -> train step ->
+checkpoint manager, with resume-from-latest and periodic saves — the same
+loop a real multi-pod job runs under the production mesh.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.registry import get_arch, list_archs
+from repro.models import build_model
+from repro.training import (
+    CheckpointManager,
+    SyntheticTokenPipeline,
+    cosine_schedule,
+    make_train_step,
+    train_state_init,
+)
+from repro.utils.logging import get_logger
+
+log = get_logger("launch.train")
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list_archs(), required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--compression", action="store_true", help="int8 grad compression + error feedback")
+    ap.add_argument("--ckpt-dir", default="checkpoints")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--full", action="store_true", help="full (non-reduced) config — real hardware only")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_arch(args.arch)
+    if not args.full:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    state = train_state_init(model, jax.random.PRNGKey(args.seed), compression=args.compression)
+    mgr = CheckpointManager(Path(args.ckpt_dir) / cfg.name)
+    start_step = 0
+    if args.resume and mgr.latest_step() is not None:
+        state, start_step, _ = mgr.restore(state)
+        log.info("resumed from step %d", start_step)
+
+    pipe = SyntheticTokenPipeline(cfg, args.batch, args.seq, seed=args.seed)
+    sched = cosine_schedule(args.lr, args.warmup, args.steps)
+    step_fn = jax.jit(
+        make_train_step(model, sched, microbatches=args.microbatches, compression=args.compression),
+        donate_argnums=(0,),
+    )
+
+    t0 = time.time()
+    tokens_per_step = args.batch * args.seq
+    metrics = {}
+    for step in range(start_step, args.steps):
+        batch = jax.tree.map(jnp.asarray, pipe.get_batch(step))
+        state, metrics = step_fn(state, batch)
+        if step % 10 == 0 or step == args.steps - 1:
+            log.info(
+                "step %4d loss %.4f gnorm %.3f lr %.2e (%.1f tok/s)",
+                step, float(metrics["loss"]), float(metrics["gnorm"]),
+                float(metrics["lr"]), tokens_per_step * (step - start_step + 1) / (time.time() - t0),
+            )
+        if args.ckpt_every and (step + 1) % args.ckpt_every == 0:
+            mgr.save(step + 1, state, extra={"arch": cfg.name})
+    mgr.save(args.steps, state, extra={"arch": cfg.name})
+    return {"final_loss": float(metrics["loss"]), "steps": args.steps}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,258 @@
+"""GQA attention: KV-chunked (flash-style) train/prefill + cached decode.
+
+TPU adaptation notes (DESIGN.md §3, §Perf):
+
+* **Chunked online-softmax attention** in pure JAX: the O(S^2) logits tensor
+  is never materialized. The query dim is unrolled over static chunks and the
+  key dim is scanned, so for causal masks the loop is *triangular* — fully
+  masked (q, k) tiles are never emitted, and HLO FLOPs match the ~S^2/2
+  useful work (this is the property a Pallas flash kernel would give; the
+  scan formulation gets it portably and lets XLA pipeline the chunk matmuls).
+* **Grouped GQA einsums** (§Perf iteration 1): Q is reshaped to
+  (B, S, KV, G, hd) and contracted directly against (B, S, KV, hd) K/V —
+  K/V are never repeated to n_heads. The naive ``jnp.repeat`` formulation
+  materialized G x the KV tensors every layer (measured 8x = 2.3 TB/step on
+  qwen1.5-110b decode_32k; see EXPERIMENTS.md §Perf).
+* **Score/probability precision** (§Perf iteration 2): scores and the
+  softmax statistics stay f32; the post-exp probabilities are stored in
+  ``p_dtype`` (bf16 by default) for the PV matmul, halving the dominant
+  HBM-traffic term of long-context prefill with <1e-2 output error
+  (tests/test_models.py tolerances unchanged).
+* **Sliding windows** restrict the scanned k-chunk range statically per
+  q-chunk (window bounds are compile-time constants).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _repeat_kv(k: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    """(B, S, KV, hd) -> (B, S, H, hd). Oracle/test path only — the compute
+    paths below use grouped einsums and never materialize this."""
+    B, S, KV, hd = k.shape
+    if KV == n_heads:
+        return k
+    return jnp.repeat(k, n_heads // KV, axis=2)
+
+
+def _chunk(x: jnp.ndarray, size: int) -> jnp.ndarray:
+    """(B, S, ...) -> (S/size, B, size, ...)."""
+    B, S = x.shape[:2]
+    n = S // size
+    return x.reshape((B, n, size) + x.shape[2:]).swapaxes(0, 1)
+
+
+def chunked_attention(
+    q: jnp.ndarray,  # (B, S, H, hd)
+    k: jnp.ndarray,  # (B, S, KV, hd)
+    v: jnp.ndarray,  # (B, S, KV, hd)
+    *,
+    causal: bool,
+    window: int = 0,     # 0 = unbounded
+    chunk: int = 1024,
+    unroll: bool = False,
+    p_dtype=jnp.float32,  # model passes bf16 for bf16 configs (cfg.attn_p_bf16)
+) -> jnp.ndarray:
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    nq = S // chunk
+    scale = 1.0 / (hd ** 0.5)
+
+    kf = _chunk(k, chunk)  # (n, B, C, KV, hd) — grouped: no repeat to H
+    vf = _chunk(v, chunk)
+    qf = _chunk(q.reshape(B, S, KV, G, hd), chunk)  # (n, B, C, KV, G, hd)
+
+    # static per-q-chunk k-chunk range
+    def k_range(qi: int) -> Tuple[int, int]:
+        hi = (qi + 1) if causal else nq
+        lo = 0
+        if window:
+            lo = max(0, (qi * chunk - window) // chunk)
+        return lo, hi
+
+    rows = jnp.arange(chunk)
+
+    out_chunks = []
+    for qi in range(nq):
+        lo, hi = k_range(qi)
+        qb = (qf[qi] * scale).astype(q.dtype)  # (B, C, KV, G, hd)
+        m = jnp.full((B, chunk, KV, G), NEG_INF, jnp.float32)
+        l = jnp.zeros((B, chunk, KV, G), jnp.float32)
+        acc = jnp.zeros((B, chunk, KV, G, hd), jnp.float32)
+
+        def step(carry, inp, qi=qi):
+            m, l, acc = carry
+            kb, vb, ki = inp  # kb/vb: (B, Ck, KV, hd)
+            s = jnp.einsum("bqkgd,bckd->bqkgc", qb, kb, preferred_element_type=jnp.float32)
+            mask = _dynamic_mask(qi, ki, chunk, causal, window, rows)
+            if mask is not None:
+                s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None]).astype(p_dtype)  # stored compactly
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + jnp.sum(p.astype(jnp.float32), axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bqkgc,bckd->bqkgd", p, vb.astype(p_dtype), preferred_element_type=jnp.float32
+            )
+            return (m_new, l, acc), None
+
+        ks = kf[lo:hi]
+        vs = vf[lo:hi]
+        kis = jnp.arange(lo, hi)
+        (m, l, acc), _ = jax.lax.scan(step, (m, l, acc), (ks, vs, kis), unroll=unroll)
+        out_chunks.append((acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype))
+
+    out = jnp.stack(out_chunks, axis=1)  # (B, nq, C, KV, G, hd)
+    return out.reshape(B, S, H, hd)
+
+
+def _dynamic_mask(qi, ki_scalar, chunk, causal, window, rows):
+    """Mask for tile (qi static, ki dynamic in-scan). Returns None when no
+    tile in this q-row needs masking (pure off-diagonal full-attention)."""
+    if not causal and not window:
+        return None
+    qpos = qi * chunk + rows[:, None]
+    kpos = ki_scalar * chunk + rows[None, :]
+    keep = jnp.ones((chunk, chunk), bool)
+    if causal:
+        keep &= kpos <= qpos
+    if window:
+        keep &= kpos > qpos - window
+    return keep
+
+
+def decode_attention(
+    q: jnp.ndarray,        # (B, H, hd) — single new token
+    k_cache: jnp.ndarray,  # (B, S, KV, hd)
+    v_cache: jnp.ndarray,  # (B, S, KV, hd)
+    pos: jnp.ndarray,      # scalar int32: index of the new token
+    *,
+    window: int = 0,
+) -> jnp.ndarray:
+    from repro.launch.act_sharding import constrain
+
+    B, S, KV, hd = k_cache.shape
+    H = q.shape[1]
+    G = H // KV
+    # pin the query to the cache's TP layout (kv- or hd-sharded, see
+    # launch/shardings.cache_shardings) BEFORE the einsums — without this
+    # GSPMD resolves the KVxG head split by replicating the whole stacked
+    # cache in f32 every step (§Perf iteration 1b: 84% of decode HBM bytes)
+    qg = constrain(q.reshape(B, KV, G, hd), "decode_q")
+    scale = 1.0 / (hd ** 0.5)
+    # grouped: contract against the cache directly (no repeat materialization)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg * scale, k_cache, preferred_element_type=jnp.float32)
+    idx = jnp.arange(S)
+    keep = idx <= pos
+    if window:
+        keep &= idx > pos - window
+    s = jnp.where(keep[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    out = constrain(out, "decode_q")
+    return out.reshape(B, H, hd).astype(q.dtype)
+
+
+def update_kv_cache(
+    k_cache: jnp.ndarray,  # (B, S, KV, hd)
+    v_cache: jnp.ndarray,
+    k_new: jnp.ndarray,    # (B, KV, hd)
+    v_new: jnp.ndarray,
+    pos: jnp.ndarray,      # scalar int32
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k_new[:, None].astype(k_cache.dtype), (0, pos, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v_new[:, None].astype(v_cache.dtype), (0, pos, 0, 0))
+    return k_cache, v_cache
+
+
+def reference_attention(q, k, v, *, causal, window=0):
+    """O(S^2) oracle for tests (repeat-based, f32 throughout)."""
+    B, S, H, hd = q.shape
+    kf = _repeat_kv(k, H)
+    vf = _repeat_kv(v, H)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q / (hd ** 0.5), kf, preferred_element_type=jnp.float32)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    keep = jnp.ones((S, S), bool)
+    if causal:
+        keep &= kpos <= qpos
+    if window:
+        keep &= kpos > qpos - window
+    s = jnp.where(keep[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, vf.astype(jnp.float32)).astype(q.dtype)
+
+
+# --------------------------------------------------------------- legacy A/B
+def chunked_attention_repeat(q, k, v, *, causal, window=0, chunk=1024, unroll=False):
+    """Naive repeat-based GQA baseline (pre-§Perf-iteration-1): K/V repeated
+    to n_heads before the einsums, f32 probabilities. Kept for A/B
+    measurement via cfg.attn_grouped=False; numerically identical to the
+    grouped path at f32."""
+    return _chunked_attention_repeat_impl(
+        q, k, v, causal=causal, window=window, chunk=chunk, unroll=unroll
+    )
+
+
+def _chunked_attention_repeat_impl(q, k, v, *, causal, window, chunk, unroll):
+    B, S, H, hd = q.shape
+    chunk = min(chunk, S)
+    nq = S // chunk
+    scale = 1.0 / (hd ** 0.5)
+    kf = _chunk(_repeat_kv(k, H), chunk)
+    vf = _chunk(_repeat_kv(v, H), chunk)
+    qf = _chunk(q, chunk)
+    rows = jnp.arange(chunk)
+    out_chunks = []
+    for qi in range(nq):
+        hi = (qi + 1) if causal else nq
+        lo = max(0, (qi * chunk - window) // chunk) if window else 0
+        qb = qf[qi] * scale
+        m = jnp.full((B, chunk, H), NEG_INF, jnp.float32)
+        l = jnp.zeros((B, chunk, H), jnp.float32)
+        acc = jnp.zeros((B, chunk, H, hd), jnp.float32)
+
+        def step(carry, inp, qi=qi):
+            m, l, acc = carry
+            kb, vb, ki = inp
+            s = jnp.einsum("bqhd,bkhd->bqhk", qb, kb, preferred_element_type=jnp.float32)
+            mask = _dynamic_mask(qi, ki, chunk, causal, window, rows)
+            if mask is not None:
+                s = jnp.where(mask[None, :, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + jnp.sum(p, axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum("bqhk,bkhd->bqhd", p, vb.astype(jnp.float32))
+            return (m_new, l, acc), None
+
+        (m, l, acc), _ = jax.lax.scan(step, (m, l, acc), (kf[lo:hi], vf[lo:hi], jnp.arange(lo, hi)), unroll=unroll)
+        out_chunks.append((acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype))
+    return jnp.stack(out_chunks, axis=1).reshape(B, S, H, hd)
+
+
+def decode_attention_repeat(q, k_cache, v_cache, pos, *, window=0):
+    """Naive repeat-based decode baseline (pre-§Perf-iteration-1)."""
+    B, S, KV, hd = k_cache.shape
+    H = q.shape[1]
+    kf = _repeat_kv(k_cache, H)
+    vf = _repeat_kv(v_cache, H)
+    scale = 1.0 / (hd ** 0.5)
+    s = jnp.einsum("bhd,bkhd->bhk", q * scale, kf, preferred_element_type=jnp.float32)
+    idx = jnp.arange(S)
+    keep = idx <= pos
+    if window:
+        keep &= idx > pos - window
+    s = jnp.where(keep[None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhk,bkhd->bhd", p, vf.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,233 @@
+"""Per-family transformer blocks (params specs + apply fns).
+
+All stacks scan over layers with stacked params so HLO size is O(1) in depth
+(compile-time requirement for the 80-layer dry-runs)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.model import ModelConfig
+from repro.launch.act_sharding import constrain
+from repro.models.attention import (
+    chunked_attention,
+    chunked_attention_repeat,
+    decode_attention,
+    decode_attention_repeat,
+    update_kv_cache,
+)
+from repro.models.layers import apply_rope, mlp_apply, mlp_specs, rms_norm, rope_freqs
+from repro.models.moe import moe_apply, moe_specs
+from repro.models.spec import TensorSpec
+
+
+# ------------------------------------------------------------- attention core
+def attn_specs(cfg: ModelConfig, d_in: Optional[int] = None) -> dict:
+    d = d_in or cfg.d_model
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    s = {
+        "wq": TensorSpec((d, H * hd), ("embed", "heads")),
+        "wk": TensorSpec((d, KV * hd), ("embed", "kv")),
+        "wv": TensorSpec((d, KV * hd), ("embed", "kv")),
+        "wo": TensorSpec((H * hd, d), ("heads", "embed")),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = TensorSpec((H * hd,), ("heads",), init="zeros")
+        s["bk"] = TensorSpec((KV * hd,), ("kv",), init="zeros")
+        s["bv"] = TensorSpec((KV * hd,), ("kv",), init="zeros")
+    return s
+
+
+def _qkv(p: dict, cfg: ModelConfig, x: jnp.ndarray):
+    B, S, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    return (
+        q.reshape(B, S, H, hd),
+        k.reshape(B, S, KV, hd),
+        v.reshape(B, S, KV, hd),
+    )
+
+
+def attn_apply(
+    p: dict,
+    cfg: ModelConfig,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    *,
+    return_kv: bool = False,
+):
+    """Full-sequence attention. positions: (S,) int32 absolute positions."""
+    B, S, _ = x.shape
+    q, k, v = _qkv(p, cfg, x)
+    if cfg.rope_theta:
+        cos, sin = rope_freqs(positions, cfg.hd, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    # SP -> TP boundary: gather sequence, shard heads (Megatron-SP layout)
+    q = constrain(q, "attn_q")
+    k = constrain(k, "attn_kv")
+    v = constrain(v, "attn_kv")
+    import jax.numpy as _jnp
+
+    if cfg.attn_grouped:
+        p_dtype = _jnp.bfloat16 if (cfg.attn_p_bf16 and cfg.dtype == "bfloat16") else _jnp.float32
+        out = chunked_attention(
+            q, k, v, causal=cfg.causal, window=cfg.sliding_window,
+            chunk=min(cfg.attn_chunk, S), unroll=cfg.scan_unroll, p_dtype=p_dtype,
+        )
+    else:  # §Perf A/B baseline
+        out = chunked_attention_repeat(
+            q, k, v, causal=cfg.causal, window=cfg.sliding_window,
+            chunk=min(cfg.attn_chunk, S), unroll=cfg.scan_unroll,
+        )
+    out = out.reshape(B, S, -1) @ p["wo"]
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def attn_decode_apply(
+    p: dict,
+    cfg: ModelConfig,
+    x: jnp.ndarray,          # (B, d_in) single token
+    k_cache: jnp.ndarray,    # (B, S, KV, hd)
+    v_cache: jnp.ndarray,
+    pos: jnp.ndarray,        # scalar
+):
+    B = x.shape[0]
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q, k, v = _qkv(p, cfg, x[:, None])
+    if cfg.rope_theta:
+        cos, sin = rope_freqs(pos[None], cfg.hd, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    k_cache, v_cache = update_kv_cache(k_cache, v_cache, k[:, 0], v[:, 0], pos)
+    dec = decode_attention if cfg.attn_grouped else decode_attention_repeat
+    out = dec(q[:, 0], k_cache, v_cache, pos, window=cfg.sliding_window)
+    return out.reshape(B, -1) @ p["wo"], k_cache, v_cache
+
+
+# ------------------------------------------------------------- dense layers
+def dense_layer_specs(cfg: ModelConfig) -> dict:
+    return {
+        "ln1": TensorSpec((cfg.d_model,), ("embed",), init="ones"),
+        "attn": attn_specs(cfg),
+        "ln2": TensorSpec((cfg.d_model,), ("embed",), init="ones"),
+        "mlp": mlp_specs(cfg),
+    }
+
+
+def dense_layer_apply(lp: dict, cfg: ModelConfig, x: jnp.ndarray, positions: jnp.ndarray):
+    x = x + attn_apply(lp["attn"], cfg, rms_norm(x, lp["ln1"], cfg.norm_eps), positions)
+    x = x + mlp_apply(lp["mlp"], rms_norm(x, lp["ln2"], cfg.norm_eps))
+    return x
+
+
+def dense_layer_prefill(lp, cfg, x, positions):
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    att, (k, v) = attn_apply(lp["attn"], cfg, h, positions, return_kv=True)
+    x = x + att
+    x = x + mlp_apply(lp["mlp"], rms_norm(x, lp["ln2"], cfg.norm_eps))
+    return x, (k, v)
+
+
+def dense_layer_decode(lp, cfg, x, k_cache, v_cache, pos):
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    att, k_cache, v_cache = attn_decode_apply(lp["attn"], cfg, h, k_cache, v_cache, pos)
+    x = x + att
+    x = x + mlp_apply(lp["mlp"], rms_norm(x, lp["ln2"], cfg.norm_eps))
+    return x, k_cache, v_cache
+
+
+# --------------------------------------------------------------- moe layers
+def moe_layer_specs(cfg: ModelConfig) -> dict:
+    return {
+        "ln1": TensorSpec((cfg.d_model,), ("embed",), init="ones"),
+        "attn": attn_specs(cfg),
+        "ln2": TensorSpec((cfg.d_model,), ("embed",), init="ones"),
+        "moe": moe_specs(cfg),
+    }
+
+
+def moe_layer_apply(lp, cfg, x, positions):
+    x = x + attn_apply(lp["attn"], cfg, rms_norm(x, lp["ln1"], cfg.norm_eps), positions)
+    ff, aux = moe_apply(lp["moe"], cfg, rms_norm(x, lp["ln2"], cfg.norm_eps))
+    return x + ff, aux
+
+
+def moe_layer_prefill(lp, cfg, x, positions):
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    att, (k, v) = attn_apply(lp["attn"], cfg, h, positions, return_kv=True)
+    x = x + att
+    ff, _ = moe_apply(lp["moe"], cfg, rms_norm(x, lp["ln2"], cfg.norm_eps))
+    return x + ff, (k, v)
+
+
+def moe_layer_decode(lp, cfg, x, k_cache, v_cache, pos):
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    att, k_cache, v_cache = attn_decode_apply(lp["attn"], cfg, h, k_cache, v_cache, pos)
+    x = x + att
+    ff, _ = moe_apply(lp["moe"], cfg, rms_norm(x, lp["ln2"], cfg.norm_eps)[:, None])
+    return x + ff[:, 0], k_cache, v_cache
+
+
+# ------------------------------------------------- zamba2 shared attention
+def shared_attn_specs(cfg: ModelConfig) -> dict:
+    """One set of weights, applied n_shared_attn() times (zamba trick). Input
+    is concat(hidden, initial_embeds) -> 2*d_model."""
+    d2 = 2 * cfg.d_model
+    attn = attn_specs(cfg, d_in=d2)
+    # output projection returns to the residual stream width (d_model)
+    attn["wo"] = TensorSpec((cfg.n_heads * cfg.hd, cfg.d_model), ("heads", "embed"))
+    return {
+        "ln": TensorSpec((d2,), ("embed",), init="ones"),
+        "attn": attn,
+        "ln2": TensorSpec((d2,), ("embed",), init="ones"),
+        "mlp": {
+            "gate": TensorSpec((d2, cfg.d_ff), ("embed", "mlp")),
+            "up": TensorSpec((d2, cfg.d_ff), ("embed", "mlp")),
+            "down": TensorSpec((cfg.d_ff, cfg.d_model), ("mlp", "embed")),
+        },
+    }
+
+
+def shared_attn_apply(sp, cfg, x, e0, positions):
+    cat = jnp.concatenate([x, e0], axis=-1)
+    x = x + attn_apply(sp["attn"], cfg, rms_norm(cat, sp["ln"], cfg.norm_eps), positions)
+    cat2 = jnp.concatenate([x, e0], axis=-1)
+    h = rms_norm(cat2, sp["ln2"], cfg.norm_eps)
+    hh = constrain(jax.nn.silu(h @ sp["mlp"]["gate"]) * (h @ sp["mlp"]["up"]), "inner")
+    x = x + hh @ sp["mlp"]["down"]
+    return x
+
+
+def shared_attn_prefill(sp, cfg, x, e0, positions):
+    cat = jnp.concatenate([x, e0], axis=-1)
+    att, (k, v) = attn_apply(sp["attn"], cfg, rms_norm(cat, sp["ln"], cfg.norm_eps), positions, return_kv=True)
+    x = x + att
+    cat2 = jnp.concatenate([x, e0], axis=-1)
+    h = rms_norm(cat2, sp["ln2"], cfg.norm_eps)
+    hh = constrain(jax.nn.silu(h @ sp["mlp"]["gate"]) * (h @ sp["mlp"]["up"]), "inner")
+    x = x + hh @ sp["mlp"]["down"]
+    return x, (k, v)
+
+
+def shared_attn_decode(sp, cfg, x, e0, k_cache, v_cache, pos):
+    cat = jnp.concatenate([x, e0], axis=-1)
+    att, k_cache, v_cache = attn_decode_apply(
+        sp["attn"], cfg, rms_norm(cat, sp["ln"], cfg.norm_eps), k_cache, v_cache, pos
+    )
+    x = x + att
+    cat2 = jnp.concatenate([x, e0], axis=-1)
+    h = rms_norm(cat2, sp["ln2"], cfg.norm_eps)
+    x = x + (jax.nn.silu(h @ sp["mlp"]["gate"]) * (h @ sp["mlp"]["up"])) @ sp["mlp"]["down"]
+    return x, k_cache, v_cache

@@ -1,0 +1,108 @@
+"""Shared layers: RMSNorm, RoPE, gated MLP, embeddings, chunked CE loss."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.model import ModelConfig
+from repro.launch.act_sharding import constrain
+from repro.models.spec import TensorSpec
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- RoPE
+def rope_freqs(positions: jnp.ndarray, head_dim: int, theta: float) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """positions: (...,) int32 -> (cos, sin) of shape (..., head_dim/2) f32."""
+    half = head_dim // 2
+    inv = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, S, H, hd); cos/sin: (S, hd/2) or broadcastable."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[None, :, None, :].astype(jnp.float32)
+    s = sin[None, :, None, :].astype(jnp.float32)
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate([x1f * c - x2f * s, x2f * c + x1f * s], axis=-1).astype(x.dtype)
+
+
+# -------------------------------------------------------------- gated MLP
+def mlp_specs(cfg: ModelConfig, d_in: int | None = None) -> dict:
+    d = d_in or cfg.d_model
+    return {
+        "gate": TensorSpec((d, cfg.d_ff), ("embed", "mlp")),
+        "up": TensorSpec((d, cfg.d_ff), ("embed", "mlp")),
+        "down": TensorSpec((cfg.d_ff, d), ("mlp", "embed")),
+    }
+
+
+def mlp_apply(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    h = jax.nn.silu(x @ p["gate"]) * (x @ p["up"])
+    h = constrain(h, "inner")  # SP -> TP boundary: d_ff sharded, S gathered
+    return h @ p["down"]
+
+
+# ------------------------------------------------------------- embeddings
+def embed_specs(cfg: ModelConfig) -> dict:
+    # GPT-2-style 0.02 init; with tied embeddings this also keeps head logits
+    # in a sane range at init (scale-1.0 embeddings blow the tied CE up)
+    specs = {"tok": TensorSpec((cfg.vocab_size, cfg.d_model), ("vocab", "embed"))}
+    if not cfg.tie_embeddings:
+        specs["head"] = TensorSpec((cfg.d_model, cfg.vocab_size), ("embed", "vocab"))
+    return specs
+
+
+def embed_tokens(p: dict, tokens: jnp.ndarray, dtype) -> jnp.ndarray:
+    return jnp.take(p["tok"], tokens, axis=0).astype(dtype)
+
+
+def head_matrix(p: dict, cfg: ModelConfig) -> jnp.ndarray:
+    return p["tok"].T if cfg.tie_embeddings else p["head"]
+
+
+# ------------------------------------------------- chunked cross-entropy
+def chunked_ce_loss(
+    x: jnp.ndarray,           # (B, S, d) final hidden states
+    head: jnp.ndarray,        # (d, V)
+    labels: jnp.ndarray,      # (B, S) int32; -1 = ignore
+    chunk: int,
+    unroll: bool = False,
+) -> jnp.ndarray:
+    """Sequence-chunked softmax CE: never materializes (B, S, V) logits.
+
+    The (B, C, V) chunk logits stay bf16 with f32 reductions; XLA inserts the
+    cross-shard max/sum collectives when V is sharded over 'model'.
+    """
+    B, S, d = x.shape
+    if S % chunk:
+        pad = chunk - S % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+        S += pad
+    n_chunks = S // chunk
+    xc = x.reshape(B, n_chunks, chunk, d).swapaxes(0, 1)        # (n, B, C, d)
+    lc = labels.reshape(B, n_chunks, chunk).swapaxes(0, 1)      # (n, B, C)
+
+    def body(carry, inp):
+        total, count = carry
+        xs, ls = inp
+        logits = constrain((xs @ head).astype(jnp.float32), "logits")  # (B, C, V)
+        m = jnp.max(logits, axis=-1, keepdims=True)
+        lse = m[..., 0] + jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1))
+        gold = jnp.take_along_axis(logits, jnp.maximum(ls, 0)[..., None], axis=-1)[..., 0]
+        valid = ls >= 0
+        total = total + jnp.sum(jnp.where(valid, lse - gold, 0.0))
+        count = count + jnp.sum(valid)
+        return (total, count), None
+
+    (total, count), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)), (xc, lc), unroll=unroll)
+    return total / jnp.maximum(count, 1.0)

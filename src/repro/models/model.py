@@ -1,0 +1,420 @@
+"""Model assembly: specs, losses, prefill and decode steps for every family.
+
+The public surface consumed by training/serving/launch:
+
+    model = build_model(cfg)
+    specs  = model.param_specs()          # TensorSpec tree (shapes + logical axes)
+    params = model.init(key)              # real weights (smoke tests/examples)
+    loss, metrics = model.loss(params, batch)
+    logits, cache = model.prefill(params, batch)
+    logits, cache = model.decode_step(params, tokens, cache, pos)
+
+Layer stacks scan over stacked params (HLO O(1) in depth); remat policy per
+cfg.remat. Caches are TensorSpec trees too, so the dry-run can fabricate
+sharded ShapeDtypeStructs for serve_step without allocating 500k-token KV.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.model import ModelConfig, ShapeConfig
+from repro.launch.act_sharding import constrain
+from repro.models import blocks, ssm
+from repro.models.layers import chunked_ce_loss, embed_specs, embed_tokens, head_matrix, rms_norm
+from repro.models.spec import SpecTree, TensorSpec, tree_abstract, tree_init
+
+ACT_DTYPE = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}
+
+
+def _stack(specs: SpecTree, n: int, axis: str = "layers") -> SpecTree:
+    def add(s: TensorSpec) -> TensorSpec:
+        return TensorSpec((n,) + s.shape, (axis,) + s.axes, s.dtype, s.init, s.scale)
+
+    return jax.tree.map(add, specs, is_leaf=lambda x: isinstance(x, TensorSpec))
+
+
+def _remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)  # "full": save nothing
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig) -> None:
+        self.cfg = cfg
+        self.dtype = ACT_DTYPE[cfg.dtype]
+
+    # ================================================================ specs
+    def param_specs(self) -> SpecTree:
+        cfg = self.cfg
+        specs: SpecTree = {"embed": embed_specs(cfg), "ln_f": TensorSpec((cfg.d_model,), ("embed",), init="ones")}
+        if cfg.family in ("dense", "vlm"):
+            specs["layers"] = _stack(blocks.dense_layer_specs(cfg), cfg.n_layers)
+        elif cfg.family == "encoder":
+            specs["layers"] = _stack(blocks.dense_layer_specs(cfg), cfg.n_layers)
+            specs["mask_emb"] = TensorSpec((cfg.d_model,), ("embed",))
+            specs["head"] = TensorSpec((cfg.d_model, cfg.vocab_size), ("embed", "vocab"))
+        elif cfg.family == "moe":
+            specs["layers"] = _stack(blocks.moe_layer_specs(cfg), cfg.n_layers)
+        elif cfg.family == "ssm":
+            layer = {"ln": TensorSpec((cfg.d_model,), ("embed",), init="ones"), "mamba": ssm.mamba1_specs(cfg)}
+            specs["layers"] = _stack(layer, cfg.n_layers)
+        elif cfg.family == "hybrid":
+            G, A = cfg.n_shared_attn(), cfg.attn_every
+            layer = {"ln": TensorSpec((cfg.d_model,), ("embed",), init="ones"), "mamba": ssm.mamba2_specs(cfg)}
+            specs["groups"] = _stack(_stack(layer, A, axis="sublayers"), G)
+            specs["shared"] = blocks.shared_attn_specs(cfg)
+        else:
+            raise ValueError(cfg.family)
+        if cfg.family == "encoder":
+            # encoder consumes frame embeddings; token table unused -> drop it
+            specs["embed"] = {}
+        return specs
+
+    def init(self, key: jax.Array):
+        return tree_init(self.param_specs(), key)
+
+    def abstract_params(self):
+        return tree_abstract(self.param_specs())
+
+    # ================================================================ loss
+    def loss(self, params, batch: Dict[str, jnp.ndarray]) -> Tuple[jnp.ndarray, Dict]:
+        cfg = self.cfg
+        if cfg.family == "encoder":
+            return self._encoder_loss(params, batch)
+        if cfg.family == "vlm":
+            return self._vlm_loss(params, batch)
+        tokens, labels = batch["tokens"], batch["labels"]
+        x = embed_tokens(params["embed"], tokens, self.dtype)
+        positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+        x, aux = self._backbone(params, x, positions)
+        x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+        head = head_matrix(params["embed"], cfg)
+        ce = chunked_ce_loss(x, head, labels, cfg.loss_chunk, unroll=cfg.scan_unroll)
+        return ce + aux, {"ce": ce, "aux": aux}
+
+    def _vlm_loss(self, params, batch):
+        cfg = self.cfg
+        tokens, patches, labels = batch["tokens"], batch["patch_embeds"], batch["labels"]
+        te = embed_tokens(params["embed"], tokens, self.dtype)
+        x = jnp.concatenate([patches.astype(self.dtype), te], axis=1)
+        S = x.shape[1]
+        positions = jnp.arange(S, dtype=jnp.int32)
+        x, aux = self._backbone(params, x, positions)
+        x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+        # loss only over the text region (labels for patches are ignored)
+        x_txt = x[:, patches.shape[1] :]
+        ce = chunked_ce_loss(x_txt, head_matrix(params["embed"], cfg), labels, cfg.loss_chunk, unroll=cfg.scan_unroll)
+        return ce + aux, {"ce": ce, "aux": aux}
+
+    def _encoder_loss(self, params, batch):
+        cfg = self.cfg
+        frames, mask, labels = batch["frame_embeds"], batch["mask"], batch["labels"]
+        x = jnp.where(mask[..., None], params["mask_emb"].astype(self.dtype), frames.astype(self.dtype))
+        positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+        x, aux = self._backbone(params, x, positions)
+        x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+        labels_masked = jnp.where(mask, labels, -1)  # predict only masked frames
+        ce = chunked_ce_loss(x, params["head"], labels_masked, cfg.loss_chunk, unroll=cfg.scan_unroll)
+        return ce + aux, {"ce": ce, "aux": aux}
+
+    # ============================================================= backbone
+    def _backbone(self, params, x, positions) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        cfg = self.cfg
+        aux = jnp.float32(0)
+        x = constrain(x, "residual")
+        if cfg.family in ("dense", "vlm", "encoder"):
+
+            def body(h, lp):
+                h = blocks.dense_layer_apply(lp, cfg, h, positions)
+                return constrain(h, "residual"), None
+
+            x, _ = jax.lax.scan(_remat(body, cfg.remat), x, params["layers"], unroll=cfg.scan_unroll)
+        elif cfg.family == "moe":
+
+            def body(carry, lp):
+                h, a = carry
+                h, aux_l = blocks.moe_layer_apply(lp, cfg, h, positions)
+                return (constrain(h, "residual"), a + aux_l), None
+
+            (x, aux), _ = jax.lax.scan(_remat(body, cfg.remat), (x, aux), params["layers"], unroll=cfg.scan_unroll)
+        elif cfg.family == "ssm":
+
+            def body(h, lp):
+                out, _ = ssm.mamba1_forward(lp["mamba"], cfg, rms_norm(h, lp["ln"], cfg.norm_eps))
+                return constrain(h + out, "residual"), None
+
+            x, _ = jax.lax.scan(_remat(body, cfg.remat), x, params["layers"], unroll=cfg.scan_unroll)
+        elif cfg.family == "hybrid":
+            e0 = x  # concat-skip source (zamba trick)
+            shared = params["shared"]
+
+            def group_body(h, gp):
+                def sub_body(hh, lp):
+                    out, _ = ssm.mamba2_forward(lp["mamba"], cfg, rms_norm(hh, lp["ln"], cfg.norm_eps))
+                    return constrain(hh + out, "residual"), None
+
+                h, _ = jax.lax.scan(sub_body, h, gp, unroll=cfg.scan_unroll)
+                h = blocks.shared_attn_apply(shared, cfg, h, e0, positions)
+                return constrain(h, "residual"), None
+
+            x, _ = jax.lax.scan(_remat(group_body, cfg.remat), x, params["groups"], unroll=cfg.scan_unroll)
+        else:
+            raise ValueError(cfg.family)
+        return x, aux
+
+    # ============================================================== prefill
+    def prefill(self, params, batch) -> Tuple[jnp.ndarray, SpecTree]:
+        """Process a prompt; returns (last-token logits, cache). The cache is
+        sized to the prompt length (callers pad prompts to cache size)."""
+        cfg = self.cfg
+        if cfg.family == "encoder":
+            return self._encoder_forward(params, batch), {}
+        if cfg.family == "vlm":
+            te = embed_tokens(params["embed"], batch["tokens"], self.dtype)
+            x = jnp.concatenate([batch["patch_embeds"].astype(self.dtype), te], axis=1)
+        else:
+            x = embed_tokens(params["embed"], batch["tokens"], self.dtype)
+        positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+
+        cache: Dict[str, Any] = {}
+        if cfg.family in ("dense", "vlm"):
+
+            def body(h, lp):
+                h, kv = blocks.dense_layer_prefill(lp, cfg, h, positions)
+                return h, kv
+
+            x, (ks, vs) = jax.lax.scan(_remat(body, cfg.remat), x, params["layers"], unroll=cfg.scan_unroll)
+            cache = {"k": ks, "v": vs}
+        elif cfg.family == "moe":
+
+            def body(h, lp):
+                h, kv = blocks.moe_layer_prefill(lp, cfg, h, positions)
+                return h, kv
+
+            x, (ks, vs) = jax.lax.scan(_remat(body, cfg.remat), x, params["layers"], unroll=cfg.scan_unroll)
+            cache = {"k": ks, "v": vs}
+        elif cfg.family == "ssm":
+
+            def body(h, lp):
+                out, h_last = ssm.mamba1_forward(lp["mamba"], cfg, rms_norm(h, lp["ln"], cfg.norm_eps))
+                conv_tail = self._conv_tail(h, lp, cfg)
+                return h + out, (h_last, conv_tail)
+
+            x, (hs, convs) = jax.lax.scan(_remat(body, cfg.remat), x, params["layers"], unroll=cfg.scan_unroll)
+            cache = {"ssm": hs, "conv": convs}
+        elif cfg.family == "hybrid":
+            e0 = x
+            shared = params["shared"]
+
+            def group_body(h, gp):
+                def sub_body(hh, lp):
+                    out, h_last = ssm.mamba2_forward(lp["mamba"], cfg, rms_norm(hh, lp["ln"], cfg.norm_eps))
+                    conv_tail = self._conv_tail(hh, lp, cfg, mamba2=True)
+                    return hh + out, (h_last, conv_tail)
+
+                h, (hs, convs) = jax.lax.scan(sub_body, h, gp, unroll=cfg.scan_unroll)
+                h, kv = blocks.shared_attn_prefill(shared, cfg, h, e0, positions)
+                return h, (hs, convs, kv)
+
+            x, (hs, convs, (ks, vs)) = jax.lax.scan(_remat(group_body, cfg.remat), x, params["groups"], unroll=cfg.scan_unroll)
+            cache = {"ssm": hs, "conv": convs, "k": ks, "v": vs}
+        x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+        logits = (x[:, -1] @ head_matrix(params["embed"], cfg)).astype(jnp.float32)
+        return logits, cache
+
+    @staticmethod
+    def _conv_tail(h, lp, cfg, mamba2: bool = False):
+        """Last K-1 conv inputs for the decode conv buffer."""
+        K = cfg.ssm_conv
+        pre = rms_norm(h, lp["ln"], cfg.norm_eps)
+        proj = pre @ lp["mamba"]["in_proj"]
+        if mamba2:
+            di, N = cfg.d_inner, cfg.ssm_state
+            xbc = proj[..., di : 2 * di + 2 * N]
+            return xbc[:, -(K - 1) :]
+        x_part = proj[..., : cfg.d_inner]
+        return x_part[:, -(K - 1) :]
+
+    def _encoder_forward(self, params, batch):
+        cfg = self.cfg
+        x = batch["frame_embeds"].astype(self.dtype)
+        positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+        x, _ = self._backbone(params, x, positions)
+        x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+        return (x @ params["head"]).astype(jnp.float32)  # (B, S, V) frame logits
+
+    # =============================================================== decode
+    def decode_step(self, params, tokens: jnp.ndarray, cache: SpecTree, pos: jnp.ndarray):
+        """One autoregressive step. tokens: (B,) int32; pos: scalar int32.
+        Returns (logits (B, V) f32, new cache)."""
+        cfg = self.cfg
+        assert cfg.has_decode, f"{cfg.name} is encoder-only"
+        x = embed_tokens(params["embed"], tokens, self.dtype)  # (B, d)
+
+        if cfg.family in ("dense", "vlm", "moe"):
+            layer_fn = blocks.dense_layer_decode if cfg.family != "moe" else blocks.moe_layer_decode
+
+            def body(h, inp):
+                lp, kc, vc = inp
+                h, kc, vc = layer_fn(lp, cfg, h, kc, vc, pos)
+                return h, (kc, vc)
+
+            x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]), unroll=cfg.scan_unroll)
+            new_cache = {"k": ks, "v": vs}
+        elif cfg.family == "ssm":
+
+            def body(h, inp):
+                lp, hc, cc = inp
+                out, hc, cc = ssm.mamba1_decode(lp["mamba"], cfg, rms_norm(h, lp["ln"], cfg.norm_eps), hc, cc)
+                return h + out, (hc, cc)
+
+            x, (hs, convs) = jax.lax.scan(body, x, (params["layers"], cache["ssm"], cache["conv"]), unroll=cfg.scan_unroll)
+            new_cache = {"ssm": hs, "conv": convs}
+        elif cfg.family == "hybrid":
+            # concat-skip uses the *current* token's embedding (matches the
+            # per-position e0 stream in the full forward pass)
+            e0 = x
+            shared = params["shared"]
+
+            def group_body(h, inp):
+                gp, hc_g, cc_g, kc, vc = inp
+
+                def sub_body(hh, sub):
+                    lp, hc, cc = sub
+                    out, hc, cc = ssm.mamba2_decode(lp["mamba"], cfg, rms_norm(hh, lp["ln"], cfg.norm_eps), hc, cc)
+                    return hh + out, (hc, cc)
+
+                h, (hs, ccs) = jax.lax.scan(sub_body, h, (gp, hc_g, cc_g), unroll=cfg.scan_unroll)
+                h, kc, vc = blocks.shared_attn_decode(shared, cfg, h, e0, kc, vc, pos)
+                return h, (hs, ccs, kc, vc)
+
+            x, (hs, convs, ks, vs) = jax.lax.scan(
+                group_body, x, (params["groups"], cache["ssm"], cache["conv"], cache["k"], cache["v"]),
+                unroll=cfg.scan_unroll,
+            )
+            new_cache = {"ssm": hs, "conv": convs, "k": ks, "v": vs}
+        else:
+            raise ValueError(cfg.family)
+
+        x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+        logits = (x @ head_matrix(params["embed"], cfg)).astype(jnp.float32)
+        return logits, new_cache
+
+    # ================================================================ cache
+    def cache_specs(self, batch: int, cache_len: int) -> SpecTree:
+        """TensorSpec tree for a decode cache of ``cache_len`` tokens."""
+        cfg = self.cfg
+        dt = self.dtype
+        KV, hd, K = cfg.n_kv_heads, cfg.hd, cfg.ssm_conv
+        if cfg.family in ("dense", "vlm", "moe"):
+            kv = TensorSpec(
+                (cfg.n_layers, batch, cache_len, KV, hd),
+                ("layers", "act_batch", "cache_seq", "kv", "hd"),
+                dt,
+                init="zeros",
+            )
+            return {"k": kv, "v": kv}
+        if cfg.family == "ssm":
+            return {
+                "ssm": TensorSpec(
+                    (cfg.n_layers, batch, cfg.d_inner, cfg.ssm_state),
+                    ("layers", "act_batch", "ssm_inner", None),
+                    jnp.float32,
+                    init="zeros",
+                ),
+                "conv": TensorSpec(
+                    (cfg.n_layers, batch, K - 1, cfg.d_inner),
+                    ("layers", "act_batch", None, "ssm_inner"),
+                    dt,
+                    init="zeros",
+                ),
+            }
+        if cfg.family == "hybrid":
+            G, A = cfg.n_shared_attn(), cfg.attn_every
+            return {
+                "ssm": TensorSpec(
+                    (G, A, batch, cfg.ssm_nheads, cfg.ssm_head_dim, cfg.ssm_state),
+                    ("layers", "sublayers", "act_batch", "ssm_heads", None, None),
+                    jnp.float32,
+                    init="zeros",
+                ),
+                "conv": TensorSpec(
+                    (G, A, batch, K - 1, cfg.d_inner + 2 * cfg.ssm_state),
+                    ("layers", "sublayers", "act_batch", None, "ssm_inner"),
+                    dt,
+                    init="zeros",
+                ),
+                "k": TensorSpec(
+                    (G, batch, cache_len, KV, hd),
+                    ("layers", "act_batch", "cache_seq", "kv", "hd"),
+                    dt,
+                    init="zeros",
+                ),
+                "v": TensorSpec(
+                    (G, batch, cache_len, KV, hd),
+                    ("layers", "act_batch", "cache_seq", "kv", "hd"),
+                    dt,
+                    init="zeros",
+                ),
+            }
+        raise ValueError(cfg.family)
+
+    def init_cache(self, batch: int, cache_len: int):
+        return jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype),
+            self.cache_specs(batch, cache_len),
+            is_leaf=lambda x: isinstance(x, TensorSpec),
+        )
+
+    # ============================================================ input specs
+    def input_specs(self, shape: ShapeConfig) -> Dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for every model input of a cell
+        (weak-type-correct, shardable, no allocation)."""
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        if shape.kind == "train":
+            if cfg.family == "encoder":
+                return {
+                    "frame_embeds": jax.ShapeDtypeStruct((B, S, cfg.d_model), self.dtype),
+                    "mask": jax.ShapeDtypeStruct((B, S), jnp.bool_),
+                    "labels": jax.ShapeDtypeStruct((B, S), i32),
+                }
+            if cfg.family == "vlm":
+                si = S // 2
+                return {
+                    "tokens": jax.ShapeDtypeStruct((B, S - si), i32),
+                    "patch_embeds": jax.ShapeDtypeStruct((B, si, cfg.d_model), self.dtype),
+                    "labels": jax.ShapeDtypeStruct((B, S - si), i32),
+                }
+            return {
+                "tokens": jax.ShapeDtypeStruct((B, S), i32),
+                "labels": jax.ShapeDtypeStruct((B, S), i32),
+            }
+        if shape.kind == "prefill":
+            if cfg.family == "encoder":
+                return {"frame_embeds": jax.ShapeDtypeStruct((B, S, cfg.d_model), self.dtype)}
+            if cfg.family == "vlm":
+                si = S // 2
+                return {
+                    "tokens": jax.ShapeDtypeStruct((B, S - si), i32),
+                    "patch_embeds": jax.ShapeDtypeStruct((B, si, cfg.d_model), self.dtype),
+                }
+            return {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        # decode: one new token against a cache of S
+        return {
+            "tokens": jax.ShapeDtypeStruct((B,), i32),
+            "pos": jax.ShapeDtypeStruct((), i32),
+            "cache": tree_abstract(self.cache_specs(B, S)),
+        }
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,237 @@
+"""State-space blocks: Mamba-1 (falcon-mamba) and Mamba-2/SSD (zamba2).
+
+TPU adaptation (DESIGN.md §3): the CUDA "hardware-aware" fused scan becomes a
+**chunked scan** — `lax.scan` over sequence chunks carrying the recurrent
+state, with the intra-chunk recurrence evaluated by `associative_scan`
+(mamba1) or the SSD quadratic-form einsums (mamba2). Chunking bounds the
+materialized (B, Q, d_inner, N) tensors to one chunk (the VMEM-sized working
+set a Pallas kernel would use), and the einsums land on the MXU.
+
+Both blocks have sequential-scan oracles in tests/test_models.py; chunked ==
+sequential to f32 tolerance.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.model import ModelConfig
+from repro.launch.act_sharding import constrain
+from repro.models.spec import TensorSpec
+
+
+# =============================================================== mamba-1
+def mamba1_specs(cfg: ModelConfig) -> dict:
+    d, di, N, R, K = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank, cfg.ssm_conv
+    return {
+        "in_proj": TensorSpec((d, 2 * di), ("embed", "ssm_inner")),
+        "conv_w": TensorSpec((K, di), (None, "ssm_inner")),
+        "conv_b": TensorSpec((di,), ("ssm_inner",), init="zeros"),
+        "x_proj": TensorSpec((di, R + 2 * N), ("ssm_inner", None)),
+        "dt_w": TensorSpec((R, di), (None, "ssm_inner")),
+        "dt_b": TensorSpec((di,), ("ssm_inner",), init="ssm_dt", dtype=jnp.float32),
+        "A_log": TensorSpec((di, N), ("ssm_inner", None), init="ssm_a", dtype=jnp.float32),
+        "D": TensorSpec((di,), ("ssm_inner",), init="ones", dtype=jnp.float32),
+        "out_proj": TensorSpec((di, d), ("ssm_inner", "embed")),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv along S. x: (B, S, C); w: (K, C)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp.astype(jnp.float32),
+        w[:, None, :].astype(jnp.float32),  # (K, 1, C)
+        window_strides=(1,),
+        padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[-1],
+    )
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _mamba1_core(p: dict, cfg: ModelConfig, x: jnp.ndarray, h0: jnp.ndarray):
+    """Chunked selective scan. x: (B, S, di) post-conv post-silu activations.
+    h0: (B, di, N) carried state. Returns (y, h_last)."""
+    B, S, di = x.shape
+    N, R, Q = cfg.ssm_state, cfg.dt_rank, min(cfg.ssm_chunk, S)
+    assert S % Q == 0, (S, Q)
+
+    proj = (x @ p["x_proj"]).astype(jnp.float32)  # (B, S, R+2N)
+    dt_r, Bm, Cm = proj[..., :R], proj[..., R : R + N], proj[..., R + N :]
+    dt = jax.nn.softplus(dt_r @ p["dt_w"].astype(jnp.float32) + p["dt_b"])  # (B,S,di)
+    A = -jnp.exp(p["A_log"])  # (di, N)
+
+    xf = x.astype(jnp.float32)
+    nc = S // Q
+
+    def chunk_step(h, inp):
+        dt_c, B_c, C_c, x_c = inp  # (B,Q,di) (B,Q,N) (B,Q,N) (B,Q,di)
+        dA = jnp.exp(dt_c[..., None] * A)               # (B,Q,di,N)
+        dBx = (dt_c * x_c)[..., None] * B_c[:, :, None, :]  # (B,Q,di,N)
+        # intra-chunk linear recurrence h_t = dA_t h_{t-1} + dBx_t
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a2 * a1, a2 * b1 + b2
+        a_sc, b_sc = jax.lax.associative_scan(combine, (dA, dBx), axis=1)
+        h_all = a_sc * h[:, None] + b_sc                 # (B,Q,di,N)
+        y_c = jnp.einsum("bqn,bqdn->bqd", C_c, h_all)
+        return h_all[:, -1], y_c
+
+    def reshape_c(t):
+        return t.reshape((B, nc, Q) + t.shape[2:]).swapaxes(0, 1)
+
+    h_last, ys = jax.lax.scan(
+        chunk_step, h0, (reshape_c(dt), reshape_c(Bm), reshape_c(Cm), reshape_c(xf)),
+        unroll=cfg.scan_unroll,
+    )
+    y = ys.swapaxes(0, 1).reshape(B, S, di) + xf * p["D"]
+    return y, h_last
+
+
+def mamba1_forward(p: dict, cfg: ModelConfig, u: jnp.ndarray, h0=None, conv0=None):
+    """Full block. u: (B, S, d_model) -> (B, S, d_model)."""
+    B, S, _ = u.shape
+    di, N, K = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    xz = constrain(u @ p["in_proj"], "inner")  # SP -> TP: d_inner sharded
+    x, z = jnp.split(xz, 2, axis=-1)
+    x = jax.nn.silu(_causal_conv(x, p["conv_w"], p["conv_b"]))
+    if h0 is None:
+        h0 = jnp.zeros((B, di, N), jnp.float32)
+    y, h_last = _mamba1_core(p, cfg, x, h0)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(u.dtype)
+    return y @ p["out_proj"], h_last
+
+
+def mamba1_decode(p: dict, cfg: ModelConfig, u: jnp.ndarray, h: jnp.ndarray, conv_buf: jnp.ndarray):
+    """Single-token step. u: (B, d); h: (B, di, N); conv_buf: (B, K-1, di).
+    Returns (y (B, d), h_new, conv_buf_new)."""
+    N, R, K = cfg.ssm_state, cfg.dt_rank, cfg.ssm_conv
+    xz = u @ p["in_proj"]
+    x, z = jnp.split(xz, 2, axis=-1)  # (B, di)
+    window = jnp.concatenate([conv_buf, x[:, None]], axis=1)  # (B, K, di)
+    conv_buf_new = window[:, 1:]
+    xc = jnp.einsum("bkd,kd->bd", window.astype(jnp.float32), p["conv_w"].astype(jnp.float32))
+    x = jax.nn.silu(xc + p["conv_b"].astype(jnp.float32)).astype(u.dtype)
+
+    proj = (x @ p["x_proj"]).astype(jnp.float32)
+    dt_r, Bm, Cm = proj[..., :R], proj[..., R : R + N], proj[..., R + N :]
+    dt = jax.nn.softplus(dt_r @ p["dt_w"].astype(jnp.float32) + p["dt_b"])  # (B, di)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt[..., None] * A)                     # (B, di, N)
+    dBx = (dt * x.astype(jnp.float32))[..., None] * Bm[:, None, :]
+    h_new = dA * h + dBx
+    y = jnp.einsum("bn,bdn->bd", Cm, h_new) + x.astype(jnp.float32) * p["D"]
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(u.dtype)
+    return y @ p["out_proj"], h_new, conv_buf_new
+
+
+# =============================================================== mamba-2
+def mamba2_specs(cfg: ModelConfig) -> dict:
+    d, di, N, K = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    H = cfg.ssm_nheads
+    return {
+        "in_proj": TensorSpec((d, 2 * di + 2 * N + H), ("embed", "ssm_inner")),
+        "conv_w": TensorSpec((K, di + 2 * N), (None, "ssm_inner")),
+        "conv_b": TensorSpec((di + 2 * N,), ("ssm_inner",), init="zeros"),
+        "A_log": TensorSpec((H,), ("ssm_heads",), init="ssm_a", dtype=jnp.float32),
+        "dt_b": TensorSpec((H,), ("ssm_heads",), init="ssm_dt", dtype=jnp.float32),
+        "D": TensorSpec((H,), ("ssm_heads",), init="ones", dtype=jnp.float32),
+        "norm": TensorSpec((di,), ("ssm_inner",), init="ones"),
+        "out_proj": TensorSpec((di, d), ("ssm_inner", "embed")),
+    }
+
+
+def _segsum(a: jnp.ndarray) -> jnp.ndarray:
+    """a: (..., Q) decay logs -> (..., Q, Q) lower-triangular pairwise sums:
+    out[i, j] = sum_{j < t <= i} a_t  (i >= j), -inf above diagonal."""
+    Q = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]  # sum_(j,i] when i>=j
+    i = jnp.arange(Q)
+    keep = i[:, None] >= i[None, :]
+    return jnp.where(keep, diff, -jnp.inf)
+
+
+def _mamba2_core(cfg, dt, A, Bm, Cm, X, h0):
+    """Chunked SSD. dt: (B,S,H); Bm/Cm: (B,S,N); X: (B,S,H,P); h0: (B,H,P,N)."""
+    B, S, H = dt.shape
+    P, N = X.shape[-1], Bm.shape[-1]
+    Q = min(cfg.ssm_chunk, S)
+    assert S % Q == 0
+    nc = S // Q
+
+    def r(t):  # (B, S, ...) -> (nc, B, Q, ...)
+        return t.reshape((B, nc, Q) + t.shape[2:]).swapaxes(0, 1)
+
+    dtc, Bc, Cc, Xc = r(dt), r(Bm), r(Cm), r(X)
+
+    def chunk_step(h, inp):
+        dt_c, B_c, C_c, x_c = inp
+        a = dt_c * A  # (B,Q,H) decay logs
+        a = a.swapaxes(1, 2)  # (B,H,Q)
+        L = jnp.exp(_segsum(a))                                  # (B,H,Q,Q)
+        xdt = x_c * dt_c[..., None]                              # (B,Q,H,P)
+        # intra-chunk (diagonal blocks)
+        y_diag = jnp.einsum("bqn,bkn,bhqk,bkhp->bqhp", C_c, B_c, L, xdt)
+        # inter-chunk: contribution of carried state
+        cum = jnp.cumsum(a, axis=-1)                             # (B,H,Q)
+        y_inter = jnp.einsum("bqn,bhq,bhpn->bqhp", C_c, jnp.exp(cum), h)
+        # state update
+        decay_to_end = jnp.exp(cum[..., -1:] - cum)              # (B,H,Q)
+        new_contrib = jnp.einsum("bkn,bhk,bkhp->bhpn", B_c, decay_to_end, xdt)
+        h_new = jnp.exp(cum[..., -1])[..., None, None] * h + new_contrib
+        return h_new, y_diag + y_inter
+
+    h_last, ys = jax.lax.scan(chunk_step, h0, (dtc, Bc, Cc, Xc), unroll=cfg.scan_unroll)
+    return ys.swapaxes(0, 1).reshape(B, S, H, P), h_last
+
+
+def _rms(x, scale, eps):
+    xf = x.astype(jnp.float32)
+    return (xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps) * scale.astype(jnp.float32))
+
+
+def mamba2_forward(p: dict, cfg: ModelConfig, u: jnp.ndarray, h0=None):
+    """Full SSD block. u: (B, S, d) -> (B, S, d)."""
+    B, S, _ = u.shape
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_head_dim
+    zxbcdt = constrain(u @ p["in_proj"], "inner")  # SP -> TP: d_inner sharded
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * N], axis=-1)
+    xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"], p["conv_b"]))
+    x, Bm, Cm = jnp.split(xbc, [di, di + N], axis=-1)
+    X = x.reshape(B, S, H, P).astype(jnp.float32)
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_b"])    # (B,S,H)
+    A = -jnp.exp(p["A_log"])                                     # (H,)
+    if h0 is None:
+        h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    Y, h_last = _mamba2_core(cfg, dtf, A, Bm.astype(jnp.float32), Cm.astype(jnp.float32), X, h0)
+    Y = Y + X * p["D"][None, None, :, None]
+    y = Y.reshape(B, S, di) * jax.nn.silu(z.astype(jnp.float32))
+    y = _rms(y, p["norm"], cfg.norm_eps).astype(u.dtype)
+    return y @ p["out_proj"], h_last
+
+
+def mamba2_decode(p: dict, cfg: ModelConfig, u: jnp.ndarray, h: jnp.ndarray, conv_buf: jnp.ndarray):
+    """Single-token SSD step. u: (B, d); h: (B, H, P, N); conv_buf: (B, K-1, di+2N)."""
+    di, N, H, P, K = cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_head_dim, cfg.ssm_conv
+    zxbcdt = u @ p["in_proj"]
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * N], axis=-1)
+    window = jnp.concatenate([conv_buf, xbc[:, None]], axis=1)
+    conv_buf_new = window[:, 1:]
+    xc = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32), p["conv_w"].astype(jnp.float32))
+    xbc = jax.nn.silu(xc + p["conv_b"].astype(jnp.float32))
+    x, Bm, Cm = jnp.split(xbc, [di, di + N], axis=-1)
+    X = x.reshape(-1, H, P)
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_b"])    # (B,H)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dtf * A)                                        # (B,H)
+    h_new = dA[..., None, None] * h + jnp.einsum("bn,bh,bhp->bhpn", Bm, dtf, X)
+    y = jnp.einsum("bn,bhpn->bhp", Cm, h_new) + X * p["D"][None, :, None]
+    y = y.reshape(-1, di) * jax.nn.silu(z.astype(jnp.float32))
+    y = _rms(y, p["norm"], cfg.norm_eps).astype(u.dtype)
+    return y @ p["out_proj"], h_new, conv_buf_new

@@ -1,0 +1,19 @@
+# Publish/subscribe control plane (paper §Method b-d): message broker with
+# leases + DLQ, backlog/window autoscaler, drain workers, exactly-once journal.
+from repro.queueing.broker import Broker, Message, QueueStats
+from repro.queueing.autoscaler import Autoscaler, AutoscalerConfig, ScaleEvent
+from repro.queueing.journal import Journal
+from repro.queueing.worker import DeidWorker, WorkerPool, FailureInjector
+
+__all__ = [
+    "Broker",
+    "Message",
+    "QueueStats",
+    "Autoscaler",
+    "AutoscalerConfig",
+    "ScaleEvent",
+    "Journal",
+    "DeidWorker",
+    "WorkerPool",
+    "FailureInjector",
+]

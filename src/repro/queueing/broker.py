@@ -1,0 +1,176 @@
+"""Publish/subscribe message broker with cloud Pub/Sub semantics.
+
+The paper's pipeline "listens for de-identification requests using a
+publish/subscribe messaging model". We reproduce the semantics that matter
+for correctness at scale — **at-least-once delivery** with visibility-timeout
+leases, nack/redelivery, a dead-letter queue after ``max_deliveries``, and
+backlog statistics the autoscaler consumes — as a deterministic in-process
+simulation driven by an injectable clock (`repro.utils.timing.SimClock`).
+
+Exactly-once *effect* is layered on top by `repro.queueing.journal` (dedup on
+message key), the standard cloud pattern.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+from repro.utils.timing import SimClock
+
+
+@dataclass
+class Message:
+    key: str                  # stable identity (accession), dedup handle
+    payload: Any
+    nbytes: int = 0           # payload size estimate for backlog stats
+    msg_id: int = 0
+    deliveries: int = 0
+    publish_time: float = 0.0
+    lease_deadline: Optional[float] = None
+    lease_owner: Optional[str] = None
+
+
+@dataclass
+class QueueStats:
+    outstanding: int      # available + leased (not yet acked)
+    available: int
+    leased: int
+    dead_lettered: int
+    backlog_bytes: int
+    oldest_publish_time: Optional[float]
+
+
+class Broker:
+    def __init__(
+        self,
+        clock: Optional[SimClock] = None,
+        visibility_timeout: float = 120.0,
+        max_deliveries: int = 5,
+    ) -> None:
+        self.clock = clock or SimClock()
+        self.visibility_timeout = visibility_timeout
+        self.max_deliveries = max_deliveries
+        self._ids = itertools.count(1)
+        self._available: List[Message] = []
+        self._leased: Dict[int, Message] = {}
+        self._acked_keys: set[str] = set()
+        self.dead_letter: List[Message] = []
+        self.total_published = 0
+        self.total_acked = 0
+        self.total_redelivered = 0
+
+    # ------------------------------------------------------------ publish
+    def publish(self, key: str, payload: Any, nbytes: int = 0) -> int:
+        msg = Message(
+            key=key,
+            payload=payload,
+            nbytes=nbytes,
+            msg_id=next(self._ids),
+            publish_time=self.clock.now(),
+        )
+        self._available.append(msg)
+        self.total_published += 1
+        return msg.msg_id
+
+    # -------------------------------------------------------------- lease
+    def _expire_leases(self) -> None:
+        now = self.clock.now()
+        expired = [m for m in self._leased.values() if m.lease_deadline is not None and m.lease_deadline <= now]
+        for m in expired:
+            del self._leased[m.msg_id]
+            m.lease_owner = None
+            m.lease_deadline = None
+            if m.deliveries >= self.max_deliveries:
+                self.dead_letter.append(m)
+            else:
+                # fresh id per delivery = per-delivery ack token: a stale ack
+                # from the crashed owner can never ack the new lease
+                m.msg_id = next(self._ids)
+                self._available.append(m)
+                self.total_redelivered += 1
+
+    def pull(self, worker_id: str, max_messages: int = 1) -> List[Message]:
+        """Lease up to ``max_messages``; invisible to others until ack/timeout.
+        Returns per-delivery *receipts* (copies): msg_id acts as the ack token
+        for this delivery only, like cloud Pub/Sub ack ids."""
+        self._expire_leases()
+        out: List[Message] = []
+        while self._available and len(out) < max_messages:
+            msg = self._available.pop(0)
+            msg.deliveries += 1
+            msg.lease_owner = worker_id
+            msg.lease_deadline = self.clock.now() + self.visibility_timeout
+            self._leased[msg.msg_id] = msg
+            out.append(Message(**vars(msg)))
+        return out
+
+    def extend_lease(self, msg_id: int, extra: float) -> None:
+        if msg_id in self._leased:
+            self._leased[msg_id].lease_deadline += extra
+
+    # ---------------------------------------------------------------- ack
+    def ack(self, msg_id: int) -> bool:
+        msg = self._leased.pop(msg_id, None)
+        if msg is None:
+            return False  # lease already expired; redelivery will be deduped
+        self._acked_keys.add(msg.key)
+        self.total_acked += 1
+        return True
+
+    def nack(self, msg_id: int) -> None:
+        """Immediate negative ack: back to the queue (or DLQ if exhausted)."""
+        msg = self._leased.pop(msg_id, None)
+        if msg is None:
+            return
+        msg.lease_owner = None
+        msg.lease_deadline = None
+        if msg.deliveries >= self.max_deliveries:
+            self.dead_letter.append(msg)
+        else:
+            msg.msg_id = next(self._ids)  # fresh ack token (see _expire_leases)
+            self._available.append(msg)
+            self.total_redelivered += 1
+
+    # -------------------------------------------------------------- stats
+    def stats(self) -> QueueStats:
+        self._expire_leases()
+        msgs = self._available + list(self._leased.values())
+        return QueueStats(
+            outstanding=len(msgs),
+            available=len(self._available),
+            leased=len(self._leased),
+            dead_lettered=len(self.dead_letter),
+            backlog_bytes=sum(m.nbytes for m in msgs),
+            oldest_publish_time=min((m.publish_time for m in msgs), default=None),
+        )
+
+    def empty(self) -> bool:
+        s = self.stats()
+        return s.outstanding == 0
+
+    # straggler mitigation support: leases held longer than ``age`` seconds
+    def stale_leases(self, age: float) -> List[Message]:
+        now = self.clock.now()
+        return [
+            m
+            for m in self._leased.values()
+            if now - (m.lease_deadline - self.visibility_timeout) >= age
+        ]
+
+    def speculative_redeliver(self, msg_id: int) -> Optional[Message]:
+        """Clone a stale leased message back onto the queue (first ack wins —
+        the journal dedups the second completion)."""
+        msg = self._leased.get(msg_id)
+        if msg is None:
+            return None
+        clone = Message(
+            key=msg.key,
+            payload=msg.payload,
+            nbytes=msg.nbytes,
+            msg_id=next(self._ids),
+            deliveries=msg.deliveries,
+            publish_time=msg.publish_time,
+        )
+        self._available.append(clone)
+        return clone

@@ -1,0 +1,80 @@
+"""Processing journal: exactly-once effect + checkpoint/restart.
+
+At-least-once delivery (broker) + idempotent completion record (journal) =
+exactly-once output, the standard cloud pattern. The journal is an append-only
+JSONL file, fsynced per batch, so a killed worker pool resumes from durable
+state: completed keys are skipped on redelivery, manifests survive restarts.
+
+This is the de-id plane's checkpoint mechanism (DESIGN.md §5); the training
+plane's equivalent lives in `repro.training.checkpoint`.
+"""
+from __future__ import annotations
+
+import json
+import os
+from pathlib import Path
+from typing import Dict, Iterator, Optional
+
+from repro.core.manifest import Manifest
+
+
+class Journal:
+    def __init__(self, path: str | os.PathLike) -> None:
+        self.path = Path(path)
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        self._completed: Dict[str, dict] = {}
+        if self.path.exists():
+            self._replay()
+        self._fh = open(self.path, "a", encoding="utf-8")
+
+    def _replay(self) -> None:
+        with open(self.path, encoding="utf-8") as fh:
+            for line in fh:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    rec = json.loads(line)
+                except json.JSONDecodeError:
+                    # torn tail write from a crash: ignore the partial record
+                    continue
+                if rec.get("kind") == "done":
+                    self._completed[rec["key"]] = rec
+
+    # ------------------------------------------------------------------ api
+    def is_done(self, key: str) -> bool:
+        return key in self._completed
+
+    def record_done(self, key: str, manifest: Manifest, worker_id: str) -> bool:
+        """Record completion. Returns False if key was already done (the
+        duplicate worker's output is discarded — first ack wins)."""
+        if key in self._completed:
+            return False
+        rec = {
+            "kind": "done",
+            "key": key,
+            "worker": worker_id,
+            "counts": manifest.counts(),
+            "manifest": json.loads(manifest.to_json()),
+        }
+        self._completed[key] = rec
+        self._fh.write(json.dumps(rec) + "\n")
+        self._fh.flush()
+        os.fsync(self._fh.fileno())
+        return True
+
+    def completed_keys(self) -> set:
+        return set(self._completed)
+
+    def manifests(self) -> Iterator[Manifest]:
+        for rec in self._completed.values():
+            yield Manifest.from_json(json.dumps(rec["manifest"]))
+
+    def merged_manifest(self, request_id: str) -> Manifest:
+        merged = Manifest(request_id)
+        for m in self.manifests():
+            merged.merge(m)
+        return merged
+
+    def close(self) -> None:
+        self._fh.close()

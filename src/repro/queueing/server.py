@@ -1,0 +1,108 @@
+"""Central workflow server (paper §Method: "A central database and server
+component ... to store workflow information relevant to the lifetime of a
+de-identification request").
+
+Responsibilities reproduced:
+  * registry of research studies (IRB protocols) with their trust mode and key;
+  * accession validation ("first validated as eligible for research");
+  * pseudonym minting (anon accession, anon MRN, per-patient date jitter);
+  * publishing one message per accession to the broker;
+  * request lifecycle state (pending / queued / done) backed by the journal.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import Dict, List, Optional, Set
+
+from repro.core.pipeline import build_request
+from repro.core.pseudonym import PseudonymService, TrustMode
+from repro.queueing.broker import Broker
+from repro.queueing.journal import Journal
+from repro.storage.object_store import StudyStore
+from repro.utils.logging import get_logger
+
+log = get_logger("queueing.server")
+
+
+class RequestState(Enum):
+    PENDING = "pending"
+    QUEUED = "queued"
+    DONE = "done"
+    REJECTED = "rejected"
+
+
+@dataclass
+class WorkflowRecord:
+    research_study: str
+    accession: str
+    state: RequestState
+    anon_accession: str = ""
+    reason: str = ""
+
+
+class DeidService:
+    def __init__(self, broker: Broker, lake: StudyStore, journal: Journal) -> None:
+        self.broker = broker
+        self.lake = lake
+        self.journal = journal
+        self._studies: Dict[str, PseudonymService] = {}
+        self._ineligible: Set[str] = set()  # e.g. research-opt-out patients
+        self.records: List[WorkflowRecord] = []
+
+    # -------------------------------------------------------------- studies
+    def register_study(
+        self, study_id: str, mode: TrustMode = TrustMode.POST_IRB, key: Optional[bytes] = None
+    ) -> PseudonymService:
+        if mode is TrustMode.POST_IRB and key is None:
+            # per-protocol persistent key (stored in the central DB in prod)
+            key = study_id.encode().ljust(32, b"\0")[:32]
+        svc = PseudonymService(study_id, mode, key=key)
+        self._studies[study_id] = svc
+        return svc
+
+    def mark_ineligible(self, accession: str) -> None:
+        self._ineligible.add(accession)
+
+    # -------------------------------------------------------------- requests
+    def validate(self, accession: str) -> tuple[bool, str]:
+        if accession in self._ineligible:
+            return False, "accession opted out of research use"
+        if not self.lake.has_study(accession):
+            return False, "accession not present in the data lake"
+        return True, ""
+
+    def submit(self, study_id: str, accessions: List[str], mrn_lookup: Dict[str, str]) -> List[WorkflowRecord]:
+        """Validate + pseudonymize + enqueue one request per accession."""
+        if study_id not in self._studies:
+            raise KeyError(f"research study {study_id!r} not registered")
+        pseudo = self._studies[study_id]
+        out: List[WorkflowRecord] = []
+        for acc in accessions:
+            ok, reason = self.validate(acc)
+            if not ok:
+                rec = WorkflowRecord(study_id, acc, RequestState.REJECTED, reason=reason)
+            elif self.journal.is_done(f"{study_id}/{acc}"):
+                rec = WorkflowRecord(study_id, acc, RequestState.DONE)
+            else:
+                req = build_request(pseudo, acc, mrn_lookup[acc])
+                study = self.lake.get_study(acc)
+                self.broker.publish(
+                    key=f"{study_id}/{acc}",
+                    payload={"accession": acc, "request": req.__dict__},
+                    nbytes=study.nbytes(),
+                )
+                rec = WorkflowRecord(study_id, acc, RequestState.QUEUED, req.anon_accession)
+            out.append(rec)
+            self.records.append(rec)
+        return out
+
+    def request_states(self, study_id: str) -> Dict[str, RequestState]:
+        out: Dict[str, RequestState] = {}
+        for rec in self.records:
+            if rec.research_study == study_id:
+                state = rec.state
+                if state is RequestState.QUEUED and self.journal.is_done(f"{study_id}/{rec.accession}"):
+                    state = RequestState.DONE
+                out[rec.accession] = state
+        return out

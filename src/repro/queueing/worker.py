@@ -1,0 +1,191 @@
+"""Drain workers + pool orchestration (paper §Method d).
+
+"Each worker retrieves messages from the queue, downloads and de-identifies
+the DICOM files ..., and uploads the de-identified images to an object store
+accessible to the researcher. Compute instances are deleted once the message
+queue is empty, and a manifest file is created."
+
+The pool is a deterministic single-threaded simulation: workers are
+interleaved round-robin, processing time is modeled from bytes/throughput and
+advanced on the shared SimClock. Fault tolerance mechanics are real, not
+mocked: a crash abandons the lease mid-flight, the visibility timeout
+redelivers, the journal dedups double completions from speculative
+re-dispatch (straggler mitigation).
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+from repro.core.manifest import Manifest
+from repro.core.pipeline import DeidPipeline, DeidRequest
+from repro.queueing.autoscaler import Autoscaler
+from repro.queueing.broker import Broker, Message
+from repro.queueing.journal import Journal
+from repro.storage.object_store import StudyStore
+from repro.utils.logging import get_logger
+
+log = get_logger("queueing.worker")
+
+
+class WorkerCrash(RuntimeError):
+    pass
+
+
+@dataclass
+class FailureInjector:
+    """Deterministic fault model: crash and/or stall specific (worker, key)
+    pairs. Hash-based so runs are reproducible regardless of scheduling."""
+
+    crash_rate: float = 0.0       # fraction of (worker, key, delivery) crashed
+    straggler_rate: float = 0.0   # fraction processed at slow_factor speed
+    slow_factor: float = 10.0
+    crash_once_keys: frozenset = frozenset()  # crash first delivery of these keys
+
+    def _u(self, *parts: object) -> float:
+        h = hashlib.sha256("|".join(map(str, parts)).encode()).digest()
+        return int.from_bytes(h[:8], "big") / 2**64
+
+    def should_crash(self, worker_id: str, msg: Message) -> bool:
+        if msg.key in self.crash_once_keys and msg.deliveries == 1:
+            return True
+        return self._u("crash", worker_id, msg.key, msg.deliveries) < self.crash_rate
+
+    def slowdown(self, worker_id: str, msg: Message) -> float:
+        if self._u("slow", worker_id, msg.key) < self.straggler_rate:
+            return self.slow_factor
+        return 1.0
+
+
+@dataclass
+class DeidWorker:
+    worker_id: str
+    pipeline: DeidPipeline
+    source: StudyStore
+    dest: StudyStore
+    journal: Journal
+    throughput: float = 160e6  # bytes/s of de-id compute (paper-calibrated)
+    processed: int = 0
+    deduped: int = 0
+
+    def process(self, broker: Broker, msg: Message, injector: Optional[FailureInjector] = None) -> float:
+        """Process one message; returns simulated seconds of work."""
+        request = DeidRequest(**msg.payload["request"])
+        key = msg.key
+
+        if self.journal.is_done(key):
+            # duplicate delivery of completed work: ack and drop (exactly-once)
+            broker.ack(msg.msg_id)
+            self.deduped += 1
+            return 0.0
+
+        if injector and injector.should_crash(self.worker_id, msg):
+            # crash mid-processing: lease is abandoned, no ack, no journal entry
+            raise WorkerCrash(f"{self.worker_id} crashed on {key} (delivery {msg.deliveries})")
+
+        study = self.source.get_study(msg.payload["accession"])
+        outputs, manifest = self.pipeline.process_study(study, request, self.worker_id)
+        request_id = f"{request.research_study}/{request.anon_accession}"
+        for ds in outputs:
+            self.dest.put_output(request_id, str(ds.get("SOPInstanceUID", "?")), ds)
+
+        if self.journal.record_done(key, manifest, self.worker_id):
+            self.processed += 1
+        else:
+            self.deduped += 1  # lost the first-ack race to a speculative clone
+        broker.ack(msg.msg_id)
+
+        slowdown = injector.slowdown(self.worker_id, msg) if injector else 1.0
+        return (study.nbytes() / self.throughput) * slowdown
+
+
+@dataclass
+class PoolReport:
+    processed: int
+    deduped: int
+    crashes: int
+    redeliveries: int
+    speculative: int
+    wall_seconds: float
+    bytes_in: int
+    cost_usd: float
+    scale_events: int
+
+
+class WorkerPool:
+    """Autoscaled drain loop with straggler re-dispatch."""
+
+    def __init__(
+        self,
+        broker: Broker,
+        autoscaler: Autoscaler,
+        make_worker: Callable[[str], DeidWorker],
+        injector: Optional[FailureInjector] = None,
+        straggler_age: float = 300.0,
+        tick_seconds: float = 5.0,
+        max_ticks: int = 100_000,
+    ) -> None:
+        self.broker = broker
+        self.autoscaler = autoscaler
+        self.make_worker = make_worker
+        self.injector = injector
+        self.straggler_age = straggler_age
+        self.tick_seconds = tick_seconds
+        self.max_ticks = max_ticks
+        self.workers: List[DeidWorker] = []
+        self._all_workers: List[DeidWorker] = []  # retains counters across scale-down
+        self.crashes = 0
+        self.speculative = 0
+
+    def _resize(self, n: int) -> None:
+        while len(self.workers) < n:
+            w = self.make_worker(f"w{len(self._all_workers)}")
+            self.workers.append(w)
+            self._all_workers.append(w)
+        # scale-down deletes from the tail (paper: instances deleted when idle)
+        del self.workers[n:]
+
+    def drain(self) -> PoolReport:
+        clock = self.broker.clock
+        t0 = clock.now()
+        bytes_in = self.broker.stats().backlog_bytes
+        ticks = 0
+        while not self.broker.empty() and ticks < self.max_ticks:
+            ticks += 1
+            n = self.autoscaler.tick()
+            self._resize(max(n, 1) if not self.broker.empty() else n)
+
+            busy = 0.0
+            for worker in list(self.workers):
+                msgs = self.broker.pull(worker.worker_id, max_messages=1)
+                if not msgs:
+                    continue
+                try:
+                    busy = max(busy, worker.process(self.broker, msgs[0], self.injector))
+                except WorkerCrash:
+                    self.crashes += 1
+                    # no ack: the lease expires and the broker redelivers
+
+            # straggler mitigation: clone stale leases back onto the queue
+            stats = self.broker.stats()
+            if stats.available == 0 and stats.leased > 0:
+                for stale in self.broker.stale_leases(self.straggler_age):
+                    if self.broker.speculative_redeliver(stale.msg_id) is not None:
+                        self.speculative += 1
+
+            clock.advance(max(busy, self.tick_seconds))
+        self.autoscaler.tick()  # final accounting tick (pool deletion)
+        self._resize(self.autoscaler.current)
+
+        return PoolReport(
+            processed=sum(w.processed for w in self._all_workers),
+            deduped=sum(w.deduped for w in self._all_workers),
+            crashes=self.crashes,
+            redeliveries=self.broker.total_redelivered,
+            speculative=self.speculative,
+            wall_seconds=clock.now() - t0,
+            bytes_in=bytes_in,
+            cost_usd=self.autoscaler.cost_usd(),
+            scale_events=len(self.autoscaler.events),
+        )

@@ -1,0 +1,3 @@
+from repro.serving.engine import ServeEngine, Request, BatchResult
+
+__all__ = ["ServeEngine", "Request", "BatchResult"]

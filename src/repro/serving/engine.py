@@ -1,0 +1,125 @@
+"""Batched serving engine: synchronized prefill + decode over request batches.
+
+Serving model: requests queue up, the engine packs up to ``max_batch`` of
+them, left-pads prompts to a common length, prefills once, then decodes
+synchronously (one token per step for the whole batch) with greedy or
+temperature sampling. Per-sequence stop tokens mask finished rows.
+
+Scope note (DESIGN.md §5): positions are batch-synchronized (scalar pos), as
+in the dry-run serve_step contract. Continuous batching with per-row
+positions is an engine-level extension, orthogonal to the sharding story.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+
+
+@dataclass
+class Request:
+    request_id: str
+    prompt_tokens: List[int]
+    max_new_tokens: int = 16
+    temperature: float = 0.0  # 0 = greedy
+
+
+@dataclass
+class BatchResult:
+    request_id: str
+    tokens: List[int]
+    prompt_len: int
+
+
+class ServeEngine:
+    def __init__(self, model: Model, params, *, max_batch: int = 8, stop_token: int = -1) -> None:
+        self.model = model
+        self.params = params
+        self.max_batch = max_batch
+        self.stop_token = stop_token
+        self._prefill = jax.jit(model.prefill)
+        self._decode = jax.jit(model.decode_step)
+        self._pending: List[Request] = []
+        self.steps_executed = 0
+
+    def submit(self, req: Request) -> None:
+        self._pending.append(req)
+
+    # ------------------------------------------------------------- serving
+    def run(self, key: Optional[jax.Array] = None) -> List[BatchResult]:
+        """Drain pending requests in batches; returns completed results."""
+        key = key if key is not None else jax.random.PRNGKey(0)
+        results: List[BatchResult] = []
+        while self._pending:
+            batch = self._pending[: self.max_batch]
+            self._pending = self._pending[self.max_batch :]
+            results.extend(self._run_batch(batch, key))
+            key = jax.random.fold_in(key, len(results))
+        return results
+
+    def _run_batch(self, reqs: List[Request], key: jax.Array) -> List[BatchResult]:
+        cfg = self.model.cfg
+        B = len(reqs)
+        P = max(len(r.prompt_tokens) for r in reqs)
+        max_new = max(r.max_new_tokens for r in reqs)
+        total = P + max_new
+
+        # right-align prompts into a (B, P) buffer (pad id 0; positions match
+        # the synchronized-pos contract because all rows share the pad length)
+        toks = np.zeros((B, P), np.int32)
+        for i, r in enumerate(reqs):
+            toks[i, P - len(r.prompt_tokens) :] = r.prompt_tokens
+
+        # prefill on prompt, then grow the cache to the full horizon
+        logits, cache = self._prefill(self.params, {"tokens": jnp.asarray(toks)})
+        cache = self._grow_cache(cache, B, P, total)
+
+        out = [[] for _ in range(B)]
+        done = np.zeros(B, bool)
+        cur = self._sample(logits, reqs, key)
+        for i in range(B):
+            out[i].append(int(cur[i]))
+        for step in range(1, max_new):
+            logits, cache = self._decode(
+                self.params, jnp.asarray(cur, jnp.int32), cache, jnp.int32(P + step - 1)
+            )
+            cur = self._sample(logits, reqs, jax.random.fold_in(key, step))
+            self.steps_executed += 1
+            for i in range(B):
+                if not done[i]:
+                    tok = int(cur[i])
+                    out[i].append(tok)
+                    if tok == self.stop_token or len(out[i]) >= reqs[i].max_new_tokens:
+                        done[i] = True
+            if done.all():
+                break
+        return [
+            BatchResult(r.request_id, out[i][: r.max_new_tokens], len(r.prompt_tokens))
+            for i, r in enumerate(reqs)
+        ]
+
+    def _grow_cache(self, cache, B, P, total):
+        """Pad seq-dim caches from prompt length to the decode horizon."""
+
+        def grow(x):
+            if x.ndim >= 3 and x.shape[-3] == P:  # (..., S, KV, hd)
+                pad = [(0, 0)] * x.ndim
+                pad[-3] = (0, total - P)
+                return jnp.pad(x, pad)
+            return x
+
+        return jax.tree.map(grow, cache)
+
+    def _sample(self, logits: jnp.ndarray, reqs: List[Request], key: jax.Array) -> np.ndarray:
+        temps = np.array([r.temperature for r in reqs], np.float32)
+        greedy = np.asarray(jnp.argmax(logits, axis=-1))
+        if (temps == 0).all():
+            return greedy
+        scaled = logits / jnp.maximum(jnp.asarray(temps)[:, None], 1e-6)
+        sampled = np.asarray(jax.random.categorical(key, scaled, axis=-1))
+        return np.where(temps == 0, greedy, sampled)

@@ -1,0 +1,3 @@
+from repro.storage.object_store import ObjectStore, StudyStore
+
+__all__ = ["ObjectStore", "StudyStore"]

@@ -1,0 +1,102 @@
+"""Object storage stand-in (paper: "encrypted and distributed cloud object
+storage service").
+
+Two layers:
+
+* :class:`ObjectStore` — a key/value blob store with byte accounting and
+  optional at-rest obfuscation. The obfuscation is a keyed XOR keystream —
+  explicitly NOT real cryptography (offline container, no AES available);
+  it exists so tests can assert the at-rest representation differs from the
+  plaintext and that reads require the key, i.e. the *interface* of an
+  encrypted store is honored end to end.
+* :class:`StudyStore` — typed façade holding identified studies (the data
+  lake) or de-identified outputs (the researcher bucket), with egress
+  accounting used by the Table-1 cost model.
+"""
+from __future__ import annotations
+
+import hashlib
+import io
+import pickle
+from dataclasses import dataclass, field
+from typing import Any, Dict, Iterator, List, Optional
+
+
+def _keystream(key: bytes, n: int) -> bytes:
+    out = io.BytesIO()
+    counter = 0
+    while out.tell() < n:
+        out.write(hashlib.sha256(key + counter.to_bytes(8, "big")).digest())
+        counter += 1
+    return out.getvalue()[:n]
+
+
+class ObjectStore:
+    def __init__(self, name: str, key: Optional[bytes] = None) -> None:
+        self.name = name
+        self._key = key
+        self._blobs: Dict[str, bytes] = {}
+        self.bytes_written = 0
+        self.bytes_read = 0
+
+    def put(self, path: str, data: bytes) -> None:
+        if self._key is not None:
+            data = bytes(a ^ b for a, b in zip(data, _keystream(self._key, len(data))))
+        self._blobs[path] = data
+        self.bytes_written += len(data)
+
+    def get(self, path: str) -> bytes:
+        data = self._blobs[path]
+        self.bytes_read += len(data)
+        if self._key is not None:
+            data = bytes(a ^ b for a, b in zip(data, _keystream(self._key, len(data))))
+        return data
+
+    def raw(self, path: str) -> bytes:
+        """At-rest bytes (for tests asserting encryption actually applied)."""
+        return self._blobs[path]
+
+    def exists(self, path: str) -> bool:
+        return path in self._blobs
+
+    def list(self, prefix: str = "") -> List[str]:
+        return sorted(p for p in self._blobs if p.startswith(prefix))
+
+    def delete(self, path: str) -> None:
+        self._blobs.pop(path, None)
+
+    def total_bytes(self) -> int:
+        return sum(len(b) for b in self._blobs.values())
+
+
+class StudyStore:
+    """Typed store: pickles study/dataset objects through an ObjectStore."""
+
+    def __init__(self, name: str, key: Optional[bytes] = None) -> None:
+        self.store = ObjectStore(name, key)
+
+    def put_study(self, accession: str, study: Any) -> int:
+        blob = pickle.dumps(study, protocol=pickle.HIGHEST_PROTOCOL)
+        self.store.put(f"studies/{accession}", blob)
+        return len(blob)
+
+    def get_study(self, accession: str) -> Any:
+        return pickle.loads(self.store.get(f"studies/{accession}"))
+
+    def has_study(self, accession: str) -> bool:
+        return self.store.exists(f"studies/{accession}")
+
+    def put_output(self, request_id: str, sop_uid: str, dataset: Any) -> int:
+        blob = pickle.dumps(dataset, protocol=pickle.HIGHEST_PROTOCOL)
+        self.store.put(f"out/{request_id}/{sop_uid}", blob)
+        return len(blob)
+
+    def outputs(self, request_id: str) -> Iterator[Any]:
+        for path in self.store.list(f"out/{request_id}/"):
+            yield pickle.loads(self.store.get(path))
+
+    def put_manifest(self, request_id: str, manifest_json: str) -> None:
+        self.store.put(f"manifests/{request_id}.json", manifest_json.encode())
+
+    def accessions(self) -> List[str]:
+        return [p.split("/", 1)[1] for p in self.store.list("studies/")]

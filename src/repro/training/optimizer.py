@@ -1,0 +1,92 @@
+"""AdamW + schedules, pure-jnp (pjit-safe, shardable states).
+
+States mirror param pytree structure; m/v ride in f32 with bf16 params (the
+f32 master copy lives in the optimizer state — standard mixed-precision).
+ZeRO-1 sharding of these states is applied by launch/shardings.py rules.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any       # f32, param-tree
+    v: Any       # f32, param-tree
+    master: Any  # f32 master copy of params
+
+
+def adamw_init(params) -> AdamWState:
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree.map(f32, params),
+        v=jax.tree.map(f32, params),
+        master=jax.tree.map(lambda p: p.astype(jnp.float32), params),
+    )
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gnorm = jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+    )
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), gnorm
+
+
+def adamw_update(
+    grads,
+    state: AdamWState,
+    lr: jax.Array,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    param_dtype=jnp.bfloat16,
+) -> Tuple[Any, AdamWState]:
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+
+    def upd(g, m, v, master):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mhat = m / bc1
+        vhat = v / bc2
+        new_master = master - lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * master)
+        return m, v, new_master
+
+    flat_g, td = jax.tree.flatten(grads)
+    flat_m = jax.tree.leaves(state.m)
+    flat_v = jax.tree.leaves(state.v)
+    flat_ma = jax.tree.leaves(state.master)
+    new_m, new_v, new_ma = [], [], []
+    for g, m, v, ma in zip(flat_g, flat_m, flat_v, flat_ma):
+        m2, v2, ma2 = upd(g, m, v, ma)
+        new_m.append(m2)
+        new_v.append(v2)
+        new_ma.append(ma2)
+    params = jax.tree.unflatten(td, [ma.astype(param_dtype) for ma in new_ma])
+    return params, AdamWState(
+        step=step,
+        m=jax.tree.unflatten(td, new_m),
+        v=jax.tree.unflatten(td, new_v),
+        master=jax.tree.unflatten(td, new_ma),
+    )
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr_at(step: jax.Array) -> jax.Array:
+        t = step.astype(jnp.float32)
+        warm = base_lr * t / jnp.maximum(warmup, 1)
+        prog = jnp.clip((t - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = 0.5 * base_lr * (1.0 + jnp.cos(jnp.pi * prog))
+        return jnp.where(t < warmup, warm, cos)
+
+    return lr_at

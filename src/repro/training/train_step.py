@@ -1,0 +1,107 @@
+"""Train step factory: loss -> grads -> (optional compression) -> AdamW.
+
+Distribution knobs (DESIGN.md §5):
+  * **microbatching** — grad accumulation via lax.scan over microbatches; each
+    microbatch's backward overlaps the previous one's gradient all-reduce
+    (XLA schedules the psum of chunk i during compute of chunk i+1, the
+    standard compute/comm overlap);
+  * **gradient compression** — int8 + error feedback on the cross-pod path
+    (hook point; state rides in TrainState);
+  * **donate** — the caller jits with donate_argnums so params/opt buffers
+    are reused in place.
+
+Under pjit, collectives are inserted by GSPMD from the shardings; this module
+stays mesh-agnostic.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.compression import CompressionState, int8_compress, int8_decompress
+from repro.models.model import Model
+from repro.training.optimizer import AdamWState, adamw_init, adamw_update, clip_by_global_norm
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+    comp: Optional[Any]  # CompressionState tree or None
+
+
+def train_state_init(model: Model, key: jax.Array, compression: bool = False) -> TrainState:
+    params = model.init(key)
+    comp = None
+    if compression:
+        comp = jax.tree.map(lambda p: CompressionState.init(p.shape), params)
+    return TrainState(params, adamw_init(params), comp)
+
+
+def _split_microbatches(batch: Dict[str, jax.Array], n: int) -> Dict[str, jax.Array]:
+    def split(x):
+        B = x.shape[0]
+        assert B % n == 0, (B, n)
+        return x.reshape((n, B // n) + x.shape[1:])
+
+    return jax.tree.map(split, batch)
+
+
+def make_train_step(
+    model: Model,
+    lr_schedule: Callable[[jax.Array], jax.Array],
+    *,
+    microbatches: int = 1,
+    grad_clip: float = 1.0,
+    compression: bool = False,
+    weight_decay: float = 0.1,
+):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def loss_fn(params, mb):
+        loss, metrics = model.loss(params, mb)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state: TrainState, batch: Dict[str, jax.Array]):
+        if microbatches == 1:
+            (loss, metrics), grads = grad_fn(state.params, batch)
+        else:
+            mbs = _split_microbatches(batch, microbatches)
+
+            def acc_body(carry, mb):
+                gsum, lsum = carry
+                (l, _), g = grad_fn(state.params, mb)
+                gsum = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), gsum, g)
+                return (gsum, lsum + l), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (gsum, lsum), _ = jax.lax.scan(acc_body, (zeros, jnp.float32(0)), mbs)
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            loss = lsum / microbatches
+            metrics = {}
+
+        comp_state = state.comp
+        if compression and comp_state is not None:
+            # int8 + error feedback on the DP gradient path (cross-pod wire
+            # bytes /= 4; see EXPERIMENTS.md §Perf collective modeling)
+            def comp_one(g, cs):
+                q, scale, cs2 = int8_compress(g, cs)
+                return int8_decompress(q, scale), cs2
+
+            flat_g, td = jax.tree.flatten(grads)
+            flat_c = jax.tree.leaves(comp_state, is_leaf=lambda x: isinstance(x, CompressionState))
+            outs = [comp_one(g, c) for g, c in zip(flat_g, flat_c)]
+            grads = jax.tree.unflatten(td, [o[0] for o in outs])
+            comp_state = jax.tree.unflatten(td, [o[1] for o in outs])
+
+        grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        lr = lr_schedule(state.opt.step)
+        params, opt = adamw_update(grads, state.opt, lr, weight_decay=weight_decay)
+        out_metrics = {"loss": loss, "gnorm": gnorm, "lr": lr, "step": opt.step}
+        return TrainState(params, opt, comp_state), out_metrics
+
+    return train_step

@@ -1,0 +1,5 @@
+from repro.utils.bytesize import human_bytes, parse_bytes
+from repro.utils.timing import Timer, SimClock
+from repro.utils.logging import get_logger
+
+__all__ = ["human_bytes", "parse_bytes", "Timer", "SimClock", "get_logger"]

@@ -1,0 +1,22 @@
+"""Thin logging shim: consistent formatting, env-controlled verbosity."""
+from __future__ import annotations
+
+import logging
+import os
+import sys
+
+_CONFIGURED = False
+
+
+def get_logger(name: str) -> logging.Logger:
+    global _CONFIGURED
+    if not _CONFIGURED:
+        level = os.environ.get("REPRO_LOG", "INFO").upper()
+        handler = logging.StreamHandler(sys.stderr)
+        handler.setFormatter(logging.Formatter("%(asctime)s %(name)s %(levelname)s %(message)s", "%H:%M:%S"))
+        root = logging.getLogger("repro")
+        root.addHandler(handler)
+        root.setLevel(getattr(logging, level, logging.INFO))
+        root.propagate = False
+        _CONFIGURED = True
+    return logging.getLogger(f"repro.{name}" if not name.startswith("repro") else name)

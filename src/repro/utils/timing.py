@@ -1,0 +1,50 @@
+"""Wall-clock timing and a deterministic simulated clock.
+
+The broker/autoscaler layers accept any object with a ``now()`` method; tests
+and benchmarks use :class:`SimClock` so queue/lease/scaling behaviour is fully
+deterministic, while production wiring would pass a wall clock.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+
+class Timer:
+    """Context-manager stopwatch: ``with Timer() as t: ...; t.seconds``."""
+
+    def __enter__(self) -> "Timer":
+        self._t0 = time.perf_counter()
+        self.seconds = 0.0
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.seconds = time.perf_counter() - self._t0
+
+
+@dataclass
+class SimClock:
+    """Deterministic manually-advanced clock (seconds)."""
+
+    t: float = 0.0
+    history: list = field(default_factory=list)
+
+    def now(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> float:
+        assert dt >= 0, "time cannot go backwards"
+        self.t += dt
+        self.history.append(self.t)
+        return self.t
+
+
+class WallClock:
+    """Real clock with the same interface as SimClock."""
+
+    def now(self) -> float:
+        return time.time()
+
+    def advance(self, dt: float) -> float:  # pragma: no cover - real sleep
+        time.sleep(dt)
+        return self.now()

@@ -1,0 +1,208 @@
+"""Unit + behaviour tests for the de-identification core (paper §Method)."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    AnonymizerStage,
+    DeidPipeline,
+    FilterStage,
+    Outcome,
+    PseudonymService,
+    TrustMode,
+    build_request,
+)
+from repro.core.manifest import Manifest
+from repro.core.rules import (
+    parse_anonymizer_script,
+    parse_filter_script,
+    parse_scrub_script,
+    emit_scrub_script,
+)
+from repro.core.scripts import DEFAULT_ANONYMIZER_SCRIPT, DEFAULT_FILTER_SCRIPT
+from repro.dicom.devices import DeviceKey, registry
+from repro.dicom.generator import PROBLEM_KINDS, StudyGenerator
+
+
+@pytest.fixture(scope="module")
+def pipe():
+    return DeidPipeline(recompress=False)  # recompress covered separately
+
+
+@pytest.fixture(scope="module")
+def pseudo():
+    return PseudonymService("IRB-1", TrustMode.POST_IRB, key=b"t" * 32)
+
+
+class TestFilterStage:
+    @pytest.mark.parametrize("kind", PROBLEM_KINDS)
+    def test_problem_instances_rejected(self, gen, pipe, kind):
+        s = gen.gen_study(f"F-{kind}", modality="CT", n_images=0, problem=kind)
+        decision = pipe.filter(s.datasets[0])
+        assert not decision.accepted, kind
+        assert decision.rule is not None
+
+    def test_normal_ct_accepted(self, gen, pipe):
+        s = gen.gen_study("F-OK", modality="CT", n_images=1)
+        assert pipe.filter(s.datasets[0]).accepted
+
+    def test_us_whitelist_miss_rejected(self, gen, pipe):
+        s = gen.gen_study("F-US", device=DeviceKey("US", "UnknownMake", "Mystery-1", 480, 640), n_images=1)
+        d = pipe.filter(s.datasets[0])
+        assert not d.accepted and "us_not_whitelisted" in d.rule
+
+    def test_us_whitelist_hit_accepted(self, gen, pipe):
+        key = registry().all_us_variants()[0]
+        s = gen.gen_study("F-USOK", device=key, n_images=1)
+        assert pipe.filter(s.datasets[0]).accepted
+
+    def test_exemption_bypass(self, gen):
+        # derived CT localizer is exempted from the DERIVED reject
+        s = gen.gen_study("F-EX", modality="CT", n_images=1)
+        ds = s.datasets[0]
+        ds["ImageType"] = "DERIVED\\PRIMARY\\LOCALIZER"
+        stage = FilterStage(DEFAULT_FILTER_SCRIPT)
+        assert stage(ds).accepted
+
+    def test_parse_rejects_bad_rules(self):
+        with pytest.raises(ValueError):
+            parse_filter_script("rejekt Modality equals \"CT\"")
+        with pytest.raises(ValueError):
+            parse_filter_script("reject Modality frobs \"CT\"")
+        with pytest.raises(ValueError):
+            parse_filter_script("reject builtin:nope")
+
+
+class TestAnonymizer:
+    def test_phi_fields_removed(self, gen, pipe, pseudo):
+        s = gen.gen_study("A-1", modality="MR", n_images=1)
+        req = build_request(pseudo, s.accession, s.mrn)
+        out, entry = pipe.process_instance(s.datasets[0], req)
+        for kw in ("PatientBirthDate", "ReferringPhysicianName", "InstitutionName",
+                   "OperatorsName", "PatientComments", "StudyDescription"):
+            assert kw not in out, kw
+        assert out["PatientID"] == req.anon_mrn
+        assert out["AccessionNumber"] == req.anon_accession
+        assert not out.private
+
+    def test_uids_remapped_consistently(self, gen, pipe, pseudo):
+        s = gen.gen_study("A-2", modality="CT", n_images=2)
+        req = build_request(pseudo, s.accession, s.mrn)
+        outs = [pipe.process_instance(d, req)[0] for d in s.datasets]
+        # same study/series -> same remapped study/series UID; unique SOP UIDs
+        assert outs[0]["StudyInstanceUID"] == outs[1]["StudyInstanceUID"]
+        assert outs[0]["StudyInstanceUID"] != s.study_uid
+        assert outs[0]["SOPInstanceUID"] != outs[1]["SOPInstanceUID"]
+
+    def test_dates_jittered_uniformly(self, gen, pipe, pseudo):
+        s = gen.gen_study("A-3", modality="CT", n_images=1)
+        req = build_request(pseudo, s.accession, s.mrn)
+        out, _ = pipe.process_instance(s.datasets[0], req)
+        assert out["StudyDate"] != s.study_date
+        assert out["StudyDate"] == out["SeriesDate"] == out["AcquisitionDate"]
+        assert req.jitter != 0
+
+    def test_default_remove_policy(self):
+        rules = parse_anonymizer_script("keep Modality\ndefault remove")
+        stage = AnonymizerStage("keep Modality\ndefault remove")
+        from repro.dicom.dataset import DicomDataset
+        ds = DicomDataset()
+        ds["Modality"] = "CT"
+        ds["StationName"] = "STA1"
+        res = stage(ds, {"jitter": "0"})
+        assert "Modality" in res.dataset and "StationName" not in res.dataset
+
+
+class TestPseudonymization:
+    def test_codes_deterministic_and_distinct(self, pseudo):
+        assert pseudo.accession("A1") == pseudo.accession("A1")
+        assert pseudo.accession("A1") != pseudo.accession("A2")
+        assert pseudo.accession("A1") != pseudo.mrn("A1")
+
+    def test_post_irb_relink(self, pseudo):
+        anon = pseudo.accession("ACC-REL")
+        assert pseudo.relink(anon) == "ACC-REL"
+
+    def test_pre_irb_is_irreversible(self):
+        pre = PseudonymService("PRE", TrustMode.PRE_IRB)
+        anon = pre.accession("ACC-X")
+        with pytest.raises(PermissionError):
+            pre.relink(anon)
+        with pytest.raises(PermissionError):
+            pre.linkage_table()
+
+    def test_different_studies_different_codes(self):
+        p1 = PseudonymService("IRB-A", TrustMode.POST_IRB, key=b"a" * 32)
+        p2 = PseudonymService("IRB-B", TrustMode.POST_IRB, key=b"b" * 32)
+        assert p1.accession("A1") != p2.accession("A1")
+        assert p1.jitter_for("M1") != 0 and p2.jitter_for("M1") != 0
+
+    def test_jitter_never_zero_and_bounded(self, pseudo):
+        for i in range(200):
+            j = pseudo.jitter_for(f"M{i}")
+            assert j != 0 and -30 <= j <= 30
+
+    def test_jitter_date_arithmetic(self):
+        assert PseudonymService.jitter_date("20200301", -1) == "20200229"  # leap
+        assert PseudonymService.jitter_date("20191231", 1) == "20200101"
+        assert PseudonymService.jitter_date("", 5) == ""
+
+
+class TestScrubStage:
+    def test_regions_blanked_and_recorded(self, gen, pseudo):
+        pipe = DeidPipeline(recompress=False)
+        s = gen.gen_study("S-1", modality="US", n_images=1)
+        req = build_request(pseudo, s.accession, s.mrn)
+        out, entry = pipe.process_instance(s.datasets[0], req)
+        assert entry.scrub_rects
+        for x, y, w, h in entry.scrub_rects:
+            assert (out.pixels[y : y + h, x : x + w] == 0).all()
+
+    def test_fail_closed_on_us_without_rule(self, gen, pseudo):
+        # bypass the filter to prove scrub re-checks (defense in depth)
+        pipe = DeidPipeline(filter_script="# empty\n", recompress=False)
+        s = gen.gen_study("S-2", device=DeviceKey("US", "UnknownMake", "Mystery-1", 480, 640), n_images=1)
+        req = build_request(pseudo, s.accession, s.mrn)
+        out, entry = pipe.process_instance(s.datasets[0], req)
+        assert out is None and entry.outcome == Outcome.FAILED
+
+    def test_recompression_flag_and_syntax(self, gen, pseudo):
+        pipe = DeidPipeline(recompress=True)
+        s = gen.gen_study("S-3", modality="CT", n_images=1)
+        req = build_request(pseudo, s.accession, s.mrn)
+        out, entry = pipe.process_instance(s.datasets[0], req)
+        assert entry.recompressed and entry.compressed_bytes > 0
+        assert out["TransferSyntaxUID"] == "1.2.840.10008.1.2.4.70"
+
+
+class TestManifest:
+    def test_roundtrip_and_counts(self, gen, pseudo):
+        pipe = DeidPipeline(recompress=False)
+        s = gen.gen_study("M-1", modality="CT", n_images=2, problem="pdf")
+        req = build_request(pseudo, s.accession, s.mrn)
+        _, manifest = pipe.process_study(s, req, worker_id="w7")
+        c = manifest.counts()
+        assert c["anonymized"] == 2 and c["filtered"] == 1
+        m2 = Manifest.from_json(manifest.to_json())
+        assert m2.counts() == c
+        assert all(e.worker_id == "w7" for e in m2.entries)
+
+    def test_manifest_carries_no_phi(self, gen, pseudo):
+        pipe = DeidPipeline(recompress=False)
+        s = gen.gen_study("M-2", modality="CT", n_images=1)
+        req = build_request(pseudo, s.accession, s.mrn)
+        _, manifest = pipe.process_study(s, req)
+        blob = manifest.to_json()
+        assert s.mrn not in blob
+        assert s.patient_name.split("^")[0] not in blob
+        assert s.accession not in blob
+
+
+class TestScrubScriptGeneration:
+    def test_emit_parse_roundtrip(self):
+        text = emit_scrub_script()
+        rules = parse_scrub_script(text)
+        reg = registry()
+        assert len(rules) >= sum(v[1] for v in reg.table2_stats().values())
+        # paper Fig 2b: GE PET/CT fusion regions survive the roundtrip
+        key = ("PT", "GE", "Discovery", 512, 512)
+        assert rules[key] == ((256, 0, 256, 22), (300, 22, 212, 80), (10, 478, 100, 10))

@@ -1,0 +1,164 @@
+"""Dry-run machinery unit tests: HLO analyzer, cell matrix, sharding rules.
+(The real 512-device dry-run runs via launch/dryrun.py; here we validate the
+pieces on the single-device smoke mesh + synthetic HLO.)"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.config.model import SHAPES, cell_runnable
+from repro.config.registry import get_arch, list_archs
+from repro.launch.hlo_analysis import analyze_hlo, split_computations, _trip_count
+from repro.launch.mesh import make_smoke_mesh, mesh_info
+from repro.launch.shardings import fsdp_pspec, logical_rules, spec_to_pspec
+from repro.models import build_model
+from repro.models.spec import TensorSpec
+
+SYNTHETIC_HLO = """
+HloModule test
+
+%body.1 (p: (s32[], f32[16,128])) -> (s32[], f32[16,128]) {
+  %p = (s32[], f32[16,128]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[16,128]{1,0} get-tuple-element(%p), index=1
+  %w = f32[128,128]{1,0} constant({...})
+  %d = f32[16,128]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[16,128]{1,0} all-reduce(%d), replica_groups=[16,16]<=[256], to_apply=%add.1
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[16,128]) tuple(%ni, %ar)
+}
+
+%cond.1 (p: (s32[], f32[16,128])) -> pred[] {
+  %p = (s32[], f32[16,128]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(24)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main.1 (a: f32[16,128]) -> f32[16,128] {
+  %a = f32[16,128]{1,0} parameter(0)
+  %z = s32[] constant(0)
+  %init = (s32[], f32[16,128]) tuple(%z, %a)
+  %w = (s32[], f32[16,128]) while(%init), condition=%cond.1, body=%body.1
+  ROOT %out = f32[16,128]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+class TestHloAnalyzer:
+    def test_while_trip_multiplication(self):
+        res = analyze_hlo(SYNTHETIC_HLO)
+        # dot: 2 * 16*128 * 128 flops, times 24 trips
+        assert res["flops"] == pytest.approx(24 * 2 * 16 * 128 * 128)
+        # all-reduce operand: 16*128*4 bytes times 24
+        assert res["coll_total"] == pytest.approx(24 * 16 * 128 * 4)
+        assert res["coll_cross"] == 0  # groups of 16 within one pod
+
+    def test_split_and_trip(self):
+        comps = split_computations(SYNTHETIC_HLO)
+        assert {"body.1", "cond.1", "main.1"} <= set(comps)
+        assert _trip_count(comps["cond.1"]) == 24
+
+    def test_cross_pod_attribution(self):
+        hlo = SYNTHETIC_HLO.replace(
+            "replica_groups=[16,16]<=[256]", "replica_groups=[256,2]<=[2,256]T(1,0)"
+        )
+        res = analyze_hlo(hlo)
+        assert res["coll_cross"] == pytest.approx(24 * 16 * 128 * 4)
+
+    def test_real_program_flops_track_model_flops(self):
+        """Tiny end-to-end check on the 1-device mesh: analyzer flops within
+        2x of the analytic 6ND for a reduced dense model train step."""
+        from repro.training import cosine_schedule, make_train_step, train_state_init
+
+        cfg = get_arch("qwen2-0.5b").reduced()
+        model = build_model(cfg)
+        state = train_state_init(model, jax.random.PRNGKey(0))
+        B, S = 2, 128
+        batch = {
+            "tokens": jnp.zeros((B, S), jnp.int32),
+            "labels": jnp.zeros((B, S), jnp.int32),
+        }
+        step = make_train_step(model, cosine_schedule(1e-3, 0, 10))
+        compiled = jax.jit(step).lower(state, batch).compile()
+        res = analyze_hlo(compiled.as_text())
+        from repro.models.spec import param_count
+
+        n = param_count(model.param_specs())
+        model_flops = 6 * n * B * S
+        assert 0.5 < res["flops"] / model_flops < 3.0, (res["flops"], model_flops)
+
+
+class TestCellMatrix:
+    def test_40_cells_with_spec_skips(self):
+        cells = [(a, s) for a in list_archs() for s in SHAPES]
+        assert len(cells) == 40
+        runnable = [(a, s) for a, s in cells if cell_runnable(get_arch(a), SHAPES[s])[0]]
+        skipped = [(a, s) for a, s in cells if not cell_runnable(get_arch(a), SHAPES[s])[0]]
+        assert len(runnable) == 31
+        # encoder: no decode cells
+        assert ("hubert-xlarge", "decode_32k") in skipped
+        assert ("hubert-xlarge", "long_500k") in skipped
+        # long_500k only for ssm/hybrid
+        assert ("zamba2-2.7b", "long_500k") in runnable
+        assert ("falcon-mamba-7b", "long_500k") in runnable
+        assert ("qwen1.5-110b", "long_500k") in skipped
+
+    def test_skip_reasons_documented(self):
+        ok, reason = cell_runnable(get_arch("qwen1.5-110b"), SHAPES["long_500k"])
+        assert not ok and "sub-quadratic" in reason
+        ok, reason = cell_runnable(get_arch("hubert-xlarge"), SHAPES["decode_32k"])
+        assert not ok and "encoder" in reason
+
+
+class TestShardingRules:
+    def test_smoke_mesh_has_production_axes(self):
+        mesh = make_smoke_mesh()
+        info = mesh_info(mesh)
+        assert set(info["axes"]) == {"data", "model"}
+        assert not info["multi_pod"]
+
+    def test_moe_rules_divisibility(self):
+        mesh = make_smoke_mesh()
+        # force tp=16 semantics by checking against arch config directly
+        olmoe, mixtral = get_arch("olmoe-1b-7b"), get_arch("mixtral-8x22b")
+
+        class FakeMesh:
+            shape = {"model": 16, "data": 16}
+            axis_names = ("data", "model")
+
+        r_olmoe = logical_rules(olmoe, FakeMesh())
+        r_mixtral = logical_rules(mixtral, FakeMesh())
+        assert r_olmoe["experts"] == "model" and r_olmoe["mlp"] is None
+        assert r_mixtral["experts"] is None and r_mixtral["mlp"] == "model"
+
+    def test_fsdp_pspec_shards_large_tensors_only(self):
+        class FakeMesh:
+            shape = {"model": 16, "data": 16}
+            axis_names = ("data", "model")
+
+        rules = {"embed": None, "heads": "model"}
+        big = TensorSpec((4096, 4096), ("embed", "heads"))
+        small = TensorSpec((4096,), ("embed",))
+        assert fsdp_pspec(big, rules, FakeMesh()) == P("data", "model")
+        assert fsdp_pspec(small, rules, FakeMesh()) == P(None)
+
+    @pytest.mark.parametrize("arch", list_archs())
+    def test_param_pspecs_never_reuse_axis(self, arch):
+        """No tensor may map the same mesh axis twice (GSPMD error)."""
+        class FakeMesh:
+            shape = {"model": 16, "data": 16}
+            axis_names = ("data", "model")
+
+        cfg = get_arch(arch)
+        rules = logical_rules(cfg, FakeMesh())
+        model = build_model(cfg)
+        specs = jax.tree.leaves(
+            model.param_specs(), is_leaf=lambda x: isinstance(x, TensorSpec)
+        )
+        for s in specs:
+            spec = fsdp_pspec(s, rules, FakeMesh())
+            flat = [a for a in spec if a is not None]
+            assert len(flat) == len(set(flat)), (arch, s, spec)

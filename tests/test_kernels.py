@@ -1,0 +1,114 @@
+"""Per-kernel allclose tests: Pallas (interpret mode) vs pure-jnp oracle vs
+host reference, swept over shapes and dtypes."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.scrub import numpy_blank
+from repro.dicom import codec
+from repro.kernels.jls.ops import encode_batch, jls_residuals
+from repro.kernels.jls.ref import residuals_ref
+from repro.kernels.phi_detect.ops import edge_density, audit_image, suspicious_tiles
+from repro.kernels.phi_detect.ref import edge_density_ref
+from repro.kernels.scrub.ops import blank_fn, pack_rects, scrub_images
+from repro.kernels.scrub.ref import scrub_ref
+
+SHAPES = [(1, 32, 128), (2, 100, 170), (3, 256, 256), (1, 97, 513)]
+DTYPES = [np.uint8, np.uint16, np.float32]
+
+
+class TestScrubKernel:
+    @pytest.mark.parametrize("shape", SHAPES)
+    @pytest.mark.parametrize("dtype", DTYPES)
+    def test_matches_ref_and_numpy(self, rng, shape, dtype):
+        imgs = (rng.random(shape) * 200).astype(dtype)
+        N, H, W = shape
+        rl = []
+        for i in range(N):
+            rl.append(
+                [
+                    (0, 0, W, max(1, H // 8)),
+                    (int(rng.integers(W)), int(rng.integers(H)), 40, 25),
+                ][: 1 + i % 2]
+            )
+        rects = pack_rects(rl, R=3)
+        out_k = np.asarray(scrub_images(jnp.asarray(imgs), rects))
+        out_r = np.asarray(scrub_ref(jnp.asarray(imgs), jnp.asarray(rects)))
+        out_n = np.stack([numpy_blank(imgs[i], rl[i]) for i in range(N)])
+        np.testing.assert_array_equal(out_k, out_r)
+        np.testing.assert_array_equal(out_k, out_n)
+
+    def test_padding_rects_are_noops(self, rng):
+        imgs = (rng.random((2, 64, 128)) * 200).astype(np.uint16)
+        rects = np.zeros((2, 4, 4), np.int32)  # all padding
+        out = np.asarray(scrub_images(jnp.asarray(imgs), rects))
+        np.testing.assert_array_equal(out, imgs)
+
+    def test_rect_clipping_at_borders(self, rng):
+        imgs = (rng.random((1, 50, 140)) * 200).astype(np.uint8)
+        rects = pack_rects([[(130, 45, 99, 99)]])  # overhangs both edges
+        out = np.asarray(scrub_images(jnp.asarray(imgs), rects))
+        assert (out[0, 45:, 130:] == 0).all()
+        assert (out[0, :45, :130] == imgs[0, :45, :130]).all()
+
+    def test_blank_fn_adapter(self, rng):
+        img = (rng.random((70, 90)) * 4000).astype(np.uint16)
+        rl = [(5, 5, 30, 20)]
+        np.testing.assert_array_equal(blank_fn(img, rl), numpy_blank(img, rl))
+
+    @pytest.mark.parametrize("block", [(32, 128), (64, 256), (256, 512)])
+    def test_block_shape_sweep(self, rng, block):
+        imgs = (rng.random((2, 300, 600)) * 200).astype(np.uint16)
+        rl = [[(10, 10, 500, 100)], [(0, 250, 600, 50)]]
+        rects = pack_rects(rl)
+        out_k = np.asarray(scrub_images(jnp.asarray(imgs), rects, block=block))
+        out_n = np.stack([numpy_blank(imgs[i], rl[i]) for i in range(2)])
+        np.testing.assert_array_equal(out_k, out_n)
+
+
+class TestPhiDetectKernel:
+    @pytest.mark.parametrize("shape", [(1, 64, 128), (2, 96, 256)])
+    @pytest.mark.parametrize("dtype", [np.uint8, np.uint16])
+    def test_matches_ref(self, rng, shape, dtype):
+        imgs = (rng.random(shape) * (255 if dtype == np.uint8 else 4095)).astype(dtype)
+        den_k = np.asarray(edge_density(imgs, tile=(32, 128)))
+        thresh = (255.0 if dtype == np.uint8 else 4095.0) * 0.25
+        den_r = np.asarray(edge_density_ref(jnp.asarray(imgs), thresh, (32, 128)))
+        np.testing.assert_allclose(den_k, den_r, atol=1e-6)
+
+    def test_detects_burned_in_text(self, gen):
+        study = gen.gen_study("PHI-1", modality="US", n_images=1)
+        img = study.datasets[0].pixels
+        assert audit_image(img), "synthetic burn-in must be flagged"
+        rects = study.phi_rects[study.datasets[0]["SOPInstanceUID"]]
+        assert not audit_image(numpy_blank(img, rects)), "scrubbed image must be clean"
+
+    def test_flat_image_not_flagged(self):
+        img = np.full((256, 256), 100, np.uint8)
+        assert not suspicious_tiles(img[None]).any()
+
+
+class TestJlsKernel:
+    @pytest.mark.parametrize("sv", list(range(1, 8)))
+    @pytest.mark.parametrize("dtype,bits", [(np.uint8, 8), (np.uint16, 16)])
+    def test_matches_ref_and_codec(self, rng, sv, dtype, bits):
+        img = (rng.random((2, 70, 90)) * ((1 << bits) - 1)).astype(dtype)
+        rk = np.asarray(jls_residuals(img, sv=sv))
+        rr = np.asarray(residuals_ref(jnp.asarray(img), sv, bits))
+        rc = np.stack([codec.residuals(img[i], sv) for i in range(2)])
+        np.testing.assert_array_equal(rk, rr)
+        np.testing.assert_array_equal(rk, rc)
+
+    @pytest.mark.parametrize("bh", [8, 32, 64])
+    def test_block_height_sweep(self, rng, bh):
+        img = (rng.random((1, 130, 64)) * 4095).astype(np.uint16)
+        rk = np.asarray(jls_residuals(img, sv=4, bh=bh))
+        rc = codec.residuals(img[0], 4)[None]
+        np.testing.assert_array_equal(rk, rc)
+
+    def test_encode_batch_byte_identical(self, rng):
+        img = (rng.random((2, 48, 64)) * 4095).astype(np.uint16)
+        bufs = encode_batch(img, sv=1)
+        for i in range(2):
+            assert bufs[i] == codec.encode(img[i], 1)
+            np.testing.assert_array_equal(codec.decode(bufs[i]), img[i])

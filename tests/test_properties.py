@@ -1,0 +1,147 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core import PseudonymService, TrustMode, numpy_blank
+from repro.core.rules import parse_scrub_script
+from repro.dicom import codec
+from repro.kernels.scrub.ops import pack_rects, scrub_images
+from repro.queueing import Autoscaler, AutoscalerConfig, Broker
+from repro.utils.bytesize import human_bytes, parse_bytes
+from repro.utils.timing import SimClock
+
+_settings = settings(max_examples=25, deadline=None, suppress_health_check=[HealthCheck.too_slow])
+
+rects_st = st.lists(
+    st.tuples(
+        st.integers(0, 90), st.integers(0, 60), st.integers(0, 120), st.integers(0, 80)
+    ),
+    min_size=0,
+    max_size=4,
+)
+
+
+class TestScrubProperties:
+    @given(rects=rects_st, seed=st.integers(0, 2**31 - 1))
+    @_settings
+    def test_idempotent_and_monotone(self, rects, seed):
+        """Scrubbing twice == scrubbing once; scrubbed pixels are only ever
+        cleared, never invented; pixels outside all rects are untouched."""
+        rng = np.random.default_rng(seed)
+        img = (rng.random((64, 96)) * 4000).astype(np.uint16)
+        once = numpy_blank(img, rects)
+        twice = numpy_blank(once, rects)
+        np.testing.assert_array_equal(once, twice)
+        assert (once <= img).all()
+        mask = np.zeros_like(img, bool)
+        for x, y, w, h in rects:
+            mask[y : y + h, x : x + w] = True
+        np.testing.assert_array_equal(once[~mask], img[~mask])
+        assert (once[mask] == 0).all()
+
+    @given(rects=rects_st, seed=st.integers(0, 2**31 - 1))
+    @_settings
+    def test_kernel_equals_reference(self, rects, seed):
+        rng = np.random.default_rng(seed)
+        img = (rng.random((2, 64, 96)) * 250).astype(np.uint8)
+        packed = pack_rects([rects, rects])
+        out = np.asarray(scrub_images(jnp.asarray(img), packed))
+        ref = np.stack([numpy_blank(img[i], rects) for i in range(2)])
+        np.testing.assert_array_equal(out, ref)
+
+
+class TestCodecProperties:
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        sv=st.sampled_from([1, 2, 4, 7]),
+        h=st.integers(4, 40),
+        w=st.integers(4, 40),
+        bits=st.sampled_from([8, 16]),
+    )
+    @_settings
+    def test_roundtrip_exact(self, seed, sv, h, w, bits):
+        rng = np.random.default_rng(seed)
+        dtype = np.uint8 if bits == 8 else np.uint16
+        img = (rng.random((h, w)) * ((1 << bits) - 1)).astype(dtype)
+        np.testing.assert_array_equal(codec.decode(codec.encode(img, sv)), img)
+
+    @given(seed=st.integers(0, 2**31 - 1))
+    @_settings
+    def test_smooth_images_compress(self, seed):
+        rng = np.random.default_rng(seed)
+        ramp = np.cumsum(rng.integers(0, 3, (64, 64)), axis=1).astype(np.uint16)
+        assert codec.compression_ratio(ramp) > 1.5
+
+
+class TestPseudonymProperties:
+    @given(values=st.lists(st.text(min_size=1, max_size=20), min_size=2, max_size=20, unique=True))
+    @_settings
+    def test_injective_on_distinct_inputs(self, values):
+        svc = PseudonymService("IRB-P", TrustMode.POST_IRB, key=b"p" * 32)
+        codes = [svc.accession(v) for v in values]
+        assert len(set(codes)) == len(values)
+
+    @given(
+        mrn=st.text(min_size=1, max_size=16),
+        da=st.dates(min_value=__import__("datetime").date(1900, 1, 1),
+                    max_value=__import__("datetime").date(2099, 12, 31)),
+    )
+    @_settings
+    def test_jitter_roundtrips_through_dates(self, mrn, da):
+        svc = PseudonymService("IRB-P", TrustMode.POST_IRB, key=b"p" * 32)
+        j = svc.jitter_for(mrn)
+        s = da.strftime("%Y%m%d")
+        out = PseudonymService.jitter_date(s, j)
+        back = PseudonymService.jitter_date(out, -j)
+        assert back == s and out != s
+
+
+class TestQueueProperties:
+    @given(
+        n=st.integers(1, 30),
+        vis=st.floats(1.0, 60.0),
+        seed=st.integers(0, 1000),
+    )
+    @_settings
+    def test_conservation(self, n, vis, seed):
+        """Messages are never lost or duplicated: acked + available + leased +
+        dead == published, at every step of an arbitrary schedule."""
+        rng = np.random.default_rng(seed)
+        clock = SimClock()
+        b = Broker(clock, visibility_timeout=vis, max_deliveries=3)
+        for i in range(n):
+            b.publish(f"k{i}", {}, nbytes=1)
+        for _ in range(100):
+            op = rng.integers(0, 4)
+            if op == 0:
+                b.pull(f"w{rng.integers(3)}")
+            elif op == 1 and b._leased:
+                b.ack(int(rng.choice(list(b._leased))))
+            elif op == 2 and b._leased:
+                b.nack(int(rng.choice(list(b._leased))))
+            else:
+                clock.advance(float(rng.random() * vis))
+            s = b.stats()
+            assert b.total_acked + s.available + s.leased + s.dead_lettered == n
+
+    @given(backlog=st.integers(0, 10**13), window=st.floats(60, 7200))
+    @_settings
+    def test_autoscaler_bounds(self, backlog, window):
+        clock = SimClock()
+        b = Broker(clock)
+        cfg = AutoscalerConfig(delivery_window=window, max_instances=64)
+        a = Autoscaler(b, cfg, clock)
+        t = a.target_for(backlog)
+        assert cfg.min_instances <= t <= cfg.max_instances
+        if backlog == 0:
+            assert t == cfg.min_instances
+
+
+class TestUtilProperties:
+    @given(n=st.integers(0, 10**15))
+    @_settings
+    def test_bytes_roundtrip_monotone(self, n):
+        s = human_bytes(n)
+        approx = parse_bytes(s)
+        assert abs(approx - n) <= max(0.01 * n, 1000)

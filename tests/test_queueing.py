@@ -1,0 +1,232 @@
+"""Queue/autoscaler/worker tests: delivery semantics, fault tolerance,
+exactly-once effect, straggler mitigation, checkpoint/restart."""
+import pytest
+
+from repro.core import DeidPipeline, PseudonymService, TrustMode
+from repro.dicom.generator import StudyGenerator
+from repro.queueing import (
+    Autoscaler,
+    AutoscalerConfig,
+    Broker,
+    DeidWorker,
+    FailureInjector,
+    Journal,
+    WorkerPool,
+)
+from repro.queueing.server import DeidService, RequestState
+from repro.storage.object_store import StudyStore
+from repro.utils.timing import SimClock
+
+
+def _env(tmp_path, n_studies=4, seed=7, n_images=2, clock=None):
+    """Build a small lake + service + pool environment."""
+    clock = clock or SimClock()
+    gen = StudyGenerator(seed)
+    lake = StudyStore("lake", key=b"lake-key")
+    mrns = {}
+    for i in range(n_studies):
+        acc = f"ACC{i:04d}"
+        s = gen.gen_study(acc, modality="CT", n_images=n_images)
+        lake.put_study(acc, s)
+        mrns[acc] = s.mrn
+    broker = Broker(clock, visibility_timeout=30.0)
+    journal = Journal(tmp_path / "journal.jsonl")
+    service = DeidService(broker, lake, journal)
+    service.register_study("IRB-9", TrustMode.POST_IRB)
+    dest = StudyStore("researcher")
+    pipeline = DeidPipeline(recompress=False)
+
+    def make_worker(wid: str) -> DeidWorker:
+        return DeidWorker(wid, pipeline, lake, dest, journal)
+
+    return clock, broker, journal, service, dest, make_worker, mrns
+
+
+class TestBroker:
+    def test_lease_ack_lifecycle(self):
+        b = Broker(SimClock(), visibility_timeout=10)
+        b.publish("k1", {"x": 1}, nbytes=100)
+        msgs = b.pull("w0")
+        assert len(msgs) == 1 and b.stats().leased == 1
+        assert b.ack(msgs[0].msg_id)
+        assert b.empty()
+
+    def test_lease_expiry_redelivers(self):
+        clock = SimClock()
+        b = Broker(clock, visibility_timeout=10)
+        b.publish("k1", {}, nbytes=1)
+        b.pull("w0")
+        clock.advance(11)
+        msgs = b.pull("w1")
+        assert len(msgs) == 1 and msgs[0].deliveries == 2
+        assert b.total_redelivered == 1
+
+    def test_dead_letter_after_max_deliveries(self):
+        clock = SimClock()
+        b = Broker(clock, visibility_timeout=5, max_deliveries=3)
+        b.publish("poison", {}, nbytes=1)
+        for _ in range(3):
+            b.pull("w0")
+            clock.advance(6)
+        b.pull("w0")
+        assert b.stats().dead_lettered == 1
+        assert b.empty()
+
+    def test_nack_immediate_redelivery(self):
+        b = Broker(SimClock())
+        b.publish("k", {}, nbytes=1)
+        m = b.pull("w0")[0]
+        b.nack(m.msg_id)
+        assert b.stats().available == 1
+
+    def test_ack_after_expiry_is_noop(self):
+        clock = SimClock()
+        b = Broker(clock, visibility_timeout=5)
+        b.publish("k", {}, nbytes=1)
+        m = b.pull("w0")[0]
+        clock.advance(6)
+        b.pull("w1")
+        assert not b.ack(m.msg_id)
+
+
+class TestAutoscaler:
+    def test_scales_with_backlog_and_window(self):
+        clock = SimClock()
+        b = Broker(clock)
+        cfg = AutoscalerConfig(delivery_window=3600, per_instance_throughput=1e6, max_instances=16)
+        a = Autoscaler(b, cfg, clock)
+        b.publish("k", {}, nbytes=10 * 3600 * 1_000_000)  # needs 10 instances
+        assert a.tick() == 10
+
+    def test_empty_queue_deletes_pool(self):
+        clock = SimClock()
+        b = Broker(clock)
+        a = Autoscaler(b, AutoscalerConfig(min_instances=0), clock)
+        b.publish("k", {}, nbytes=10**9)
+        assert a.tick() >= 1
+        m = b.pull("w0")[0]
+        b.ack(m.msg_id)
+        assert a.tick() == 0  # paper: instances deleted once queue is empty
+
+    def test_window_pressure_increases_target(self):
+        clock = SimClock()
+        b = Broker(clock, visibility_timeout=10**6)
+        cfg = AutoscalerConfig(delivery_window=1000, per_instance_throughput=1e6, max_instances=1000)
+        a = Autoscaler(b, cfg, clock)
+        b.publish("k", {}, nbytes=500 * 1_000_000)
+        t_early = a.tick()
+        clock.advance(900)  # only 100s of window left
+        t_late = a.tick()
+        assert t_late > t_early
+
+    def test_cost_accounting(self):
+        clock = SimClock()
+        b = Broker(clock)
+        cfg = AutoscalerConfig(per_instance_throughput=1e6, instance_cost_per_hour=1.0)
+        a = Autoscaler(b, cfg, clock)
+        b.publish("k", {}, nbytes=3600 * 1_000_000)
+        a.tick()
+        clock.advance(3600)
+        a.tick()
+        assert a.cost_usd() == pytest.approx(a.instance_seconds / 3600)
+
+
+class TestWorkerPool:
+    def test_clean_drain(self, tmp_path):
+        clock, broker, journal, service, dest, make_worker, mrns = _env(tmp_path)
+        service.submit("IRB-9", list(mrns), mrns)
+        pool = WorkerPool(broker, Autoscaler(broker, AutoscalerConfig(), clock), make_worker)
+        report = pool.drain()
+        assert report.processed == len(mrns)
+        assert report.crashes == 0
+        assert broker.empty()
+        states = service.request_states("IRB-9")
+        assert all(s is RequestState.DONE for s in states.values())
+
+    def test_crash_recovery_via_redelivery(self, tmp_path):
+        clock, broker, journal, service, dest, make_worker, mrns = _env(tmp_path)
+        service.submit("IRB-9", list(mrns), mrns)
+        injector = FailureInjector(crash_once_keys=frozenset({f"IRB-9/{a}" for a in list(mrns)[:2]}))
+        pool = WorkerPool(broker, Autoscaler(broker, AutoscalerConfig(), clock), make_worker, injector)
+        report = pool.drain()
+        assert report.crashes == 2
+        assert report.redeliveries >= 2
+        assert report.processed == len(mrns)  # everything still completed
+
+    def test_exactly_once_under_chaos(self, tmp_path):
+        clock, broker, journal, service, dest, make_worker, mrns = _env(tmp_path, n_studies=6)
+        service.submit("IRB-9", list(mrns), mrns)
+        injector = FailureInjector(crash_rate=0.3)
+        pool = WorkerPool(broker, Autoscaler(broker, AutoscalerConfig(), clock), make_worker, injector)
+        report = pool.drain()
+        merged = journal.merged_manifest("IRB-9")
+        # every study completed exactly once despite crashes
+        assert journal.completed_keys() == {f"IRB-9/{a}" for a in mrns}
+        assert report.processed == len(mrns)
+
+    def test_straggler_speculative_redispatch(self, tmp_path):
+        clock, broker, journal, service, dest, make_worker, mrns = _env(tmp_path, n_studies=3)
+        broker.visibility_timeout = 10_000  # lease never expires on its own
+        service.submit("IRB-9", list(mrns), mrns)
+        injector = FailureInjector(straggler_rate=0.4, slow_factor=400.0)
+        pool = WorkerPool(
+            broker,
+            Autoscaler(broker, AutoscalerConfig(), clock),
+            make_worker,
+            injector,
+            straggler_age=60.0,
+        )
+        report = pool.drain()
+        assert report.processed == len(mrns)
+        # duplicates from speculation were deduped, not double-delivered
+        assert report.deduped == report.speculative or report.speculative == 0
+
+    def test_restart_resumes_from_journal(self, tmp_path):
+        clock, broker, journal, service, dest, make_worker, mrns = _env(tmp_path)
+        service.submit("IRB-9", list(mrns), mrns)
+        # process only the first two messages, then "lose" the pool
+        w = make_worker("w0")
+        for _ in range(2):
+            msg = broker.pull("w0")[0]
+            w.process(broker, msg)
+        done_before = set(journal.completed_keys())
+        assert len(done_before) == 2
+        journal.close()
+
+        # restart: fresh journal object from the same file, resubmit everything
+        journal2 = Journal(journal.path)
+        assert journal2.completed_keys() == done_before
+        service2 = DeidService(broker, service.lake, journal2)
+        service2.register_study("IRB-9", TrustMode.POST_IRB)
+        records = service2.submit("IRB-9", list(mrns), mrns)
+        assert sum(1 for r in records if r.state is RequestState.DONE) == 2
+        pipeline = DeidPipeline(recompress=False)
+
+        def mw(wid):
+            return DeidWorker(wid, pipeline, service.lake, dest, journal2)
+
+        pool = WorkerPool(broker, Autoscaler(broker, AutoscalerConfig(), clock), mw)
+        report = pool.drain()
+        assert journal2.completed_keys() == {f"IRB-9/{a}" for a in mrns}
+        # the two already-done studies were deduped on redelivery, not redone
+        assert report.processed == len(mrns) - 2
+
+
+class TestService:
+    def test_validation_rejects_unknown_and_optout(self, tmp_path):
+        clock, broker, journal, service, dest, make_worker, mrns = _env(tmp_path)
+        service.mark_ineligible("ACC0000")
+        recs = service.submit("IRB-9", ["ACC0000", "NOPE", "ACC0001"], {**mrns, "NOPE": "0"})
+        states = {r.accession: r.state for r in recs}
+        assert states["ACC0000"] is RequestState.REJECTED
+        assert states["NOPE"] is RequestState.REJECTED
+        assert states["ACC0001"] is RequestState.QUEUED
+
+    def test_store_encryption_at_rest(self, tmp_path):
+        lake = StudyStore("lake", key=b"secret")
+        gen = StudyGenerator(0)
+        s = gen.gen_study("E1", modality="CT", n_images=1)
+        lake.put_study("E1", s)
+        raw = lake.store.raw("studies/E1")
+        assert s.mrn.encode() not in raw  # PHI not visible at rest
+        assert lake.get_study("E1").mrn == s.mrn
