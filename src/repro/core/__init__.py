@@ -1,5 +1,6 @@
 # The paper's primary contribution: the on-demand de-identification engine.
 # filter -> scrub -> anonymize stages, pseudonymization, manifests, rule DSL.
+from repro.core.batch import BatchedDeidExecutor
 from repro.core.pipeline import DeidPipeline, DeidRequest, build_request
 from repro.core.pseudonym import PseudonymService, TrustMode
 from repro.core.manifest import Manifest, ManifestEntry, Outcome
@@ -8,6 +9,7 @@ from repro.core.scrub import ScrubStage, ScrubError, numpy_blank
 from repro.core.anonymize import AnonymizerStage
 
 __all__ = [
+    "BatchedDeidExecutor",
     "DeidPipeline",
     "DeidRequest",
     "build_request",

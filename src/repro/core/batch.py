@@ -1,0 +1,202 @@
+"""Shape-bucketed batch executor for the de-id hot path (DESIGN.md §4).
+
+The production pipeline used to push one SOP instance at a time through
+``ScrubStage.__call__`` — a device round-trip per image. A study is hundreds
+of same-shape slices, so the executor restores the batching the hardware
+wants:
+
+* **bucket** — group instances by (H, W, dtype, rect-count bucket). Studies
+  mix 512x512 CT with 2500x2048 DX; dispatches must be shape-uniform.
+* **pad once** — each chunk pads its batch dim to a power of two (capped at
+  ``max_batch``) and its rect dim to the bucket's power-of-two, so the jit
+  cache only ever sees a small, closed set of padded shapes.
+* **dispatch** — one fused scrub+JLS kernel call per chunk
+  (``kernels/fused``: blank + predictor residuals in a single HBM pass),
+  or the batched scrub kernel alone when recompression is off.
+* **host tail** — sequential Golomb-Rice entropy coding stays on the host
+  (``codec.rice_encode``), exactly like the paper keeps it on CPU; pixel
+  blanking for the delivered object is a host rect-region write (touches
+  only banner pixels, not the frame).
+
+The executor is config-free state: it owns dispatch statistics only, so one
+instance can serve every stage/pipeline combination and is safe to share
+across the (single-threaded) worker pool simulation.
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from repro.dicom import codec
+from repro.dicom.devices import Rect
+
+_CODEC_DTYPES = ("uint8", "uint16")
+
+
+def _pow2_at_least(n: int, cap: Optional[int] = None) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return min(p, cap) if cap is not None else p
+
+
+def blank_inplace(pixels: np.ndarray, rects: Sequence[Rect]) -> np.ndarray:
+    """Zero the rectangles in place (same clamping as ``scrub.numpy_blank``,
+    minus the full-frame copy — callers own the array)."""
+    H, W = pixels.shape[:2]
+    for x, y, w, h in rects:
+        pixels[max(0, y) : max(0, min(H, y + h)), max(0, x) : max(0, min(W, x + w))] = 0
+    return pixels
+
+
+@dataclass
+class BatchOutput:
+    """Per-instance result: blanked pixels + the full RJLS stream (or None
+    when recompression was off)."""
+
+    pixels: np.ndarray
+    payload: Optional[bytes] = None
+
+
+@dataclass
+class ExecutorStats:
+    instances: int = 0        # instances that went through a batched dispatch
+    dispatches: int = 0       # device calls issued
+    buckets: int = 0          # bucket keys seen across all runs
+    padded_shapes: Set[tuple] = field(default_factory=set)  # jit-cache keys
+
+
+class BatchedDeidExecutor:
+    """Groups a study's instances into shape buckets and runs the fused
+    scrub+JLS kernel once per bucket chunk.
+
+    ``use_kernel=None`` auto-detects: the fused Pallas kernel on accelerator
+    backends, the host two-pass (``blank_inplace`` + ``codec.residuals``) on
+    CPU — interpret-mode Pallas is a correctness stand-in, not a fast path.
+    Bucketing/chunking (and the dispatch statistics) are identical either
+    way, so the batching architecture is exercised on every backend.
+    """
+
+    def __init__(
+        self,
+        max_batch: int = 32,
+        bh: int = 64,
+        interpret: Optional[bool] = None,
+        use_kernel: Optional[bool] = None,
+    ) -> None:
+        self.max_batch = max_batch
+        self.bh = bh
+        self.interpret = interpret
+        self.use_kernel = use_kernel
+        self.stats = ExecutorStats()
+
+    def _resolve_use_kernel(self) -> bool:
+        if self.use_kernel is None:
+            import jax
+
+            self.use_kernel = jax.default_backend() != "cpu"
+        return self.use_kernel
+
+    # ------------------------------------------------------------- planning
+    def supports(self, pixels: Optional[np.ndarray], recompress: bool) -> bool:
+        """Batchable: single-plane 2D frames; recompression further requires a
+        codec dtype. Everything else takes the per-instance fallback path."""
+        if pixels is None or pixels.ndim != 2:
+            return False
+        if recompress:
+            return pixels.dtype.name in _CODEC_DTYPES
+        return pixels.dtype.kind in "uif"
+
+    def bucket(
+        self, items: Sequence[Tuple[np.ndarray, Sequence[Rect]]]
+    ) -> Dict[tuple, List[int]]:
+        """Group item indices by (H, W, dtype, rect-count bucket)."""
+        buckets: Dict[tuple, List[int]] = defaultdict(list)
+        for i, (pixels, rects) in enumerate(items):
+            rb = _pow2_at_least(max(len(rects), 1))
+            buckets[(pixels.shape[0], pixels.shape[1], pixels.dtype.name, rb)].append(i)
+        return dict(buckets)
+
+    # ------------------------------------------------------------- dispatch
+    def run(
+        self,
+        items: Sequence[Tuple[np.ndarray, Sequence[Rect]]],
+        *,
+        sv: int = 1,
+        recompress: bool = True,
+    ) -> List[BatchOutput]:
+        """Scrub (and recompress) a heterogeneous batch.
+
+        items: per instance (pixels, rects). Pixels are blanked in place —
+        callers pass freshly copied arrays (``ScrubStage`` copies the dataset
+        first). Returns outputs aligned with ``items``.
+        """
+        use_kernel = self._resolve_use_kernel()
+        out: List[Optional[BatchOutput]] = [None] * len(items)
+        buckets = self.bucket(items)
+        self.stats.buckets += len(buckets)
+        for (H, W, dtype_name, rb), idxs in buckets.items():
+            for c0 in range(0, len(idxs), self.max_batch):
+                chunk = idxs[c0 : c0 + self.max_batch]
+                self.stats.dispatches += 1
+                self.stats.instances += len(chunk)
+                if use_kernel:
+                    self._run_kernel_chunk(items, chunk, H, W, dtype_name, rb, sv, recompress, out)
+                else:
+                    self._run_host_chunk(items, chunk, H, W, sv, recompress, out)
+        return out  # every index was bucketed exactly once
+
+    def _run_kernel_chunk(self, items, chunk, H, W, dtype_name, rb, sv, recompress, out) -> None:
+        """One fused (or scrub-only) device dispatch over a padded chunk."""
+        # import here so host-only core code never pulls jax at module import
+        from repro.kernels.fused.ops import fused_scrub_residuals
+        from repro.kernels.scrub.ops import pack_rects, scrub_images
+
+        n = len(chunk)
+        n_pad = _pow2_at_least(n, self.max_batch)
+        stack = np.zeros((n_pad, H, W), np.dtype(dtype_name))
+        for j, i in enumerate(chunk):
+            stack[j] = items[i][0]
+        rects = np.zeros((n_pad, rb, 4), np.int32)
+        rects[:n] = pack_rects([list(items[i][1]) for i in chunk], R=rb)
+        self.stats.padded_shapes.add((n_pad, H, W, dtype_name, rb))
+
+        if recompress:
+            bits = np.dtype(dtype_name).itemsize * 8
+            res = np.asarray(
+                fused_scrub_residuals(
+                    stack, rects, sv=sv, bits=bits, bh=self.bh, interpret=self.interpret
+                )
+            )
+            for j, i in enumerate(chunk):
+                pixels, rl = items[i]
+                blank_inplace(pixels, rl)
+                payload, k = codec.rice_encode(res[j])
+                out[i] = BatchOutput(
+                    pixels=pixels,
+                    payload=codec.pack_header(H, W, bits, sv, k, len(payload)) + payload,
+                )
+        else:
+            scrubbed = np.asarray(scrub_images(stack, rects))
+            for j, i in enumerate(chunk):
+                pixels = items[i][0]
+                pixels[...] = scrubbed[j]
+                out[i] = BatchOutput(pixels=pixels)
+
+    def _run_host_chunk(self, items, chunk, H, W, sv, recompress, out) -> None:
+        """CPU fallback: same bucket walk, numpy blank + codec residuals."""
+        for i in chunk:
+            pixels, rl = items[i]
+            blank_inplace(pixels, rl)
+            if recompress:
+                bits = pixels.dtype.itemsize * 8
+                payload, k = codec.rice_encode(codec.residuals(pixels, sv))
+                out[i] = BatchOutput(
+                    pixels=pixels,
+                    payload=codec.pack_header(H, W, bits, sv, k, len(payload)) + payload,
+                )
+            else:
+                out[i] = BatchOutput(pixels=pixels)

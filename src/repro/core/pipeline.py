@@ -11,6 +11,7 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.anonymize import AnonymizerStage
+from repro.core.batch import BatchedDeidExecutor
 from repro.core.filter import FilterStage
 from repro.core.manifest import Manifest, ManifestEntry, Outcome
 from repro.core.pseudonym import PseudonymService, TrustMode
@@ -64,6 +65,7 @@ class DeidPipeline:
         scrub_script: Optional[str] = None,
         blank_fn=None,
         recompress: bool = True,
+        batched: bool = True,
     ) -> None:
         self.filter = FilterStage(filter_script or default_scripts.DEFAULT_FILTER_SCRIPT)
         self.anonymizer = AnonymizerStage(
@@ -74,6 +76,11 @@ class DeidPipeline:
             scrub_script or default_scripts.DEFAULT_SCRUB_SCRIPT,
             recompress=recompress,
             **scrub_kwargs,
+        )
+        # shape-bucketed batch dispatch over each study's instances; the
+        # per-instance loop survives as process_study_serial (fallback/oracle)
+        self.executor: Optional[BatchedDeidExecutor] = (
+            BatchedDeidExecutor() if batched else None
         )
         self.script_shas = {
             "filter": self.filter.sha,
@@ -132,6 +139,76 @@ class DeidPipeline:
     def process_study(
         self, study: SyntheticStudy, request: DeidRequest, worker_id: str = ""
     ) -> Tuple[List[DicomDataset], Manifest]:
+        """De-identify every instance of a study.
+
+        Routes through the shape-bucketed :class:`BatchedDeidExecutor` by
+        default: filter everything, scrub the survivors in fused-kernel
+        batches, then anonymize. Delivered order and manifest contents are
+        identical to :meth:`process_study_serial` (tested), which remains the
+        per-instance fallback/oracle path.
+        """
+        if self.executor is None:
+            return self.process_study_serial(study, request, worker_id)
+        manifest = Manifest(request_id=f"{request.research_study}/{request.anon_accession}")
+        delivered: List[DicomDataset] = []
+        params = request.script_params()
+        entries: List[Optional[ManifestEntry]] = [None] * len(study.datasets)
+        accepted: List[Tuple[int, DicomDataset]] = []
+        for i, ds in enumerate(study.datasets):
+            decision = self.filter(ds)
+            if decision.accepted:
+                accepted.append((i, ds))
+            else:
+                entries[i] = ManifestEntry(
+                    sop_uid_anon="",
+                    outcome=Outcome.FILTERED,
+                    modality=str(ds.get("Modality", "")),
+                    filter_rule=decision.rule,
+                    original_bytes=ds.nbytes(),
+                    worker_id=worker_id,
+                    script_shas=self.script_shas,
+                )
+
+        slots = self.scrub.scrub_study([ds for _, ds in accepted], self.executor)
+        for (i, ds), (scrubbed, err) in zip(accepted, slots):
+            if err is None:
+                try:
+                    anon = self.anonymizer(scrubbed.dataset, params)
+                except ScrubError as e:  # parity with process_instance's catch scope
+                    err = e
+            if err is not None:
+                entries[i] = ManifestEntry(
+                    sop_uid_anon="",
+                    outcome=Outcome.FAILED,
+                    modality=str(ds.get("Modality", "")),
+                    original_bytes=ds.nbytes(),
+                    error=str(err),
+                    worker_id=worker_id,
+                    script_shas=self.script_shas,
+                )
+                continue
+            entries[i] = ManifestEntry(
+                sop_uid_anon=str(anon.dataset.get("SOPInstanceUID", "")),
+                outcome=Outcome.ANONYMIZED,
+                modality=str(ds.get("Modality", "")),
+                scrub_rects=list(scrubbed.rects),
+                tag_actions=anon.tag_actions,
+                recompressed=scrubbed.recompressed,
+                compressed_bytes=scrubbed.compressed_bytes,
+                original_bytes=ds.nbytes(),
+                worker_id=worker_id,
+                script_shas=self.script_shas,
+            )
+            delivered.append(anon.dataset)  # accepted is in dataset order
+        for entry in entries:
+            assert entry is not None
+            manifest.add(entry)
+        return delivered, manifest
+
+    def process_study_serial(
+        self, study: SyntheticStudy, request: DeidRequest, worker_id: str = ""
+    ) -> Tuple[List[DicomDataset], Manifest]:
+        """Per-instance oracle path (the pre-batching hot loop)."""
         manifest = Manifest(request_id=f"{request.research_study}/{request.anon_accession}")
         delivered: List[DicomDataset] = []
         for ds in study.datasets:

@@ -26,11 +26,16 @@ from repro.dicom.devices import Rect
 
 
 def numpy_blank(pixels: np.ndarray, rects: Sequence[Rect]) -> np.ndarray:
-    """Reference blanking: set each (x, y, w, h) region to 0."""
+    """Reference blanking: set each (x, y, w, h) region to 0.
+
+    Slice ends clamp to 0 so a rect lying entirely above/left of the frame
+    (y + h <= 0 or x + w <= 0) is a no-op — a raw ``min(H, y + h)`` would go
+    negative and wrap around to blank nearly the whole frame.
+    """
     out = pixels.copy()
     H, W = out.shape[:2]
     for x, y, w, h in rects:
-        out[max(0, y) : min(H, y + h), max(0, x) : min(W, x + w)] = 0
+        out[max(0, y) : max(0, min(H, y + h)), max(0, x) : max(0, min(W, x + w))] = 0
     return out
 
 
@@ -74,7 +79,9 @@ class ScrubStage:
         )
         return self.rules.get(key)
 
-    def __call__(self, ds: DicomDataset) -> ScrubResult:
+    def _resolve_rects(self, ds: DicomDataset) -> Tuple[Rect, ...]:
+        """Rects to blank for this instance; raises :class:`ScrubError` on the
+        fail-closed cases shared by the serial and batched paths."""
         if ds.pixels is None:
             raise ScrubError("no pixel data to scrub (object should have been filtered)")
         rects = self.rects_for(ds)
@@ -87,6 +94,10 @@ class ScrubStage:
                     f"{ds.resolution()} — filter should have rejected it"
                 )
             rects = ()
+        return tuple(rects)
+
+    def __call__(self, ds: DicomDataset) -> ScrubResult:
+        rects = self._resolve_rects(ds)
         out = ds.copy()
         result = ScrubResult(out, list(rects))
         if rects:
@@ -98,3 +109,61 @@ class ScrubStage:
             result.compressed_bytes = len(compressed)
             out["TransferSyntaxUID"] = "1.2.840.10008.1.2.4.70"
         return result
+
+    # ------------------------------------------------------------- batched
+    def scrub_study(
+        self, datasets: Sequence[DicomDataset], executor
+    ) -> List[Tuple[Optional[ScrubResult], Optional[ScrubError]]]:
+        """Batched equivalent of calling the stage once per instance.
+
+        Instances the executor supports are bucketed and run through the fused
+        scrub+JLS kernel (``repro.core.batch.BatchedDeidExecutor``); the rest
+        (multi-sample frames, exotic dtypes, non-rectangle ``blank_fn``) take
+        the per-instance oracle path. Per-instance errors stay per-instance:
+        the result list is aligned with ``datasets`` and each slot holds
+        either a :class:`ScrubResult` or the :class:`ScrubError` it raised.
+        """
+        slots: List[Tuple[Optional[ScrubResult], Optional[ScrubError]]] = [
+            (None, None)
+        ] * len(datasets)
+        # custom blank_fns batch only if they declare rectangle-zero semantics
+        rect_semantics = getattr(
+            self.blank_fn, "rect_blank_semantics", self.blank_fn is numpy_blank
+        )
+        batch_idx: List[int] = []
+        items: List[Tuple[np.ndarray, List[Rect]]] = []
+        for i, ds in enumerate(datasets):
+            try:
+                rects = self._resolve_rects(ds)
+            except ScrubError as e:
+                slots[i] = (None, e)
+                continue
+            batchable = (
+                executor is not None
+                and rect_semantics
+                and executor.supports(ds.pixels, self.recompress)
+                # nothing to batch: no blanking and no recompression work
+                and (rects or self.recompress)
+            )
+            if batchable:
+                out = ds.copy()
+                slots[i] = (ScrubResult(out, list(rects)), None)
+                batch_idx.append(i)
+                items.append((out.pixels, list(rects)))
+            else:
+                try:
+                    slots[i] = (self(ds), None)
+                except ScrubError as e:  # same containment as the serial path
+                    slots[i] = (None, e)
+
+        if items:
+            outputs = executor.run(items, sv=self.sv, recompress=self.recompress)
+            for i, bo in zip(batch_idx, outputs):
+                result = slots[i][0]
+                assert result is not None
+                result.dataset.pixels = bo.pixels
+                if self.recompress:
+                    result.recompressed = True
+                    result.compressed_bytes = len(bo.payload or b"")
+                    result.dataset["TransferSyntaxUID"] = "1.2.840.10008.1.2.4.70"
+        return slots

@@ -193,6 +193,16 @@ def rice_decode(payload: bytes, k: int, n: int) -> np.ndarray:
 
 
 # --------------------------------------------------------------- container
+def pack_header(h: int, w: int, bits: int, sv: int, k: int, nbytes: int) -> bytes:
+    """Plane header: magic, dims, bits, sv, rice k, payload length.
+
+    Single source of truth for the RJLS plane header layout — used by the
+    pure-host :func:`encode`, the kernel-assisted ``kernels/jls`` encode path,
+    and the fused batch executor, so the three streams stay byte-identical.
+    """
+    return MAGIC + b"P" + struct.pack("<IIBBBI", h, w, bits, sv, k, nbytes)
+
+
 def encode(img: np.ndarray, sv: int = 1) -> bytes:
     """Encode a 2D unsigned-int plane. Header: magic, dims, bits, sv, k, nbytes."""
     if img.ndim == 3:  # multi-sample: encode planes back to back
@@ -203,8 +213,7 @@ def encode(img: np.ndarray, sv: int = 1) -> bytes:
     bits = img.dtype.itemsize * 8
     res = residuals(img, sv)
     payload, k = rice_encode(res)
-    hdr = MAGIC + b"P" + struct.pack("<IIBBBI", img.shape[0], img.shape[1], bits, sv, k, len(payload))
-    return hdr + payload
+    return pack_header(img.shape[0], img.shape[1], bits, sv, k, len(payload)) + payload
 
 
 def decode(buf: bytes) -> np.ndarray:

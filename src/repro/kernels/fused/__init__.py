@@ -1,0 +1,3 @@
+from repro.kernels.fused.ops import fused_encode_batch, fused_scrub_residuals
+
+__all__ = ["fused_scrub_residuals", "fused_encode_batch"]

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the fused scrub+JLS kernel: the staged two-pass
+composition ``scrub_ref -> residuals_ref``. The kernel must match this (and
+the host ``numpy_blank -> codec.residuals`` pair) bit-exactly."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.jls.ref import residuals_ref
+from repro.kernels.scrub.ref import scrub_ref
+
+
+def fused_ref(images: jnp.ndarray, rects: jnp.ndarray, sv: int, bits: int) -> jnp.ndarray:
+    """images: (N, H, W); rects: (N, R, 4) int32. Staged oracle."""
+    return residuals_ref(scrub_ref(images, rects), sv, bits)

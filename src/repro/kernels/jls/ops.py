@@ -44,8 +44,6 @@ def jls_residuals(
 def encode_batch(images: np.ndarray, sv: int = 1) -> list[bytes]:
     """TPU-assisted encode: residuals via the kernel, entropy code on host.
     Byte-identical to the pure-host ``repro.dicom.codec.encode`` (tested)."""
-    import struct
-
     from repro.dicom import codec
 
     res = np.asarray(jls_residuals(images, sv=sv))
@@ -53,8 +51,6 @@ def encode_batch(images: np.ndarray, sv: int = 1) -> list[bytes]:
     bits = images.dtype.itemsize * 8
     for i in range(images.shape[0]):
         payload, k = codec.rice_encode(res[i])
-        hdr = codec.MAGIC + b"P" + struct.pack(
-            "<IIBBBI", images.shape[1], images.shape[2], bits, sv, k, len(payload)
-        )
+        hdr = codec.pack_header(images.shape[1], images.shape[2], bits, sv, k, len(payload))
         out.append(hdr + payload)
     return out

@@ -24,10 +24,15 @@ def _on_cpu() -> bool:
 
 def default_block(dtype: jnp.dtype, H: int, W: int) -> tuple[int, int]:
     """Pick a VMEM-friendly tile: lane dim multiple of 128, sublane dim a
-    multiple of the dtype tile, working set well under VMEM (~16 MB/core)."""
+    multiple of the dtype tile, working set well under VMEM (~16 MB/core).
+
+    Each dimension is the image extent rounded up to its alignment unit
+    (128 lanes / the dtype sublane tile), capped at 512x256 — so an image
+    never pads by more than one alignment unit, and never by a full tile.
+    """
     sub = _SUBLANE[jnp.dtype(dtype).itemsize]
-    bw = 128 if W <= 128 else min(512, (W + 127) // 128 * 128 if W < 512 else 512)
-    bh = max(sub, min(256, (H + sub - 1) // sub * sub if H < 256 else 256))
+    bw = min(512, -(-W // 128) * 128)
+    bh = min(256, -(-max(H, 1) // sub) * sub)
     return bh, bw
 
 
@@ -64,11 +69,23 @@ def scrub_images(
 
 
 def pack_rects(rect_lists: Sequence[Sequence[tuple[int, int, int, int]]], R: int | None = None) -> np.ndarray:
-    """Pack ragged per-image rect lists into a (N, R, 4) int32 array."""
-    R = R or max((len(r) for r in rect_lists), default=1) or 1
+    """Pack ragged per-image rect lists into a (N, R, 4) int32 array.
+
+    ``R`` defaults to the longest list (min 1). An explicit ``R`` smaller than
+    the longest list raises — silently dropping scrub rectangles would ship
+    PHI pixels through un-blanked.
+    """
+    longest = max((len(r) for r in rect_lists), default=0)
+    if R is None:
+        R = max(longest, 1)
+    elif longest > R:
+        raise ValueError(
+            f"rect list of length {longest} does not fit R={R}; "
+            "refusing to truncate scrub rectangles"
+        )
     out = np.zeros((len(rect_lists), R, 4), np.int32)
     for i, rl in enumerate(rect_lists):
-        for j, rect in enumerate(rl[:R]):
+        for j, rect in enumerate(rl):
             out[i, j] = rect
     return out
 
@@ -79,3 +96,8 @@ def blank_fn(pixels: np.ndarray, rects) -> np.ndarray:
     img = jnp.asarray(pixels)[None]
     packed = pack_rects([list(rects)])
     return np.asarray(scrub_images(img, packed)[0])
+
+
+# Same observable contract as core.scrub.numpy_blank (zero the rectangles,
+# touch nothing else) — lets the batched executor substitute the fused kernel.
+blank_fn.rect_blank_semantics = True

@@ -68,6 +68,7 @@ class DeidWorker:
     throughput: float = 160e6  # bytes/s of de-id compute (paper-calibrated)
     processed: int = 0
     deduped: int = 0
+    batched_instances: int = 0  # instances that went through the fused batch path
 
     def process(self, broker: Broker, msg: Message, injector: Optional[FailureInjector] = None) -> float:
         """Process one message; returns simulated seconds of work."""
@@ -85,7 +86,10 @@ class DeidWorker:
             raise WorkerCrash(f"{self.worker_id} crashed on {key} (delivery {msg.deliveries})")
 
         study = self.source.get_study(msg.payload["accession"])
+        batched0 = self.pipeline.executor.stats.instances if self.pipeline.executor else 0
         outputs, manifest = self.pipeline.process_study(study, request, self.worker_id)
+        if self.pipeline.executor is not None:
+            self.batched_instances += self.pipeline.executor.stats.instances - batched0
         request_id = f"{request.research_study}/{request.anon_accession}"
         for ds in outputs:
             self.dest.put_output(request_id, str(ds.get("SOPInstanceUID", "?")), ds)

@@ -1,0 +1,30 @@
+# Paper Figure 2b: PET/CT regression feature. Parsed by repro.core.scenarios
+# and executed against the seeded generator ("If any of these tests fail,
+# the regression test results in failure").
+Feature: PET/CT de-identification regression
+
+Background:
+  Given the pipeline uses the anonymizer script, "stanford-anonymizer.script"
+  And the pipeline uses the pixel script, "stanford-pixel.script"
+  And the pipeline uses the filter script, "stanford-filter.script"
+  And script parameter "accession" is "ACN123"
+  And script parameter "mrn" is "MRN123"
+  And script parameter "jitter" is "-6"
+
+Scenario: PET metadata is anonymized
+  Given the DICOM directory "dicom-phi/PT/Anonymize"
+  When ran through the deid pipeline
+  Then the images SHOULD be anonymized
+  And the resulting images should have dates jittered
+
+Scenario: GE Discovery fusion banners are scrubbed
+  Given the DICOM directory "dicom-phi/PT/Scrub/GE/Discovery/512x512"
+  When ran through the deid pipeline
+  Then the resulting images should be scrubbed at 256,0,256,22
+  And the resulting images should be scrubbed at 300,22,212,80
+  And the resulting images should be scrubbed at 10,478,100,10
+
+Scenario: problem objects are rejected
+  Given the DICOM directory "dicom-phi/PT/Filter"
+  When ran through the deid pipeline
+  Then the images SHOULD NOT pass the filter

@@ -1,0 +1,141 @@
+"""Fused scrub+JLS kernel vs the staged two-pass oracle.
+
+The fused kernel must be bit-exact against ``numpy_blank -> codec.residuals``
+(the host pair) and against the jnp staged composition, across dtypes, all
+selection values, and adversarial rect lists (empty, overlapping,
+out-of-bounds, negative origins)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.scrub import numpy_blank
+from repro.dicom import codec
+from repro.kernels.fused.ops import fused_encode_batch, fused_scrub_residuals
+from repro.kernels.fused.ref import fused_ref
+from repro.kernels.jls.ops import jls_residuals
+from repro.kernels.scrub.ops import pack_rects
+
+
+def _oracle(imgs: np.ndarray, rect_lists, sv: int) -> np.ndarray:
+    """The staged host pair: blank, then predictor residuals."""
+    return np.stack(
+        [codec.residuals(numpy_blank(imgs[i], rect_lists[i]), sv) for i in range(imgs.shape[0])]
+    )
+
+
+def _rand_imgs(rng, shape, dtype):
+    maxv = 255 if dtype == np.uint8 else 4095
+    return (rng.random(shape) * maxv).astype(dtype)
+
+
+RECT_CASES = {
+    "empty": lambda H, W: [],
+    "banner": lambda H, W: [(0, 0, W, max(1, H // 8))],
+    "overlapping": lambda H, W: [(2, 2, W // 2, H // 2), (W // 4, H // 4, W // 2, H // 2)],
+    "out_of_bounds": lambda H, W: [(W - 5, H - 5, 99, 99), (-7, -3, 15, 12)],
+    "degenerate": lambda H, W: [(5, 5, 0, 10), (5, 5, 10, 0), (0, 0, 0, 0)],
+    "full_frame": lambda H, W: [(0, 0, W, H)],
+}
+
+
+class TestFusedKernel:
+    @pytest.mark.parametrize("sv", list(range(1, 8)))
+    @pytest.mark.parametrize("dtype", [np.uint8, np.uint16])
+    def test_all_sv_and_dtypes(self, rng, sv, dtype):
+        imgs = _rand_imgs(rng, (2, 70, 90), dtype)
+        rl = [[(5, 5, 30, 20), (0, 0, 90, 8)], [(40, 30, 200, 200)]]
+        rects = pack_rects(rl)
+        got = np.asarray(fused_scrub_residuals(imgs, rects, sv=sv))
+        np.testing.assert_array_equal(got, _oracle(imgs, rl, sv))
+
+    @pytest.mark.parametrize("case", sorted(RECT_CASES))
+    def test_rect_classes(self, rng, case):
+        H, W = 60, 100
+        imgs = _rand_imgs(rng, (2, H, W), np.uint16)
+        rl = [RECT_CASES[case](H, W)] * 2
+        rects = pack_rects(rl)
+        got = np.asarray(fused_scrub_residuals(imgs, rects, sv=4))
+        np.testing.assert_array_equal(got, _oracle(imgs, rl, 4))
+
+    def test_property_sweep_random(self, rng):
+        """Randomized property: fused == blank->residuals for random shapes,
+        dtypes, sv, and rect lists (the hypothesis-style sweep, seeded)."""
+        for trial in range(12):
+            N = int(rng.integers(1, 4))
+            H = int(rng.integers(8, 140))
+            W = int(rng.integers(8, 200))
+            dtype = [np.uint8, np.uint16][trial % 2]
+            sv = int(rng.integers(1, 8))
+            imgs = _rand_imgs(rng, (N, H, W), dtype)
+            rl = []
+            for _ in range(N):
+                n_rects = int(rng.integers(0, 5))
+                rl.append(
+                    [
+                        (
+                            int(rng.integers(-20, W + 20)),
+                            int(rng.integers(-20, H + 20)),
+                            int(rng.integers(0, W + 40)),
+                            int(rng.integers(0, H + 40)),
+                        )
+                        for _ in range(n_rects)
+                    ]
+                )
+            rects = pack_rects(rl)
+            got = np.asarray(fused_scrub_residuals(imgs, rects, sv=sv))
+            np.testing.assert_array_equal(
+                got, _oracle(imgs, rl, sv), err_msg=f"trial={trial} sv={sv} shape={(N, H, W)}"
+            )
+
+    def test_matches_jnp_staged_ref(self, rng):
+        imgs = _rand_imgs(rng, (2, 64, 96), np.uint16)
+        rl = [[(10, 10, 40, 20)], [(0, 0, 96, 6), (50, 30, 30, 30)]]
+        rects = pack_rects(rl)
+        got = np.asarray(fused_scrub_residuals(imgs, rects, sv=5))
+        ref = np.asarray(fused_ref(jnp.asarray(imgs), jnp.asarray(rects), 5, 16))
+        np.testing.assert_array_equal(got, ref)
+
+    def test_no_rects_equals_plain_jls(self, rng):
+        imgs = _rand_imgs(rng, (2, 64, 96), np.uint16)
+        rects = np.zeros((2, 1, 4), np.int32)
+        got = np.asarray(fused_scrub_residuals(imgs, rects, sv=2))
+        np.testing.assert_array_equal(got, np.asarray(jls_residuals(imgs, sv=2)))
+
+    def test_blanked_neighbors_feed_prediction(self, rng):
+        """The fusion hinge: pixels bordering a rect must be predicted from
+        the *blanked* neighbor values, as if the scrubbed image had been
+        materialized. With sv=1 (predict = left), the pixel just right of a
+        blanked rect must carry its full value as residual."""
+        img = np.full((1, 32, 64), 100, np.uint16)
+        rl = [[(8, 8, 16, 16)]]
+        res = np.asarray(fused_scrub_residuals(img, pack_rects(rl), sv=1))[0]
+        assert (res[8:24, 24] == 100).all()  # left neighbor is blanked -> 100 - 0
+        assert (res[8:24, 25] == 0).all()    # interior of untouched region
+
+    def test_stripe_boundary_rect(self, rng):
+        """Rect edge exactly on a bh stripe boundary: the above-neighbor of
+        the first row of a stripe comes from the previous stripe's masked row."""
+        imgs = _rand_imgs(rng, (1, 128, 64), np.uint16)
+        for rl in ([[(0, 48, 64, 16)]], [[(10, 63, 30, 2)]], [[(0, 0, 64, 64)]]):
+            rects = pack_rects(rl)
+            got = np.asarray(fused_scrub_residuals(imgs, rects, sv=2, bh=64))
+            np.testing.assert_array_equal(got, _oracle(imgs, rl, 2))
+
+    def test_roundtrip_through_codec(self, rng):
+        """Residuals from the fused kernel decode back to the blanked image."""
+        imgs = _rand_imgs(rng, (1, 40, 56), np.uint8)
+        rl = [[(4, 4, 20, 10)]]
+        res = np.asarray(fused_scrub_residuals(imgs, pack_rects(rl), sv=1))[0]
+        out = codec.reconstruct(res, sv=1, bits=8)
+        np.testing.assert_array_equal(out, numpy_blank(imgs[0], rl[0]))
+
+
+class TestFusedEncode:
+    def test_byte_identical_to_host_encode(self, rng):
+        imgs = _rand_imgs(rng, (3, 48, 64), np.uint16)
+        rl = [[(3, 3, 20, 10)], [], [(0, 0, 64, 48)]]
+        bufs = fused_encode_batch(imgs, rl, sv=1)
+        for i in range(3):
+            want = codec.encode(numpy_blank(imgs[i], rl[i]), 1)
+            assert bufs[i] == want, i
+            np.testing.assert_array_equal(codec.decode(bufs[i]), numpy_blank(imgs[i], rl[i]))

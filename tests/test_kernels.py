@@ -10,7 +10,7 @@ from repro.kernels.jls.ops import encode_batch, jls_residuals
 from repro.kernels.jls.ref import residuals_ref
 from repro.kernels.phi_detect.ops import edge_density, audit_image, suspicious_tiles
 from repro.kernels.phi_detect.ref import edge_density_ref
-from repro.kernels.scrub.ops import blank_fn, pack_rects, scrub_images
+from repro.kernels.scrub.ops import _SUBLANE, blank_fn, default_block, pack_rects, scrub_images
 from repro.kernels.scrub.ref import scrub_ref
 
 SHAPES = [(1, 32, 128), (2, 100, 170), (3, 256, 256), (1, 97, 513)]
@@ -51,6 +51,15 @@ class TestScrubKernel:
         assert (out[0, 45:, 130:] == 0).all()
         assert (out[0, :45, :130] == imgs[0, :45, :130]).all()
 
+    def test_rect_entirely_off_frame_is_noop(self, rng):
+        # regression: numpy_blank's slice end went negative and wrapped,
+        # blanking nearly the whole frame for rects above/left of the image
+        img = (rng.random((40, 60)) * 200).astype(np.uint8)
+        rl = [(10, -8, 20, 4), (-30, 10, 25, 99), (10, 10, 5, 0)]
+        np.testing.assert_array_equal(numpy_blank(img, rl), img)
+        out = np.asarray(scrub_images(img[None], pack_rects([rl])))
+        np.testing.assert_array_equal(out[0], img)
+
     def test_blank_fn_adapter(self, rng):
         img = (rng.random((70, 90)) * 4000).astype(np.uint16)
         rl = [(5, 5, 30, 20)]
@@ -88,6 +97,50 @@ class TestPhiDetectKernel:
         assert not suspicious_tiles(img[None]).any()
 
 
+class TestPackRects:
+    def test_grows_to_longest_list(self):
+        out = pack_rects([[(1, 2, 3, 4)], [(5, 6, 7, 8), (9, 10, 11, 12), (13, 14, 15, 16)]])
+        assert out.shape == (2, 3, 4)
+        np.testing.assert_array_equal(out[1, 2], [13, 14, 15, 16])
+
+    def test_refuses_to_truncate(self):
+        # regression: used to silently drop rects beyond R, shipping PHI
+        with pytest.raises(ValueError, match="refusing to truncate"):
+            pack_rects([[(0, 0, 1, 1)] * 5], R=3)
+
+    def test_explicit_r_pads(self):
+        out = pack_rects([[(1, 1, 2, 2)]], R=4)
+        assert out.shape == (1, 4, 4)
+        assert (out[0, 1:] == 0).all()
+
+    def test_empty_inputs(self):
+        assert pack_rects([]).shape == (0, 1, 4)
+        assert pack_rects([[], []]).shape == (2, 1, 4)
+
+
+class TestDefaultBlock:
+    @pytest.mark.parametrize("shape", [(300, 300), (512, 1), (1024, 768), (1, 1), (97, 513), (2500, 2048)])
+    @pytest.mark.parametrize("dtype", [np.uint8, np.uint16, np.float32])
+    def test_alignment_and_bounded_padding(self, shape, dtype):
+        H, W = shape
+        sub = _SUBLANE[np.dtype(dtype).itemsize]
+        bh, bw = default_block(dtype, H, W)
+        assert bw % 128 == 0 and bh % sub == 0
+        assert 128 <= bw <= 512 and sub <= bh <= 256
+        # pad-to-tile-multiple never adds a full tile in either dimension
+        Hp = (H + bh - 1) // bh * bh
+        Wp = (W + bw - 1) // bw * bw
+        assert Hp - H < bh and Wp - W < bw
+
+    @pytest.mark.parametrize("shape", [(300, 300), (512, 1), (1024, 768)])
+    def test_scrub_correct_on_odd_shapes(self, rng, shape):
+        H, W = shape
+        imgs = (rng.random((1, H, W)) * 4000).astype(np.uint16)
+        rl = [[(W // 3, H // 3, W // 2, H // 2), (0, 0, W, 5)]]
+        out = np.asarray(scrub_images(imgs, pack_rects(rl)))
+        np.testing.assert_array_equal(out, numpy_blank(imgs[0], rl[0])[None])
+
+
 class TestJlsKernel:
     @pytest.mark.parametrize("sv", list(range(1, 8)))
     @pytest.mark.parametrize("dtype,bits", [(np.uint8, 8), (np.uint16, 16)])
@@ -112,3 +165,10 @@ class TestJlsKernel:
         for i in range(2):
             assert bufs[i] == codec.encode(img[i], 1)
             np.testing.assert_array_equal(codec.decode(bufs[i]), img[i])
+
+    def test_pack_header_is_the_shared_layout(self, rng):
+        # encode == pack_header + rice payload, for host and kernel paths alike
+        img = (rng.random((20, 32)) * 255).astype(np.uint8)
+        res = codec.residuals(img, 2)
+        payload, k = codec.rice_encode(res)
+        assert codec.encode(img, 2) == codec.pack_header(20, 32, 8, 2, k, len(payload)) + payload

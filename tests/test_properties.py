@@ -1,11 +1,18 @@
-"""Property-based tests (hypothesis) on system invariants."""
+"""Property-based tests (hypothesis) on system invariants.
+
+Skips cleanly where hypothesis isn't installed (the seeded-random sweeps in
+test_fused_kernel.py cover the fused-kernel properties without it)."""
 import numpy as np
 import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed")
 from hypothesis import HealthCheck, given, settings, strategies as st
 
 from repro.core import PseudonymService, TrustMode, numpy_blank
 from repro.core.rules import parse_scrub_script
 from repro.dicom import codec
+from repro.kernels.fused.ops import fused_scrub_residuals
 from repro.kernels.scrub.ops import pack_rects, scrub_images
 from repro.queueing import Autoscaler, AutoscalerConfig, Broker
 from repro.utils.bytesize import human_bytes, parse_bytes
@@ -49,6 +56,19 @@ class TestScrubProperties:
         out = np.asarray(scrub_images(jnp.asarray(img), packed))
         ref = np.stack([numpy_blank(img[i], rects) for i in range(2)])
         np.testing.assert_array_equal(out, ref)
+
+
+class TestFusedKernelProperties:
+    @given(rects=rects_st, seed=st.integers(0, 2**31 - 1), sv=st.integers(1, 7))
+    @_settings
+    def test_fused_equals_two_pass_oracle(self, rects, seed, sv):
+        """Fused scrub+JLS == numpy_blank -> codec.residuals, bit-exact."""
+        rng = np.random.default_rng(seed)
+        img = (rng.random((2, 64, 96)) * 4000).astype(np.uint16)
+        packed = pack_rects([rects, rects])
+        got = np.asarray(fused_scrub_residuals(img, packed, sv=sv))
+        want = np.stack([codec.residuals(numpy_blank(img[i], rects), sv) for i in range(2)])
+        np.testing.assert_array_equal(got, want)
 
 
 class TestCodecProperties:
