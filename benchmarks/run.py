@@ -7,11 +7,19 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import autoscale, kernelbench, roofline, table1_throughput, table2_rules
+    from benchmarks import (
+        autoscale,
+        cohortbench,
+        kernelbench,
+        roofline,
+        table1_throughput,
+        table2_rules,
+    )
 
     suites = [
         ("table1_throughput", table1_throughput.main),
         ("table2_rules", table2_rules.main),
+        ("cohortbench", cohortbench.main),
         ("autoscale", autoscale.main),
         ("kernelbench", kernelbench.main),
         ("roofline", roofline.main),

@@ -15,6 +15,7 @@ from repro.core import DeidPipeline, TrustMode
 from repro.dicom.generator import StudyGenerator
 from repro.distributed import ScrubFarm
 from repro.kernels.scrub import ops as scrub_ops
+from repro.lake import ResultLake
 from repro.queueing import (
     Autoscaler,
     AutoscalerConfig,
@@ -54,7 +55,9 @@ def main() -> None:
     clock = SimClock()
     broker = Broker(clock, visibility_timeout=120)
     journal = Journal(args.journal)
-    service = DeidService(broker, lake, journal)
+    result_lake = ResultLake(max_bytes=1 << 30)  # de-id result cache (§6)
+    pipeline = DeidPipeline(blank_fn=scrub_ops.blank_fn, lake=result_lake)
+    service = DeidService(broker, lake, journal, result_lake=result_lake, pipeline=pipeline)
     service.register_study("IRB-70007", TrustMode.POST_IRB)
     service.mark_ineligible("ACC00003")  # research opt-out
     records = service.submit("IRB-70007", list(mrns), mrns)
@@ -64,7 +67,6 @@ def main() -> None:
 
     # ------------------------------------------------- distributed scrub farm
     farm = ScrubFarm()
-    pipeline = DeidPipeline(blank_fn=scrub_ops.blank_fn)  # Pallas kernel path
     dest = StudyStore("researcher-bucket")
 
     injector = FailureInjector(crash_rate=0.08, straggler_rate=0.05, slow_factor=30.0)
@@ -116,6 +118,22 @@ def main() -> None:
     print(f"farm:         {farm.n} device(s) in the shard_map scrub mesh")
     assert counts["failed"] == 0
     assert len(journal.completed_keys()) == queued
+
+    # ----------------------------------- repeat cohort (the on-demand story)
+    # an overlapping cohort replayed against the de-id result lake: warm
+    # accessions are served without publishing or dispatching anything (§6)
+    cohort = list(mrns)[: max(args.studies // 2, 1)]
+    pub0 = broker.total_published
+    disp0 = pipeline.executor.stats.dispatches if pipeline.executor else 0
+    ticket = service.submit_cohort("IRB-70007", cohort, mrns)
+    disp1 = pipeline.executor.stats.dispatches if pipeline.executor else 0
+    print(f"\ncohort replay: {len(ticket.hits)} warm / {len(ticket.cold)} cold "
+          f"/ {len(ticket.rejected)} rejected of {len(cohort)}; "
+          f"+{broker.total_published - pub0} publishes, +{disp1 - disp0} dispatches")
+    print(f"result lake:  {result_lake.stats.hits} hits, "
+          f"{human_bytes(result_lake.stored_bytes())} stored, "
+          f"{result_lake.stats.evictions} evictions")
+    assert not ticket.cold and broker.total_published == pub0
 
 
 if __name__ == "__main__":

@@ -15,7 +15,7 @@ import numpy as np
 from repro.core import DeidPipeline, PseudonymService, TrustMode, build_request
 from repro.dicom.generator import StudyGenerator
 from repro.config.registry import get_arch
-from repro.kernels.phi_detect.ops import audit_image
+from repro.kernels.phi_detect.ops import audit_dataset
 from repro.models import build_model
 from repro.training import cosine_schedule, make_train_step, train_state_init
 from repro.training.data import DeidImagePipeline
@@ -34,7 +34,8 @@ def main() -> None:
     print(f"de-identified corpus: {len(delivered)} instances")
 
     # --- PHI audit gate (Future Work: ML detection) before training sees pixels
-    flagged = [d for d in delivered if audit_image(d.pixels)]
+    # audit_dataset thresholds at the stored bit depth (12-bit CT in u16 words)
+    flagged = [d for d in delivered if audit_dataset(d)]
     assert not flagged, "post-scrub corpus must pass the burned-in-text audit"
     print("phi_detect audit: clean")
 

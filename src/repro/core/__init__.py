@@ -1,7 +1,7 @@
 # The paper's primary contribution: the on-demand de-identification engine.
 # filter -> scrub -> anonymize stages, pseudonymization, manifests, rule DSL.
 from repro.core.batch import BatchedDeidExecutor
-from repro.core.pipeline import DeidPipeline, DeidRequest, build_request
+from repro.core.pipeline import DeidPipeline, DeidRequest, StudyDeidResult, build_request
 from repro.core.pseudonym import PseudonymService, TrustMode
 from repro.core.manifest import Manifest, ManifestEntry, Outcome
 from repro.core.filter import FilterStage
@@ -12,6 +12,7 @@ __all__ = [
     "BatchedDeidExecutor",
     "DeidPipeline",
     "DeidRequest",
+    "StudyDeidResult",
     "build_request",
     "PseudonymService",
     "TrustMode",

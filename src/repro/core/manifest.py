@@ -50,6 +50,23 @@ class ManifestEntry:
         }
         return d
 
+    @staticmethod
+    def from_dict(ed: dict) -> "ManifestEntry":
+        return ManifestEntry(
+            sop_uid_anon=ed["sop_uid_anon"],
+            outcome=Outcome(ed["outcome"]),
+            modality=ed.get("modality", ""),
+            filter_rule=ed.get("filter_rule"),
+            scrub_rects=[tuple(r) for r in ed.get("scrub_rects", [])],
+            tag_actions=ed.get("tag_actions", {}),
+            recompressed=ed.get("recompressed", False),
+            compressed_bytes=ed.get("compressed_bytes", 0),
+            original_bytes=ed.get("original_bytes", 0),
+            error=ed.get("error", ""),
+            worker_id=ed.get("worker_id", ""),
+            script_shas=ed.get("script_shas", {}),
+        )
+
 
 @dataclass
 class Manifest:
@@ -81,20 +98,5 @@ class Manifest:
         d = json.loads(s)
         m = Manifest(d["request_id"])
         for ed in d["entries"]:
-            m.add(
-                ManifestEntry(
-                    sop_uid_anon=ed["sop_uid_anon"],
-                    outcome=Outcome(ed["outcome"]),
-                    modality=ed.get("modality", ""),
-                    filter_rule=ed.get("filter_rule"),
-                    scrub_rects=[tuple(r) for r in ed.get("scrub_rects", [])],
-                    tag_actions=ed.get("tag_actions", {}),
-                    recompressed=ed.get("recompressed", False),
-                    compressed_bytes=ed.get("compressed_bytes", 0),
-                    original_bytes=ed.get("original_bytes", 0),
-                    error=ed.get("error", ""),
-                    worker_id=ed.get("worker_id", ""),
-                    script_shas=ed.get("script_shas", {}),
-                )
-            )
+            m.add(ManifestEntry.from_dict(ed))
         return m

@@ -8,7 +8,7 @@ deliberately stateless across instances (all request state rides in the
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import TYPE_CHECKING, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.anonymize import AnonymizerStage
 from repro.core.batch import BatchedDeidExecutor
@@ -19,6 +19,10 @@ from repro.core.scrub import ScrubError, ScrubStage
 from repro.core import scripts as default_scripts
 from repro.dicom.dataset import DicomDataset
 from repro.dicom.generator import SyntheticStudy
+
+if TYPE_CHECKING:  # type-only: repro.lake imports stay lazy (no import cycle)
+    from repro.lake.fingerprint import RulesetFingerprint
+    from repro.lake.store import ResultLake
 
 
 @dataclass
@@ -57,6 +61,22 @@ def build_request(
     )
 
 
+@dataclass
+class StudyDeidResult:
+    """Everything one study de-identification produced.
+
+    ``instance_keys`` is aligned with the study's datasets and empty when no
+    result lake is attached; ``cache_hits``/``cache_misses`` count per-instance
+    lake lookups for this study only.
+    """
+
+    delivered: List[DicomDataset]
+    manifest: Manifest
+    instance_keys: List[str] = field(default_factory=list)
+    cache_hits: int = 0
+    cache_misses: int = 0
+
+
 class DeidPipeline:
     def __init__(
         self,
@@ -66,6 +86,7 @@ class DeidPipeline:
         blank_fn=None,
         recompress: bool = True,
         batched: bool = True,
+        lake: Optional["ResultLake"] = None,
     ) -> None:
         self.filter = FilterStage(filter_script or default_scripts.DEFAULT_FILTER_SCRIPT)
         self.anonymizer = AnonymizerStage(
@@ -87,6 +108,24 @@ class DeidPipeline:
             "anonymizer": self.anonymizer.sha,
             "scrubber": self.scrub.sha,
         }
+        # optional content-addressed result cache (DESIGN.md §6); per-instance
+        # short-circuit happens in run_study, workers write study records back
+        self.lake = lake
+        self._fingerprint: Optional["RulesetFingerprint"] = None
+
+    def ruleset_fingerprint(self) -> "RulesetFingerprint":
+        """Fingerprint of this pipeline's full rule surface (scripts + device
+        scrub geometry + output-shaping config). Computed once: scripts and
+        config are immutable per pipeline."""
+        if self._fingerprint is None:
+            from repro.lake.fingerprint import RulesetFingerprint, callable_identity
+
+            config = (
+                f"recompress={self.scrub.recompress}|sv={self.scrub.sv}|"
+                f"blank={callable_identity(self.scrub.blank_fn)}"
+            )
+            self._fingerprint = RulesetFingerprint.of(self.script_shas, config=config)
+        return self._fingerprint
 
     # ------------------------------------------------------------- instances
     def process_instance(
@@ -136,30 +175,25 @@ class DeidPipeline:
             return None, entry
 
     # --------------------------------------------------------------- studies
-    def process_study(
-        self, study: SyntheticStudy, request: DeidRequest, worker_id: str = ""
-    ) -> Tuple[List[DicomDataset], Manifest]:
-        """De-identify every instance of a study.
-
-        Routes through the shape-bucketed :class:`BatchedDeidExecutor` by
-        default: filter everything, scrub the survivors in fused-kernel
-        batches, then anonymize. Delivered order and manifest contents are
-        identical to :meth:`process_study_serial` (tested), which remains the
-        per-instance fallback/oracle path.
-        """
+    def _deid_datasets(
+        self, datasets: Sequence[DicomDataset], request: DeidRequest, worker_id: str
+    ) -> List[Tuple[Optional[DicomDataset], ManifestEntry]]:
+        """Run the three stages over a list of instances, returning aligned
+        (delivered-or-None, entry) pairs. Uses the shape-bucketed executor
+        when attached; falls back to the per-instance path otherwise."""
         if self.executor is None:
-            return self.process_study_serial(study, request, worker_id)
-        manifest = Manifest(request_id=f"{request.research_study}/{request.anon_accession}")
-        delivered: List[DicomDataset] = []
+            return [self.process_instance(ds, request, worker_id) for ds in datasets]
         params = request.script_params()
-        entries: List[Optional[ManifestEntry]] = [None] * len(study.datasets)
+        pairs: List[Optional[Tuple[Optional[DicomDataset], ManifestEntry]]] = [
+            None
+        ] * len(datasets)
         accepted: List[Tuple[int, DicomDataset]] = []
-        for i, ds in enumerate(study.datasets):
+        for i, ds in enumerate(datasets):
             decision = self.filter(ds)
             if decision.accepted:
                 accepted.append((i, ds))
             else:
-                entries[i] = ManifestEntry(
+                entry = ManifestEntry(
                     sop_uid_anon="",
                     outcome=Outcome.FILTERED,
                     modality=str(ds.get("Modality", "")),
@@ -168,6 +202,7 @@ class DeidPipeline:
                     worker_id=worker_id,
                     script_shas=self.script_shas,
                 )
+                pairs[i] = (None, entry)
 
         slots = self.scrub.scrub_study([ds for _, ds in accepted], self.executor)
         for (i, ds), (scrubbed, err) in zip(accepted, slots):
@@ -177,7 +212,7 @@ class DeidPipeline:
                 except ScrubError as e:  # parity with process_instance's catch scope
                     err = e
             if err is not None:
-                entries[i] = ManifestEntry(
+                entry = ManifestEntry(
                     sop_uid_anon="",
                     outcome=Outcome.FAILED,
                     modality=str(ds.get("Modality", "")),
@@ -186,8 +221,9 @@ class DeidPipeline:
                     worker_id=worker_id,
                     script_shas=self.script_shas,
                 )
+                pairs[i] = (None, entry)
                 continue
-            entries[i] = ManifestEntry(
+            entry = ManifestEntry(
                 sop_uid_anon=str(anon.dataset.get("SOPInstanceUID", "")),
                 outcome=Outcome.ANONYMIZED,
                 modality=str(ds.get("Modality", "")),
@@ -199,11 +235,73 @@ class DeidPipeline:
                 worker_id=worker_id,
                 script_shas=self.script_shas,
             )
-            delivered.append(anon.dataset)  # accepted is in dataset order
-        for entry in entries:
-            assert entry is not None
+            pairs[i] = (anon.dataset, entry)
+        for p in pairs:  # loud, not silent: a dropped slot is a lost instance
+            assert p is not None
+        return pairs  # type: ignore[return-value]
+
+    def run_study(
+        self, study: SyntheticStudy, request: DeidRequest, worker_id: str = ""
+    ) -> StudyDeidResult:
+        """De-identify every instance of a study.
+
+        With a result lake attached, each instance is first looked up by its
+        content-addressed key — hits replay the cached result (byte-identical
+        to the cold path, tested) and only the cold remainder flows through
+        filter/scrub/anonymize; fresh results are written back. Without a
+        lake this is the plain batched path.
+        """
+        manifest = Manifest(request_id=f"{request.research_study}/{request.anon_accession}")
+        if self.lake is None:
+            pairs = self._deid_datasets(study.datasets, request, worker_id)
+            result = StudyDeidResult([], manifest)
+        else:
+            from repro.lake.fingerprint import cache_key, instance_digest, request_salt
+            from repro.lake.records import decode_instance_record, encode_instance_record
+
+            ruleset = self.ruleset_fingerprint().digest
+            salt = request_salt(request)
+            keys = [
+                cache_key(instance_digest(ds), ruleset, salt) for ds in study.datasets
+            ]
+            slots: List[Optional[Tuple[Optional[DicomDataset], ManifestEntry]]] = [
+                None
+            ] * len(keys)
+            cold: List[int] = []
+            for i, key in enumerate(keys):
+                blob = self.lake.get(key)
+                if blob is None:
+                    cold.append(i)
+                else:
+                    slots[i] = decode_instance_record(blob)
+            cold_pairs = self._deid_datasets(
+                [study.datasets[i] for i in cold], request, worker_id
+            )
+            assert len(cold_pairs) == len(cold)
+            for i, pair in zip(cold, cold_pairs):
+                slots[i] = pair
+                self.lake.put(keys[i], encode_instance_record(*pair))
+            for s in slots:  # every instance is either a hit or a cold result
+                assert s is not None
+            pairs = slots  # type: ignore[assignment]
+            result = StudyDeidResult(
+                [], manifest, instance_keys=keys,
+                cache_hits=len(keys) - len(cold), cache_misses=len(cold),
+            )
+        for out, entry in pairs:
             manifest.add(entry)
-        return delivered, manifest
+            if out is not None:
+                result.delivered.append(out)
+        return result
+
+    def process_study(
+        self, study: SyntheticStudy, request: DeidRequest, worker_id: str = ""
+    ) -> Tuple[List[DicomDataset], Manifest]:
+        """Tuple façade over :meth:`run_study`. Delivered order and manifest
+        contents are identical to :meth:`process_study_serial` (tested), which
+        remains the per-instance fallback/oracle path."""
+        result = self.run_study(study, request, worker_id)
+        return result.delivered, result.manifest
 
     def process_study_serial(
         self, study: SyntheticStudy, request: DeidRequest, worker_id: str = ""

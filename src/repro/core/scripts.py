@@ -88,6 +88,7 @@ keep SoftwareVersions
 keep Rows
 keep Columns
 keep BitsAllocated
+keep BitsStored
 keep SamplesPerPixel
 keep BurnedInAnnotation
 keep ImageType

@@ -140,6 +140,8 @@ class StudyGenerator:
         ds["Rows"] = device.rows
         ds["Columns"] = device.cols
         ds["BitsAllocated"] = 16 if dtype == np.uint16 else 8
+        # stored sample depth: 12-bit data in 16-bit words, full range for u8
+        ds["BitsStored"] = 12 if dtype == np.uint16 else 8
         ds["SamplesPerPixel"] = 1
         ds["BurnedInAnnotation"] = "NO"
         ds["ImageType"] = "ORIGINAL\\PRIMARY\\AXIAL"

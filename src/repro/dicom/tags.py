@@ -80,6 +80,7 @@ _ALL = [
     _t(0x0028, 0x0010, "US", "Rows"),
     _t(0x0028, 0x0011, "US", "Columns"),
     _t(0x0028, 0x0100, "US", "BitsAllocated"),
+    _t(0x0028, 0x0101, "US", "BitsStored"),
     _t(0x0028, 0x0002, "US", "SamplesPerPixel"),
     _t(0x0028, 0x0301, "CS", "BurnedInAnnotation"),
     _t(0x0008, 0x0008, "CS", "ImageType"),

@@ -1,0 +1,42 @@
+# Content-addressed de-identification result lake (DESIGN.md §6): ruleset-
+# versioned cache keys, LRU-bounded result store, and the cohort planner with
+# single-flight request coalescing.
+#
+# NOTE: planner must be imported last — it pulls in repro.core.pipeline and
+# repro.queueing, whose modules import repro.lake.fingerprint/records back.
+from repro.lake.fingerprint import (
+    RulesetFingerprint,
+    cache_key,
+    geometry_digest,
+    instance_digest,
+    request_salt,
+    study_key,
+)
+from repro.lake.records import (
+    decode_instance_record,
+    decode_study_record,
+    encode_instance_record,
+    encode_study_record,
+)
+from repro.lake.store import InMemoryBackend, LakeBackend, LakeStats, ResultLake
+from repro.lake.planner import CohortPlanner, CohortTicket, PlannerStats
+
+__all__ = [
+    "RulesetFingerprint",
+    "cache_key",
+    "geometry_digest",
+    "instance_digest",
+    "request_salt",
+    "study_key",
+    "encode_instance_record",
+    "decode_instance_record",
+    "encode_study_record",
+    "decode_study_record",
+    "ResultLake",
+    "LakeBackend",
+    "InMemoryBackend",
+    "LakeStats",
+    "CohortPlanner",
+    "CohortTicket",
+    "PlannerStats",
+]

@@ -1,0 +1,264 @@
+"""Cohort request planner: warm/in-flight/cold partitioning + single-flight
+coalescing (DESIGN.md §6).
+
+Researchers request overlapping cohorts (lists of accessions). The planner is
+the admission layer in front of the broker that makes repeat traffic cheap:
+
+* **warm** — a study-level record exists in the result lake and every
+  instance record it references is still resident: the results are served
+  straight from the lake. Zero broker publishes, zero kernel dispatches.
+* **in-flight** — another cohort already published this accession and a
+  worker is (or will be) computing it: the new request *subscribes* to the
+  existing computation instead of publishing duplicate work (single-flight).
+* **cold** — genuinely new work: published to the broker, registered as
+  in-flight so later requesters coalesce onto it.
+
+Single-flight composes with the journal's exactly-once dedup rather than
+replacing it: the planner stops duplicate *publishes* at admission; the
+journal still stops duplicate *completions* (crash redelivery, speculative
+clones) behind the broker. A journal-done accession whose lake entries were
+evicted is still reported warm — its outputs were already delivered — with
+the manifest replayed from the journal.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Set, Tuple
+
+from repro.core.manifest import Manifest
+from repro.core.pipeline import DeidRequest, build_request
+from repro.core.pseudonym import PseudonymService
+from repro.dicom.dataset import DicomDataset
+from repro.lake.fingerprint import request_salt, study_key
+from repro.lake.records import decode_instance_record, decode_study_record
+from repro.lake.store import ResultLake
+from repro.queueing.broker import Broker
+from repro.queueing.journal import Journal
+from repro.storage.object_store import StudyStore
+from repro.utils.logging import get_logger
+
+log = get_logger("lake.planner")
+
+
+@dataclass
+class PlannerStats:
+    accessions: int = 0
+    lake_hits: int = 0      # served entirely from the result lake
+    journal_hits: int = 0   # already completed; outputs delivered previously
+    coalesced: int = 0      # subscribed to an in-flight computation
+    published: int = 0      # cold: emitted to the broker
+    rejected: int = 0
+    resolved: int = 0       # in-flight completions handed to subscribers
+    demoted: int = 0        # study record found but instance blobs evicted
+    dead_lettered: int = 0  # in-flight work that exhausted its deliveries
+
+
+@dataclass
+class CohortTicket:
+    """One cohort request's view of its accessions.
+
+    ``manifests``/``outputs`` are filled immediately for warm accessions and
+    at :meth:`CohortPlanner.resolve` time for coalesced/cold ones (outputs
+    only while the lake still holds them; cold outputs are always also
+    delivered to the researcher bucket by the worker)."""
+
+    cohort_id: int
+    study_id: str
+    hits: List[str] = field(default_factory=list)
+    coalesced: List[str] = field(default_factory=list)
+    cold: List[str] = field(default_factory=list)
+    rejected: Dict[str, str] = field(default_factory=dict)
+    failed: Dict[str, str] = field(default_factory=dict)  # e.g. dead-lettered
+    manifests: Dict[str, Manifest] = field(default_factory=dict)
+    outputs: Dict[str, List[DicomDataset]] = field(default_factory=dict)
+    pending: Set[str] = field(default_factory=set)
+
+    def done(self) -> bool:
+        return not self.pending
+
+
+@dataclass
+class _InFlight:
+    accession: str
+    request: DeidRequest
+    tickets: List[CohortTicket] = field(default_factory=list)
+    published_at: float = 0.0  # broker publish_time of THIS registration
+
+
+class CohortPlanner:
+    def __init__(
+        self,
+        result_lake: ResultLake,
+        source: StudyStore,
+        broker: Broker,
+        journal: Journal,
+        validate: Optional[Callable[[str], Tuple[bool, str]]] = None,
+        ruleset_digest: str = "",
+    ) -> None:
+        self.result_lake = result_lake
+        self.source = source
+        self.broker = broker
+        self.journal = journal
+        self.validate = validate
+        # must match the digest of the pipeline serving the worker pool —
+        # DeidService wires both sides from the same DeidPipeline
+        self.ruleset_digest = ruleset_digest
+        self.stats = PlannerStats()
+        self._inflight: Dict[str, _InFlight] = {}
+        self._cohorts = 0
+
+    # ------------------------------------------------------------- admission
+    def submit(
+        self,
+        pseudo: PseudonymService,
+        accessions: List[str],
+        mrn_lookup: Dict[str, str],
+    ) -> CohortTicket:
+        """Partition one cohort request and publish only the cold slice."""
+        # opportunistically clear finished in-flight work first, so a key
+        # completed since the last resolve() is served warm rather than
+        # coalesced onto a registration nobody will ever resolve
+        self.resolve()
+        self._cohorts += 1
+        ticket = CohortTicket(cohort_id=self._cohorts, study_id=pseudo.study_id)
+        for acc in accessions:
+            self.stats.accessions += 1
+            if self.validate is not None:
+                ok, reason = self.validate(acc)
+                if not ok:
+                    ticket.rejected[acc] = reason
+                    self.stats.rejected += 1
+                    continue
+            key = f"{pseudo.study_id}/{acc}"
+            entry = self._inflight.get(key)
+            if entry is not None:  # single-flight: subscribe, don't republish
+                entry.tickets.append(ticket)
+                ticket.coalesced.append(acc)
+                ticket.pending.add(acc)
+                self.stats.coalesced += 1
+                continue
+            request = build_request(pseudo, acc, mrn_lookup[acc])
+            warm = self._materialize(acc, request)
+            if warm is not None:
+                ticket.hits.append(acc)
+                ticket.outputs[acc], ticket.manifests[acc] = warm
+                self.stats.lake_hits += 1
+                continue
+            done = self.journal.manifest_for(key)
+            if done is not None:
+                # completed before, lake since evicted: outputs already sit in
+                # the researcher bucket; replay the manifest only
+                ticket.hits.append(acc)
+                ticket.manifests[acc] = done
+                self.stats.journal_hits += 1
+                continue
+            ticket.cold.append(acc)
+            ticket.pending.add(acc)
+            self._register_and_publish(key, acc, request, [ticket])
+        return ticket
+
+    def admit(self, pseudo: PseudonymService, accession: str, request: DeidRequest) -> bool:
+        """Single-flight admission for non-cohort submits (`DeidService.submit`).
+        Returns False when the key is already in flight — the caller must not
+        publish a duplicate; otherwise publishes and registers it so later
+        cohorts coalesce onto this work. No ticket: plain submits track
+        completion through the journal, not through subscriptions."""
+        key = f"{pseudo.study_id}/{accession}"
+        if key in self._inflight:
+            self.stats.coalesced += 1
+            return False
+        self._register_and_publish(key, accession, request, [])
+        return True
+
+    def _register_and_publish(
+        self, key: str, accession: str, request: DeidRequest, tickets: List[CohortTicket]
+    ) -> None:
+        # metadata-only admission: stored size is the backlog estimate;
+        # only the worker ever reads (and pays egress for) the study
+        self.broker.publish(
+            key=key,
+            payload={"accession": accession, "request": request.__dict__},
+            nbytes=self.source.study_nbytes(accession) or 0,
+        )
+        self._inflight[key] = _InFlight(
+            accession, request, tickets, published_at=self.broker.clock.now()
+        )
+        self.stats.published += 1
+
+    # ------------------------------------------------------------ completion
+    def resolve(self) -> List[str]:
+        """Hand completed in-flight accessions to every subscribed ticket.
+        Call after (or during) a pool drain; returns the resolved keys.
+
+        In-flight work whose message exhausted its delivery budget (DLQ) is
+        *failed out*: subscribers are unblocked with an error instead of
+        waiting forever, and the registration is dropped so a later cohort
+        can republish once the fault clears."""
+        # match DLQ entries to *this* registration via publish_time: the DLQ
+        # list is cumulative, and a key dead-lettered once must not poison a
+        # later republish of the same accession (redeliveries and speculative
+        # clones keep the original publish_time, so they still match)
+        dead = {(m.key, m.publish_time) for m in self.broker.dead_letter}
+        resolved: List[str] = []
+        for key, entry in list(self._inflight.items()):
+            if not self.journal.is_done(key):
+                # fail out only when no live copy remains: a speculative clone
+                # may dead-letter while the original delivery still completes
+                if (key, entry.published_at) in dead and not self.broker.has_live(key):
+                    for ticket in entry.tickets:
+                        ticket.pending.discard(entry.accession)
+                        ticket.failed[entry.accession] = (
+                            "dead-lettered after max deliveries"
+                        )
+                    del self._inflight[key]
+                    self.stats.dead_lettered += 1
+                continue
+            warm = self._materialize(entry.accession, entry.request)
+            manifest = warm[1] if warm is not None else self.journal.manifest_for(key)
+            for ticket in entry.tickets:
+                ticket.pending.discard(entry.accession)
+                if manifest is not None:
+                    ticket.manifests[entry.accession] = manifest
+                if warm is not None:
+                    ticket.outputs[entry.accession] = warm[0]
+            del self._inflight[key]
+            self.stats.resolved += 1
+            resolved.append(key)
+        return resolved
+
+    def inflight_keys(self) -> List[str]:
+        return list(self._inflight)
+
+    # ------------------------------------------------------------- internals
+    def _materialize(
+        self, accession: str, request: DeidRequest
+    ) -> Optional[Tuple[List[DicomDataset], Manifest]]:
+        """Reassemble a study's outputs purely from the lake, or None when any
+        piece is missing (no study record, or instance blobs evicted)."""
+        etag = self.source.study_etag(accession)
+        if etag is None:
+            return None
+        skey = study_key(accession, etag, self.ruleset_digest, request_salt(request))
+        blob = self.result_lake.get(skey)
+        if blob is None:
+            return None
+        instance_keys = decode_study_record(blob)
+        if not all(self.result_lake.contains(k) for k in instance_keys):
+            # partially evicted: drop the stale study record and recompute
+            self.result_lake.delete(skey)
+            self.stats.demoted += 1
+            return None
+        manifest = Manifest(
+            request_id=f"{request.research_study}/{request.anon_accession}"
+        )
+        outputs: List[DicomDataset] = []
+        for k in instance_keys:
+            rec = self.result_lake.get(k)
+            if rec is None:  # raced an eviction between contains() and get()
+                self.stats.demoted += 1
+                return None
+            dataset, entry = decode_instance_record(rec)
+            manifest.add(entry)
+            if dataset is not None:
+                outputs.append(dataset)
+        return outputs, manifest

@@ -1,0 +1,150 @@
+"""Content-addressed de-identified result store with LRU bounds (DESIGN.md §6).
+
+The lake is the layer that turns "fast per study" into "fast under repeated
+multi-user traffic": workers write finished per-instance results here, and the
+cohort planner / cache-aware pipeline read them back instead of recomputing.
+
+The store itself is deliberately dumb: opaque bytes in, opaque bytes out,
+keyed by the content-addressed keys minted in ``repro.lake.fingerprint``. The
+``LakeBackend`` interface is persistence-shaped (put/get/delete/size of raw
+bytes) so a cloud bucket or disk tier can replace ``InMemoryBackend`` without
+touching eviction or metrics, which live in :class:`ResultLake`.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+
+class LakeBackend:
+    """Minimal persistence interface: opaque bytes keyed by string."""
+
+    def put_bytes(self, key: str, data: bytes) -> None:
+        raise NotImplementedError
+
+    def get_bytes(self, key: str) -> Optional[bytes]:
+        raise NotImplementedError
+
+    def delete(self, key: str) -> None:
+        raise NotImplementedError
+
+    def nbytes(self, key: str) -> int:
+        raise NotImplementedError
+
+
+class InMemoryBackend(LakeBackend):
+    def __init__(self) -> None:
+        self._blobs: Dict[str, bytes] = {}
+
+    def put_bytes(self, key: str, data: bytes) -> None:
+        self._blobs[key] = data
+
+    def get_bytes(self, key: str) -> Optional[bytes]:
+        return self._blobs.get(key)
+
+    def delete(self, key: str) -> None:
+        self._blobs.pop(key, None)
+
+    def nbytes(self, key: str) -> int:
+        b = self._blobs.get(key)
+        return 0 if b is None else len(b)
+
+
+@dataclass
+class LakeStats:
+    hits: int = 0
+    misses: int = 0
+    puts: int = 0
+    evictions: int = 0
+    bytes_in: int = 0       # bytes written into the lake
+    bytes_out: int = 0      # bytes served from the lake
+    evicted_bytes: int = 0
+    oversize_rejects: int = 0  # single blobs larger than the whole budget
+
+    def hit_rate(self) -> float:
+        n = self.hits + self.misses
+        return self.hits / n if n else 0.0
+
+
+class ResultLake:
+    """Size-bounded LRU cache over a :class:`LakeBackend`.
+
+    ``max_bytes`` bounds the *stored payload* bytes; eviction is
+    least-recently-used where both reads and writes refresh recency. The LRU
+    index is kept here (not in the backend) so a persistent backend can stay a
+    plain key/value store.
+    """
+
+    def __init__(
+        self, max_bytes: int = 256 * 1024 * 1024, backend: Optional[LakeBackend] = None
+    ) -> None:
+        self.max_bytes = max_bytes
+        self.backend = backend or InMemoryBackend()
+        self.stats = LakeStats()
+        self._lru: "OrderedDict[str, int]" = OrderedDict()  # key -> nbytes
+        self._stored_bytes = 0
+
+    # ----------------------------------------------------------------- reads
+    def get(self, key: str) -> Optional[bytes]:
+        if key not in self._lru:
+            self.stats.misses += 1
+            return None
+        data = self.backend.get_bytes(key)
+        if data is None:  # backend lost the blob (e.g. external pruning)
+            self._drop(key)
+            self.stats.misses += 1
+            return None
+        self._lru.move_to_end(key)
+        self.stats.hits += 1
+        self.stats.bytes_out += len(data)
+        return data
+
+    def contains(self, key: str) -> bool:
+        """Presence probe: no hit/miss accounting, no recency refresh."""
+        return key in self._lru
+
+    # ---------------------------------------------------------------- writes
+    def put(self, key: str, data: bytes) -> bool:
+        """Store a result; returns False when the blob alone exceeds the
+        budget (storing it would immediately evict everything else)."""
+        if len(data) > self.max_bytes:
+            self.stats.oversize_rejects += 1
+            return False
+        if key in self._lru:
+            self._stored_bytes -= self._lru[key]
+        self.backend.put_bytes(key, data)
+        self._lru[key] = len(data)
+        self._lru.move_to_end(key)
+        self._stored_bytes += len(data)
+        self.stats.puts += 1
+        self.stats.bytes_in += len(data)
+        while self._stored_bytes > self.max_bytes:
+            self._evict_one()
+        return True
+
+    def delete(self, key: str) -> None:
+        self._drop(key)
+
+    # -------------------------------------------------------------- internals
+    def _drop(self, key: str) -> None:
+        if key in self._lru:
+            self._stored_bytes -= self._lru.pop(key)
+            self.backend.delete(key)
+
+    def _evict_one(self) -> None:
+        key, nbytes = self._lru.popitem(last=False)
+        self._stored_bytes -= nbytes
+        self.backend.delete(key)
+        self.stats.evictions += 1
+        self.stats.evicted_bytes += nbytes
+
+    # ------------------------------------------------------------------ misc
+    def stored_bytes(self) -> int:
+        return self._stored_bytes
+
+    def keys(self) -> List[str]:
+        return list(self._lru)
+
+    def __len__(self) -> int:
+        return len(self._lru)

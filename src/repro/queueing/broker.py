@@ -37,8 +37,10 @@ class QueueStats:
     available: int
     leased: int
     dead_lettered: int
-    backlog_bytes: int
+    backlog_bytes: int    # live work only — DLQ'd payloads are excluded, so
+                          # the autoscaler never scales against dead work
     oldest_publish_time: Optional[float]
+    dead_letter_bytes: int = 0  # poisoned payload bytes, reported separately
 
 
 class Broker:
@@ -143,11 +145,20 @@ class Broker:
             dead_lettered=len(self.dead_letter),
             backlog_bytes=sum(m.nbytes for m in msgs),
             oldest_publish_time=min((m.publish_time for m in msgs), default=None),
+            dead_letter_bytes=sum(m.nbytes for m in self.dead_letter),
         )
 
     def empty(self) -> bool:
         s = self.stats()
         return s.outstanding == 0
+
+    def has_live(self, key: str) -> bool:
+        """Any copy of ``key`` still available or leased (speculative clones
+        of a dead-lettered delivery may outlive it and complete normally)."""
+        self._expire_leases()
+        return any(m.key == key for m in self._available) or any(
+            m.key == key for m in self._leased.values()
+        )
 
     # straggler mitigation support: leases held longer than ``age`` seconds
     def stale_leases(self, age: float) -> List[Message]:

@@ -66,6 +66,13 @@ class Journal:
     def completed_keys(self) -> set:
         return set(self._completed)
 
+    def manifest_for(self, key: str) -> Optional[Manifest]:
+        """The completion manifest recorded for ``key``, or None."""
+        rec = self._completed.get(key)
+        if rec is None:
+            return None
+        return Manifest.from_json(json.dumps(rec["manifest"]))
+
     def manifests(self) -> Iterator[Manifest]:
         for rec in self._completed.values():
             yield Manifest.from_json(json.dumps(rec["manifest"]))

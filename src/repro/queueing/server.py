@@ -42,13 +42,39 @@ class WorkflowRecord:
 
 
 class DeidService:
-    def __init__(self, broker: Broker, lake: StudyStore, journal: Journal) -> None:
+    def __init__(
+        self,
+        broker: Broker,
+        lake: StudyStore,
+        journal: Journal,
+        result_lake=None,
+        pipeline=None,
+    ) -> None:
         self.broker = broker
         self.lake = lake
         self.journal = journal
         self._studies: Dict[str, PseudonymService] = {}
         self._ineligible: Set[str] = set()  # e.g. research-opt-out patients
         self.records: List[WorkflowRecord] = []
+        # cohort planner over the de-id result lake (DESIGN.md §6). The
+        # planner's ruleset digest must match the worker pipeline's, so both
+        # are wired from the same DeidPipeline instance.
+        self.planner = None
+        if result_lake is not None:
+            if pipeline is None:
+                raise ValueError(
+                    "result_lake requires the worker DeidPipeline (ruleset digest)"
+                )
+            from repro.lake.planner import CohortPlanner
+
+            self.planner = CohortPlanner(
+                result_lake,
+                lake,
+                broker,
+                journal,
+                validate=self.validate,
+                ruleset_digest=pipeline.ruleset_fingerprint().digest,
+            )
 
     # -------------------------------------------------------------- studies
     def register_study(
@@ -86,16 +112,46 @@ class DeidService:
                 rec = WorkflowRecord(study_id, acc, RequestState.DONE)
             else:
                 req = build_request(pseudo, acc, mrn_lookup[acc])
-                study = self.lake.get_study(acc)
-                self.broker.publish(
-                    key=f"{study_id}/{acc}",
-                    payload={"accession": acc, "request": req.__dict__},
-                    nbytes=study.nbytes(),
-                )
+                if self.planner is not None:
+                    # route through the single-flight registry: no duplicate
+                    # publish when a cohort (or earlier submit) already has
+                    # this accession in flight, and cohorts arriving later
+                    # coalesce onto this publish
+                    self.planner.admit(pseudo, acc, req)
+                else:
+                    # metadata-only: blob size estimates backlog without
+                    # reading (decrypting) the study the worker fetches anyway
+                    self.broker.publish(
+                        key=f"{study_id}/{acc}",
+                        payload={"accession": acc, "request": req.__dict__},
+                        nbytes=self.lake.study_nbytes(acc) or 0,
+                    )
                 rec = WorkflowRecord(study_id, acc, RequestState.QUEUED, req.anon_accession)
             out.append(rec)
             self.records.append(rec)
         return out
+
+    def submit_cohort(self, study_id: str, accessions: List[str], mrn_lookup: Dict[str, str]):
+        """Cohort admission through the planner: warm accessions are served
+        from the result lake, in-flight ones coalesce onto existing work
+        (single-flight), and only the cold slice is published to the broker.
+        Returns the :class:`repro.lake.planner.CohortTicket`."""
+        if self.planner is None:
+            raise RuntimeError("no result lake configured; use submit()")
+        if study_id not in self._studies:
+            raise KeyError(f"research study {study_id!r} not registered")
+        ticket = self.planner.submit(self._studies[study_id], accessions, mrn_lookup)
+        for acc in ticket.hits:
+            self.records.append(
+                WorkflowRecord(study_id, acc, RequestState.DONE)
+            )
+        for acc in ticket.coalesced + ticket.cold:
+            self.records.append(WorkflowRecord(study_id, acc, RequestState.QUEUED))
+        for acc, reason in ticket.rejected.items():
+            self.records.append(
+                WorkflowRecord(study_id, acc, RequestState.REJECTED, reason=reason)
+            )
+        return ticket
 
     def request_states(self, study_id: str) -> Dict[str, RequestState]:
         out: Dict[str, RequestState] = {}

@@ -69,6 +69,8 @@ class DeidWorker:
     processed: int = 0
     deduped: int = 0
     batched_instances: int = 0  # instances that went through the fused batch path
+    lake_hits: int = 0          # instances short-circuited by the result lake
+    lake_misses: int = 0
 
     def process(self, broker: Broker, msg: Message, injector: Optional[FailureInjector] = None) -> float:
         """Process one message; returns simulated seconds of work."""
@@ -85,14 +87,23 @@ class DeidWorker:
             # crash mid-processing: lease is abandoned, no ack, no journal entry
             raise WorkerCrash(f"{self.worker_id} crashed on {key} (delivery {msg.deliveries})")
 
-        study = self.source.get_study(msg.payload["accession"])
+        accession = msg.payload["accession"]
+        # pin the source version alongside the read: the study record must
+        # bind results to the bytes we actually de-identified, not whatever
+        # the source holds after a concurrent re-ingest
+        source_etag = self.source.study_etag(accession)
+        study = self.source.get_study(accession)
         batched0 = self.pipeline.executor.stats.instances if self.pipeline.executor else 0
-        outputs, manifest = self.pipeline.process_study(study, request, self.worker_id)
+        result = self.pipeline.run_study(study, request, self.worker_id)
+        outputs, manifest = result.delivered, result.manifest
         if self.pipeline.executor is not None:
             self.batched_instances += self.pipeline.executor.stats.instances - batched0
+        self.lake_hits += result.cache_hits
+        self.lake_misses += result.cache_misses
         request_id = f"{request.research_study}/{request.anon_accession}"
         for ds in outputs:
             self.dest.put_output(request_id, str(ds.get("SOPInstanceUID", "?")), ds)
+        self._record_study(accession, source_etag, request, result)
 
         if self.journal.record_done(key, manifest, self.worker_id):
             self.processed += 1
@@ -102,6 +113,27 @@ class DeidWorker:
 
         slowdown = injector.slowdown(self.worker_id, msg) if injector else 1.0
         return (study.nbytes() / self.throughput) * slowdown
+
+    def _record_study(self, accession: str, etag, request, result) -> None:
+        """Write the study-level completion record to the result lake so the
+        cohort planner can serve this accession warm next time."""
+        lake = self.pipeline.lake
+        if lake is None or not result.instance_keys or etag is None:
+            return
+        if not all(lake.contains(k) for k in result.instance_keys):
+            # some instance record never landed (oversize reject) or was
+            # already evicted: a study record pointing at missing blobs would
+            # only feed the planner's demote/recompute churn
+            return
+        # lazy import: repro.lake pulls core.pipeline back in (see lake/__init__)
+        from repro.lake.fingerprint import request_salt, study_key
+        from repro.lake.records import encode_study_record
+
+        skey = study_key(
+            accession, etag, self.pipeline.ruleset_fingerprint().digest,
+            request_salt(request),
+        )
+        lake.put(skey, encode_study_record(result.instance_keys))
 
 
 @dataclass

@@ -36,12 +36,18 @@ class ObjectStore:
         self.name = name
         self._key = key
         self._blobs: Dict[str, bytes] = {}
+        self._etags: Dict[str, str] = {}
         self.bytes_written = 0
         self.bytes_read = 0
 
     def put(self, path: str, data: bytes) -> None:
         if self._key is not None:
             data = bytes(a ^ b for a, b in zip(data, _keystream(self._key, len(data))))
+        # content etag recorded at write time so readers (e.g. the cohort
+        # planner) can version objects without fetching them. Hashed over the
+        # *at-rest* bytes: a plaintext digest beside an encrypted blob would
+        # leak content equality (known-plaintext confirmation without the key)
+        self._etags[path] = hashlib.sha256(data).hexdigest()
         self._blobs[path] = data
         self.bytes_written += len(data)
 
@@ -59,11 +65,21 @@ class ObjectStore:
     def exists(self, path: str) -> bool:
         return path in self._blobs
 
+    def etag(self, path: str) -> Optional[str]:
+        """At-rest content digest recorded at put time (no blob read)."""
+        return self._etags.get(path)
+
+    def nbytes(self, path: str) -> Optional[int]:
+        """Stored size without a read (no decrypt, no egress accounting)."""
+        b = self._blobs.get(path)
+        return None if b is None else len(b)
+
     def list(self, prefix: str = "") -> List[str]:
         return sorted(p for p in self._blobs if p.startswith(prefix))
 
     def delete(self, path: str) -> None:
         self._blobs.pop(path, None)
+        self._etags.pop(path, None)
 
     def total_bytes(self) -> int:
         return sum(len(b) for b in self._blobs.values())
@@ -85,6 +101,14 @@ class StudyStore:
 
     def has_study(self, accession: str) -> bool:
         return self.store.exists(f"studies/{accession}")
+
+    def study_etag(self, accession: str) -> Optional[str]:
+        return self.store.etag(f"studies/{accession}")
+
+    def study_nbytes(self, accession: str) -> Optional[int]:
+        """Stored blob size — the metadata-only backlog estimate used at
+        admission (the worker is the one that actually reads the study)."""
+        return self.store.nbytes(f"studies/{accession}")
 
     def put_output(self, request_id: str, sop_uid: str, dataset: Any) -> int:
         blob = pickle.dumps(dataset, protocol=pickle.HIGHEST_PROTOCOL)

@@ -80,10 +80,42 @@ class TestPhiDetectKernel:
     @pytest.mark.parametrize("dtype", [np.uint8, np.uint16])
     def test_matches_ref(self, rng, shape, dtype):
         imgs = (rng.random(shape) * (255 if dtype == np.uint8 else 4095)).astype(dtype)
-        den_k = np.asarray(edge_density(imgs, tile=(32, 128)))
         thresh = (255.0 if dtype == np.uint8 else 4095.0) * 0.25
+        den_k = np.asarray(edge_density(imgs, thresh=thresh, tile=(32, 128)))
         den_r = np.asarray(edge_density_ref(jnp.asarray(imgs), thresh, (32, 128)))
         np.testing.assert_allclose(den_k, den_r, atol=1e-6)
+
+    def test_default_threshold_follows_dtype(self):
+        from repro.kernels.phi_detect.ops import DEFAULT_THRESH_FRAC, full_scale
+
+        # full-range uint16 (e.g. US captures) must not inherit the 12-bit max
+        assert full_scale(np.uint16) == 65535.0
+        assert full_scale(np.uint8) == 255.0
+        assert full_scale(np.float32) == 1.0
+        # BitsStored-style override for narrow ranges stored in wide dtypes
+        assert full_scale(np.uint16, max_value=4095) == 4095.0
+        # a 16-bit image with moderate (12-bit-scale) gradients is quiet under
+        # the dtype default but flags once the true stored range is declared
+        img = np.zeros((64, 128), np.uint16)
+        img[:, ::2] = 4095  # max-contrast strokes at 12-bit scale
+        assert not suspicious_tiles(img[None], tile=(32, 128)).any()
+        assert suspicious_tiles(img[None], tile=(32, 128), max_value=4095).all()
+
+    def test_audit_fails_closed_without_bitsstored(self):
+        """A dataset missing BitsStored must not be audited at the dtype max
+        (which no 12-bit gradient can reach): the ceiling is estimated from
+        the observed sample range instead."""
+        from repro.dicom.dataset import DicomDataset
+        from repro.kernels.phi_detect.ops import audit_dataset, stored_max_value
+
+        img = np.zeros((64, 128), np.uint16)
+        img[:, ::2] = 4095  # burned-in text at 12-bit scale
+        ds = DicomDataset(pixels=img)
+        assert stored_max_value(ds) == 4095.0  # estimated, not 65535
+        assert audit_dataset(ds)
+        ds["BitsStored"] = 12  # declared depth takes precedence when present
+        assert stored_max_value(ds) == 4095.0
+        assert audit_dataset(ds)
 
     def test_detects_burned_in_text(self, gen):
         study = gen.gen_study("PHI-1", modality="US", n_images=1)

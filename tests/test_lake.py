@@ -1,0 +1,512 @@
+"""De-id result lake tests: cache key derivation, LRU store, cache-aware
+pipeline (warm == cold, byte-identical), cohort planner partitioning,
+single-flight coalescing, and ruleset-fingerprint invalidation."""
+import pickle
+
+import pytest
+
+from repro.core import DeidPipeline, PseudonymService, TrustMode, build_request
+from repro.core.scripts import DEFAULT_SCRUB_SCRIPT
+from repro.dicom.generator import StudyGenerator
+from repro.lake import (
+    CohortPlanner,
+    ResultLake,
+    RulesetFingerprint,
+    cache_key,
+    geometry_digest,
+    instance_digest,
+    request_salt,
+)
+from repro.queueing import (
+    Autoscaler,
+    AutoscalerConfig,
+    Broker,
+    DeidWorker,
+    FailureInjector,
+    Journal,
+    WorkerPool,
+)
+from repro.queueing.server import DeidService
+from repro.storage.object_store import StudyStore
+from repro.utils.timing import SimClock
+
+try:
+    from hypothesis import HealthCheck, given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+def _ds_bytes(ds):
+    """Canonical content bytes of a dataset (byte-identity comparisons)."""
+    pix = (
+        None
+        if ds.pixels is None
+        else (ds.pixels.dtype.name, ds.pixels.shape, ds.pixels.tobytes())
+    )
+    return pickle.dumps(
+        ({k: str(v) for k, v in ds.elements.items()}, dict(ds.private), pix, ds.encapsulated)
+    )
+
+
+def _pseudo(study_id="IRB-LAKE"):
+    return PseudonymService(study_id, TrustMode.POST_IRB, key=b"k" * 32)
+
+
+# --------------------------------------------------------------------------- keys
+class TestFingerprint:
+    def test_deterministic(self):
+        p1, p2 = DeidPipeline(recompress=False), DeidPipeline(recompress=False)
+        assert p1.ruleset_fingerprint().digest == p2.ruleset_fingerprint().digest
+
+    def test_rule_edit_changes_digest(self):
+        base = DeidPipeline(recompress=False)
+        edited = DeidPipeline(
+            recompress=False,
+            scrub_script=DEFAULT_SCRUB_SCRIPT + "\nscrub CT Acme NewModel 64x64 (0,0,64,8)\n",
+        )
+        assert base.ruleset_fingerprint().digest != edited.ruleset_fingerprint().digest
+
+    def test_geometry_digest_tracks_rects(self):
+        class _Reg:
+            def __init__(self, shift):
+                self.shift = shift
+
+            def all_us_variants(self):
+                return []
+
+            def scrub_rects(self, key):
+                return [(0, 0, 100 + self.shift, 20)]
+
+        assert geometry_digest(_Reg(0)) == geometry_digest(_Reg(0))
+        assert geometry_digest(_Reg(0)) != geometry_digest(_Reg(1))
+
+    def test_salt_scopes_projects(self, gen):
+        s = gen.gen_study("SALT1", modality="CT", n_images=1)
+        r1 = build_request(_pseudo("IRB-A"), s.accession, s.mrn)
+        r2 = build_request(_pseudo("IRB-B"), s.accession, s.mrn)
+        assert request_salt(r1) != request_salt(r2)
+        assert request_salt(r1) == request_salt(
+            build_request(_pseudo("IRB-A"), s.accession, s.mrn)
+        )
+        d = instance_digest(s.datasets[0])
+        fp = DeidPipeline(recompress=False).ruleset_fingerprint().digest
+        assert cache_key(d, fp, request_salt(r1)) != cache_key(d, fp, request_salt(r2))
+
+    def test_callable_identity_tracks_behavior(self):
+        import functools
+
+        from repro.core import numpy_blank
+        from repro.lake.fingerprint import callable_identity
+
+        a = lambda px, rects: px                 # noqa: E731
+        b = lambda px, rects: None               # noqa: E731
+        assert callable_identity(a) != callable_identity(b)  # same name, diff body
+        assert callable_identity(numpy_blank) == callable_identity(numpy_blank)
+        # partial identity must be address-free (stable across processes)
+        p = callable_identity(functools.partial(numpy_blank))
+        assert "0x" not in p and "numpy_blank" in p
+
+    def test_instance_digest_tracks_content(self, gen):
+        s = gen.gen_study("DIG1", modality="CT", n_images=1)
+        ds = s.datasets[0]
+        d0 = instance_digest(ds)
+        assert d0 == instance_digest(ds.copy())
+        edited = ds.copy()
+        edited.pixels[0, 0] ^= 1
+        assert instance_digest(edited) != d0
+        relabeled = ds.copy()
+        relabeled["PatientName"] = "OTHER^NAME"
+        assert instance_digest(relabeled) != d0
+
+
+# -------------------------------------------------------------------------- store
+class TestResultLake:
+    def test_roundtrip_and_metrics(self):
+        lake = ResultLake(max_bytes=1000)
+        assert lake.get("a") is None
+        assert lake.stats.misses == 1
+        lake.put("a", b"x" * 10)
+        assert lake.get("a") == b"x" * 10
+        assert lake.stats.hits == 1 and lake.stats.puts == 1
+        assert lake.stats.bytes_in == 10 and lake.stats.bytes_out == 10
+        assert lake.stats.hit_rate() == 0.5
+
+    def test_lru_eviction_order(self):
+        lake = ResultLake(max_bytes=30)
+        lake.put("a", b"x" * 10)
+        lake.put("b", b"y" * 10)
+        lake.put("c", b"z" * 10)
+        assert lake.get("a") is not None  # refresh a: b is now least recent
+        lake.put("d", b"w" * 10)
+        assert not lake.contains("b") and lake.contains("a")
+        assert lake.stats.evictions == 1 and lake.stats.evicted_bytes == 10
+        assert lake.stored_bytes() <= 30
+
+    def test_overwrite_does_not_leak_bytes(self):
+        lake = ResultLake(max_bytes=100)
+        lake.put("a", b"x" * 40)
+        lake.put("a", b"y" * 20)
+        assert lake.stored_bytes() == 20
+
+    def test_oversize_rejected(self):
+        lake = ResultLake(max_bytes=10)
+        assert not lake.put("big", b"x" * 11)
+        assert lake.stats.oversize_rejects == 1 and len(lake) == 0
+
+
+# ----------------------------------------------------------------- pipeline cache
+class TestPipelineCache:
+    def _study(self, acc="PC01", modality="CT", n_images=4):
+        return StudyGenerator(33).gen_study(acc, modality=modality, n_images=n_images)
+
+    def test_warm_replay_is_byte_identical_and_dispatch_free(self):
+        study = self._study()
+        req = build_request(_pseudo(), study.accession, study.mrn)
+        cold_pipe = DeidPipeline(recompress=True)  # oracle: no lake at all
+        cold_out, cold_manifest = cold_pipe.process_study(study, req)
+
+        lake = ResultLake()
+        pipe = DeidPipeline(recompress=True, lake=lake)
+        first = pipe.run_study(study, req)
+        assert first.cache_misses == len(study.datasets) and first.cache_hits == 0
+
+        d0 = pipe.executor.stats.dispatches
+        warm = pipe.run_study(study, req)
+        assert pipe.executor.stats.dispatches == d0  # zero kernel dispatches
+        assert warm.cache_hits == len(study.datasets) and warm.cache_misses == 0
+
+        assert warm.manifest.to_json() == cold_manifest.to_json()
+        assert len(warm.delivered) == len(cold_out)
+        for w, c in zip(warm.delivered, cold_out):
+            assert _ds_bytes(w) == _ds_bytes(c)
+
+    def test_ruleset_bump_forces_recompute(self):
+        study = self._study("PC02")
+        req = build_request(_pseudo(), study.accession, study.mrn)
+        lake = ResultLake()
+        pipe = DeidPipeline(recompress=False, lake=lake)
+        pipe.run_study(study, req)
+        # same ruleset, fresh pipeline instance: fully warm
+        again = DeidPipeline(recompress=False, lake=lake).run_study(study, req)
+        assert again.cache_hits == len(study.datasets)
+        # edited scrub rule = new fingerprint: nothing may be reused
+        edited = DeidPipeline(
+            recompress=False,
+            lake=lake,
+            scrub_script=DEFAULT_SCRUB_SCRIPT + "\nscrub CT Acme NewModel 64x64 (0,0,64,8)\n",
+        )
+        res = edited.run_study(study, req)
+        assert res.cache_hits == 0 and res.cache_misses == len(study.datasets)
+
+    def test_geometry_bump_forces_recompute(self):
+        study = self._study("PC03")
+        req = build_request(_pseudo(), study.accession, study.mrn)
+        lake = ResultLake()
+        pipe = DeidPipeline(recompress=False, lake=lake)
+        pipe.run_study(study, req)
+        bumped = DeidPipeline(recompress=False, lake=lake)
+        fp = bumped.ruleset_fingerprint()
+        # simulate a device-registry geometry change (new rect layout digest)
+        bumped._fingerprint = RulesetFingerprint(
+            fp.filter_sha, fp.anonymizer_sha, fp.scrubber_sha, "deadbeef"
+        )
+        res = bumped.run_study(study, req)
+        assert res.cache_hits == 0 and res.cache_misses == len(study.datasets)
+
+    def test_recompress_config_does_not_share_keys(self):
+        """Pipelines differing in output-shaping config (recompress/sv) must
+        not serve each other's cached bytes."""
+        study = self._study("PC05")
+        req = build_request(_pseudo(), study.accession, study.mrn)
+        lake = ResultLake()
+        DeidPipeline(recompress=False, lake=lake).run_study(study, req)
+        res = DeidPipeline(recompress=True, lake=lake).run_study(study, req)
+        assert res.cache_hits == 0 and res.cache_misses == len(study.datasets)
+        for entry in res.manifest.entries:  # recompression actually happened
+            assert entry.recompressed
+
+    def test_partial_study_update_recomputes_only_new_slices(self):
+        study = self._study("PC04", n_images=5)
+        req = build_request(_pseudo(), study.accession, study.mrn)
+        lake = ResultLake()
+        pipe = DeidPipeline(recompress=False, lake=lake)
+        pipe.run_study(study, req)
+        study.datasets[2].pixels[0, 0] ^= 1  # one re-acquired slice
+        res = pipe.run_study(study, req)
+        assert res.cache_hits == 4 and res.cache_misses == 1
+
+
+def _check_warm_replay_matches_cold(modality, n_images, seed):
+    """Satellite property: warm-cache replay is byte-identical to cold."""
+    study = StudyGenerator(seed).gen_study(
+        f"HYP-{seed}", modality=modality, n_images=n_images
+    )
+    req = build_request(_pseudo(), study.accession, study.mrn)
+    cold_out, cold_manifest = DeidPipeline(recompress=False).process_study(study, req)
+    lake = ResultLake()
+    pipe = DeidPipeline(recompress=False, lake=lake)
+    pipe.run_study(study, req)
+    warm = pipe.run_study(study, req)
+    assert warm.cache_misses == 0
+    assert warm.manifest.to_json() == cold_manifest.to_json()
+    assert [_ds_bytes(d) for d in warm.delivered] == [_ds_bytes(d) for d in cold_out]
+
+
+if HAVE_HYPOTHESIS:
+
+    class TestCacheProperties:
+        @settings(
+            max_examples=8, deadline=None, suppress_health_check=[HealthCheck.too_slow]
+        )
+        @given(
+            modality=st.sampled_from(["CT", "US", "DX"]),
+            n_images=st.integers(1, 4),
+            seed=st.integers(0, 2**16),
+        )
+        def test_warm_cohort_replay_matches_cold(self, modality, n_images, seed):
+            _check_warm_replay_matches_cold(modality, n_images, seed)
+
+else:  # seeded sweep fallback (mirrors test_properties.py's skip philosophy,
+       # but keeps the byte-identity property exercised without hypothesis)
+
+    class TestCacheProperties:
+        @pytest.mark.parametrize(
+            "modality,n_images,seed",
+            [("CT", 2, 0), ("US", 3, 1), ("DX", 1, 2), ("US", 1, 3), ("CT", 4, 4)],
+        )
+        def test_warm_cohort_replay_matches_cold(self, modality, n_images, seed):
+            _check_warm_replay_matches_cold(modality, n_images, seed)
+
+
+# ------------------------------------------------------------------ cohort planner
+def _lake_env(tmp_path, journal_name, result_lake, source=None, mrns=None, n_studies=3):
+    """One service+pool stack. Pass the same (source, result_lake) to model a
+    second deployment (fresh broker/journal) over the same durable stores."""
+    clock = SimClock()
+    if source is None:
+        gen = StudyGenerator(21)
+        source, mrns = StudyStore("lake", key=b"lake-key"), {}
+        for i in range(n_studies):
+            acc = f"C{i:03d}"
+            s = gen.gen_study(acc, modality="CT", n_images=3)
+            source.put_study(acc, s)
+            mrns[acc] = s.mrn
+    broker = Broker(clock, visibility_timeout=30.0)
+    journal = Journal(tmp_path / journal_name)
+    pipeline = DeidPipeline(recompress=False, lake=result_lake)
+    service = DeidService(broker, source, journal, result_lake=result_lake, pipeline=pipeline)
+    service.register_study("IRB-LAKE", TrustMode.POST_IRB)
+    dest = StudyStore("researcher")
+    pool = WorkerPool(
+        broker,
+        Autoscaler(broker, AutoscalerConfig(), clock),
+        lambda wid: DeidWorker(wid, pipeline, source, dest, journal),
+    )
+    return source, mrns, broker, journal, pipeline, service, dest, pool
+
+
+class TestCohortPlanner:
+    def test_cold_then_fully_warm_repeat(self, tmp_path):
+        result_lake = ResultLake()
+        source, mrns, broker, journal, pipeline, service, dest, pool = _lake_env(
+            tmp_path, "j1.jsonl", result_lake
+        )
+        ticket = service.submit_cohort("IRB-LAKE", list(mrns), mrns)
+        assert sorted(ticket.cold) == sorted(mrns) and not ticket.hits
+        pool.drain()
+        assert service.planner.resolve() == [f"IRB-LAKE/{a}" for a in ticket.cold]
+        assert ticket.done()
+        assert set(ticket.manifests) == set(mrns) and set(ticket.outputs) == set(mrns)
+        first_outputs = {
+            a: [_ds_bytes(d) for d in ticket.outputs[a]] for a in mrns
+        }
+        first_manifests = {a: ticket.manifests[a].to_json() for a in mrns}
+
+        # second deployment: fresh broker/journal/planner, same lake + source.
+        # 100% cache hit => zero broker publishes, zero kernel dispatches.
+        _, _, broker2, journal2, pipeline2, service2, dest2, pool2 = _lake_env(
+            tmp_path, "j2.jsonl", result_lake, source=source, mrns=mrns
+        )
+        d0 = pipeline2.executor.stats.dispatches
+        warm_ticket = service2.submit_cohort("IRB-LAKE", list(mrns), mrns)
+        assert sorted(warm_ticket.hits) == sorted(mrns)
+        assert not warm_ticket.cold and not warm_ticket.coalesced
+        assert warm_ticket.done()
+        assert broker2.total_published == 0            # zero broker publishes
+        assert pipeline2.executor.stats.dispatches == d0  # zero kernel dispatches
+        assert service2.planner.stats.lake_hits == len(mrns)
+        for a in mrns:  # byte-identical to the cold path
+            assert [_ds_bytes(d) for d in warm_ticket.outputs[a]] == first_outputs[a]
+            assert warm_ticket.manifests[a].to_json() == first_manifests[a]
+
+    def test_single_flight_coalescing(self, tmp_path):
+        result_lake = ResultLake()
+        source, mrns, broker, journal, pipeline, service, dest, pool = _lake_env(
+            tmp_path, "j1.jsonl", result_lake
+        )
+        acc = list(mrns)[0]
+        t1 = service.submit_cohort("IRB-LAKE", [acc], mrns)
+        published = broker.total_published
+        assert t1.cold == [acc] and published == 1
+        # concurrent overlapping cohorts: subscribe, don't republish
+        t2 = service.submit_cohort("IRB-LAKE", [acc], mrns)
+        t3 = service.submit_cohort("IRB-LAKE", [acc], mrns)
+        assert t2.coalesced == [acc] and t3.coalesced == [acc]
+        assert broker.total_published == published  # single-flight held
+        assert service.planner.stats.coalesced == 2
+        pool.drain()
+        service.planner.resolve()
+        assert t1.done() and t2.done() and t3.done()
+        assert (
+            t1.manifests[acc].to_json()
+            == t2.manifests[acc].to_json()
+            == t3.manifests[acc].to_json()
+        )
+        # the study was processed exactly once (journal + single-flight)
+        assert journal.completed_keys() == {f"IRB-LAKE/{acc}"}
+
+    def test_plain_submit_composes_with_single_flight(self, tmp_path):
+        """Regression: DeidService.submit must neither republish an accession
+        a cohort already has in flight, nor publish invisibly to cohorts."""
+        result_lake = ResultLake()
+        source, mrns, broker, journal, pipeline, service, dest, pool = _lake_env(
+            tmp_path, "j1.jsonl", result_lake
+        )
+        accs = list(mrns)
+        t1 = service.submit_cohort("IRB-LAKE", [accs[0]], mrns)
+        service.submit("IRB-LAKE", [accs[0]], mrns)  # overlapping plain submit
+        assert broker.total_published == 1  # no duplicate publish
+
+        service.submit("IRB-LAKE", [accs[1]], mrns)  # plain submit first
+        assert broker.total_published == 2
+        t2 = service.submit_cohort("IRB-LAKE", [accs[1]], mrns)
+        assert t2.coalesced == [accs[1]]  # cohort coalesces onto it
+        assert broker.total_published == 2
+
+        pool.drain()
+        service.planner.resolve()
+        assert t1.done() and t2.done()
+        # each accession was computed exactly once
+        assert journal.completed_keys() == {f"IRB-LAKE/{a}" for a in accs[:2]}
+
+        # after completion, a new cohort is served warm — in-flight entries
+        # from plain submits resolve at admission, they don't linger
+        t3 = service.submit_cohort("IRB-LAKE", accs[:2], mrns)
+        assert sorted(t3.hits) == sorted(accs[:2]) and not t3.coalesced
+
+    def test_eviction_demotes_to_cold(self, tmp_path):
+        result_lake = ResultLake()
+        source, mrns, broker, journal, pipeline, service, dest, pool = _lake_env(
+            tmp_path, "j1.jsonl", result_lake
+        )
+        acc = list(mrns)[0]
+        service.submit_cohort("IRB-LAKE", [acc], mrns)
+        pool.drain()
+        service.planner.resolve()
+        # evict one instance blob behind the study record's back
+        from repro.lake.records import decode_study_record
+
+        skey = None
+        for k in result_lake.keys():
+            try:
+                keys = decode_study_record(result_lake.backend.get_bytes(k))
+                skey = k
+                break
+            except Exception:
+                continue
+        assert skey is not None
+        result_lake.delete(keys[0])
+
+        # fresh deployment so the journal cannot answer: must go cold again
+        _, _, broker2, journal2, pipeline2, service2, dest2, pool2 = _lake_env(
+            tmp_path, "j2.jsonl", result_lake, source=source, mrns=mrns
+        )
+        t = service2.submit_cohort("IRB-LAKE", [acc], mrns)
+        assert t.cold == [acc]
+        assert service2.planner.stats.demoted == 1
+        assert not result_lake.contains(skey)  # stale study record dropped
+
+    def test_journal_hit_when_lake_evicted(self, tmp_path):
+        result_lake = ResultLake()
+        source, mrns, broker, journal, pipeline, service, dest, pool = _lake_env(
+            tmp_path, "j1.jsonl", result_lake
+        )
+        acc = list(mrns)[0]
+        service.submit_cohort("IRB-LAKE", [acc], mrns)
+        pool.drain()
+        service.planner.resolve()
+        for k in result_lake.keys():  # total eviction
+            result_lake.delete(k)
+        t = service.submit_cohort("IRB-LAKE", [acc], mrns)
+        # already completed: outputs sit in the researcher bucket; the
+        # manifest replays from the journal, and nothing is republished
+        assert t.hits == [acc] and acc in t.manifests and acc not in t.outputs
+        assert service.planner.stats.journal_hits == 1
+        assert broker.total_published == 1  # only the original cold publish
+
+    def test_dead_lettered_work_fails_out_and_can_republish(self, tmp_path):
+        """A poisoned accession must not wedge single-flight forever: its
+        subscribers are failed out at resolve(), and a later cohort can
+        republish once the fault clears."""
+        result_lake = ResultLake()
+        source, mrns, broker, journal, pipeline, service, dest, pool = _lake_env(
+            tmp_path, "j1.jsonl", result_lake
+        )
+        broker.max_deliveries = 2
+        acc = list(mrns)[0]
+        pool.injector = FailureInjector(crash_rate=1.0)  # every delivery dies
+        t1 = service.submit_cohort("IRB-LAKE", [acc], mrns)
+        t2 = service.submit_cohort("IRB-LAKE", [acc], mrns)  # coalesces onto t1
+        pool.drain()
+        assert broker.stats().dead_lettered == 1
+        service.planner.resolve()
+        assert t1.done() and t2.done()
+        assert acc in t1.failed and acc in t2.failed
+        assert service.planner.stats.dead_lettered == 1
+        # the in-flight registration is gone: recovery is a plain republish
+        pool.injector = None
+        t3 = service.submit_cohort("IRB-LAKE", [acc], mrns)
+        assert t3.cold == [acc]
+        # regression: polling resolve() while the republished message is still
+        # in flight must NOT match the old DLQ entry and fail the live work
+        service.planner.resolve()
+        assert not t3.done() and acc not in t3.failed
+        pool.drain()
+        service.planner.resolve()
+        assert t3.done() and acc in t3.manifests and not t3.failed
+
+    def test_oversize_instances_do_not_write_doomed_study_records(self, tmp_path):
+        """Regression: when instance records can't land in the lake (oversize
+        reject), no study record may be written — otherwise every later
+        cohort would demote/recompute/rewrite it forever."""
+        result_lake = ResultLake(max_bytes=64)  # smaller than any record
+        source, mrns, broker, journal, pipeline, service, dest, pool = _lake_env(
+            tmp_path, "j1.jsonl", result_lake
+        )
+        acc = list(mrns)[0]
+        service.submit_cohort("IRB-LAKE", [acc], mrns)
+        pool.drain()
+        service.planner.resolve()
+        assert result_lake.stats.oversize_rejects > 0
+        assert len(result_lake) == 0  # no study record pointing at nothing
+
+        # a later deployment just goes cold — no demote churn
+        _, _, broker2, journal2, pipeline2, service2, dest2, pool2 = _lake_env(
+            tmp_path, "j2.jsonl", result_lake, source=source, mrns=mrns
+        )
+        t = service2.submit_cohort("IRB-LAKE", [acc], mrns)
+        assert t.cold == [acc]
+        assert service2.planner.stats.demoted == 0
+
+    def test_worker_lake_counters(self, tmp_path):
+        result_lake = ResultLake()
+        source, mrns, broker, journal, pipeline, service, dest, pool = _lake_env(
+            tmp_path, "j1.jsonl", result_lake
+        )
+        service.submit_cohort("IRB-LAKE", list(mrns), mrns)
+        pool.drain()
+        total = sum(w.lake_misses for w in pool._all_workers)
+        assert total == 3 * len(mrns)  # every instance was a cold miss
+        assert sum(w.lake_hits for w in pool._all_workers) == 0

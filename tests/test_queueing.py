@@ -88,6 +88,30 @@ class TestBroker:
         b.pull("w1")
         assert not b.ack(m.msg_id)
 
+    def test_dead_letter_bytes_leave_backlog_on_expiry(self):
+        """Regression: DLQ'd payload bytes must not linger in backlog_bytes,
+        or the autoscaler would keep instances alive for dead work."""
+        clock = SimClock()
+        b = Broker(clock, visibility_timeout=5, max_deliveries=3)
+        b.publish("poison", {}, nbytes=1000)
+        for _ in range(3):  # poison cycles through lease expiry into the DLQ
+            b.pull("w0")
+            clock.advance(6)
+        b.publish("live", {}, nbytes=10)
+        s = b.stats()
+        assert s.dead_lettered == 1
+        assert s.dead_letter_bytes == 1000
+        assert s.backlog_bytes == 10  # only the live payload remains
+
+    def test_dead_letter_bytes_leave_backlog_on_nack(self):
+        b = Broker(SimClock(), max_deliveries=1)
+        b.publish("poison", {}, nbytes=500)
+        m = b.pull("w0")[0]
+        b.nack(m.msg_id)  # delivery budget exhausted -> straight to DLQ
+        s = b.stats()
+        assert s.dead_lettered == 1 and s.dead_letter_bytes == 500
+        assert s.backlog_bytes == 0 and b.empty()
+
 
 class TestAutoscaler:
     def test_scales_with_backlog_and_window(self):
@@ -118,6 +142,19 @@ class TestAutoscaler:
         clock.advance(900)  # only 100s of window left
         t_late = a.tick()
         assert t_late > t_early
+
+    def test_does_not_scale_against_dead_work(self):
+        """Satellite regression: payload bytes that end in the DLQ must not
+        keep the autoscaler's target above min_instances."""
+        clock = SimClock()
+        b = Broker(clock, max_deliveries=1)
+        a = Autoscaler(b, AutoscalerConfig(min_instances=0, per_instance_throughput=1e6), clock)
+        b.publish("poison", {}, nbytes=10**12)  # would demand max_instances
+        assert a.tick() > 0
+        m = b.pull("w0")[0]
+        b.nack(m.msg_id)  # exhausted delivery budget -> DLQ
+        assert b.stats().dead_letter_bytes == 10**12
+        assert a.tick() == 0  # dead bytes don't hold the pool up
 
     def test_cost_accounting(self):
         clock = SimClock()
