@@ -10,6 +10,7 @@ def main() -> None:
     from benchmarks import (
         autoscale,
         cohortbench,
+        fleetbench,
         kernelbench,
         roofline,
         table1_throughput,
@@ -20,6 +21,7 @@ def main() -> None:
         ("table1_throughput", table1_throughput.main),
         ("table2_rules", table2_rules.main),
         ("cohortbench", cohortbench.main),
+        ("fleetbench", fleetbench.main),
         ("autoscale", autoscale.main),
         ("kernelbench", kernelbench.main),
         ("roofline", roofline.main),

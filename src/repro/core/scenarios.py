@@ -52,10 +52,22 @@ class Feature:
 _RECT_RE = re.compile(r"scrubbed at\s+(\d+)\s*,\s*(\d+)\s*,\s*(\d+)\s*,\s*(\d+)")
 
 
+class FeatureParseError(ValueError):
+    """A feature file the runner cannot execute. Carries the 1-based line
+    number and offending text so the regression-suite author sees exactly
+    which step is malformed (the paper's suite is written by humans)."""
+
+    def __init__(self, lineno: int, line: str, why: str) -> None:
+        super().__init__(f"line {lineno}: {why}: {line!r}")
+        self.lineno = lineno
+        self.line = line
+        self.why = why
+
+
 def parse_feature(text: str) -> Feature:
     feature = Feature("")
     scenario: Optional[Scenario] = None
-    for raw in text.splitlines():
+    for lineno, raw in enumerate(text.splitlines(), start=1):
         line = raw.strip()
         if not line or line.startswith("#"):
             continue
@@ -70,19 +82,31 @@ def parse_feature(text: str) -> Feature:
         elif "uses the" in low and "script" in low:
             m = re.search(r'uses the (\w+) script,?\s+"([^"]+)"', line)
             if not m:
-                raise ValueError(f"bad script step: {raw!r}")
+                raise FeatureParseError(
+                    lineno, raw, 'bad script step (want: uses the <kind> script, "<name>")'
+                )
             feature.scripts[m.group(1)] = m.group(2)
         elif low.startswith(("and script parameter", "given script parameter")):
             m = re.search(r'parameter\s+"([^"]+)"\s+is\s+"([^"]+)"', line)
+            if not m:
+                raise FeatureParseError(
+                    lineno, raw, 'bad parameter step (want: parameter "<key>" is "<value>")'
+                )
             feature.params[m.group(1)] = m.group(2)
         elif "the dicom directory" in low:
             m = re.search(r'"([^"]+)"', line)
-            assert scenario is not None, "Given directory outside scenario"
+            if m is None:
+                raise FeatureParseError(lineno, raw, "directory step without a quoted path")
+            if scenario is None:
+                raise FeatureParseError(
+                    lineno, raw, "Given directory outside any Scenario block"
+                )
             scenario.directory = m.group(1)
         elif low.startswith("when"):
             continue  # single action: ran through the pipeline
         elif low.startswith("then") or low.startswith("and the resulting"):
-            assert scenario is not None
+            if scenario is None:
+                raise FeatureParseError(lineno, raw, "Then step outside any Scenario block")
             if "should not pass the filter" in low:
                 scenario.expectations.append(("filtered", True))
             elif "should be anonymized" in low:
@@ -91,9 +115,13 @@ def parse_feature(text: str) -> Feature:
                 scenario.expectations.append(("jittered", True))
             elif "scrubbed at" in low:
                 m = _RECT_RE.search(line)
+                if m is None:
+                    raise FeatureParseError(
+                        lineno, raw, "bad scrub expectation (want: scrubbed at x,y,w,h)"
+                    )
                 scenario.expectations.append(("scrub_rect", tuple(int(g) for g in m.groups())))
             else:
-                raise ValueError(f"unknown Then step: {raw!r}")
+                raise FeatureParseError(lineno, raw, "unknown Then step")
     return feature
 
 
@@ -111,8 +139,17 @@ class VirtualDicomTree:
         if kind == "Anonymize":
             return self.gen.gen_study(f"SCN-{modality}-anon", modality=modality, n_images=3).datasets
         if kind == "Filter":
+            # dicom-phi/<MOD>/Filter            -> the classic six problem objects
+            # dicom-phi/<MOD>/Filter/<problem>  -> one specific PROBLEM_KINDS entry
+            if len(parts) > 3:
+                p = parts[3]
+                if p not in PROBLEM_KINDS:
+                    raise KeyError(f"unknown problem kind {p!r} in {path!r}")
+                kinds = [p]
+            else:
+                kinds = PROBLEM_KINDS[:6]
             out = []
-            for p in PROBLEM_KINDS[:6]:
+            for p in kinds:
                 s = self.gen.gen_study(f"SCN-{modality}-{p}", modality=modality, n_images=0, problem=p)
                 out.append(s.datasets[-1])
             return out

@@ -229,6 +229,23 @@ class CohortPlanner:
     def inflight_keys(self) -> List[str]:
         return list(self._inflight)
 
+    def audit_wedged(self) -> List[str]:
+        """Registrations whose subscribers can never be resolved: no live
+        broker copy remains, the journal never saw a completion, and the DLQ
+        holds no entry :meth:`resolve` could fail them out with. A non-empty
+        result means tickets would wait forever — the invariant the fleet
+        simulator's conformance suite checks after every run (call
+        :meth:`resolve` first so resolvable work doesn't show up here)."""
+        dead = {(m.key, m.publish_time) for m in self.broker.dead_letter}
+        wedged = []
+        for key, entry in self._inflight.items():
+            if self.journal.is_done(key) or self.broker.has_live(key):
+                continue
+            if (key, entry.published_at) in dead:
+                continue  # resolve() will fail this one out to its tickets
+            wedged.append(key)
+        return wedged
+
     # ------------------------------------------------------------- internals
     def _materialize(
         self, accession: str, request: DeidRequest

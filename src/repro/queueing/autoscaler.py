@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import List, Optional, Tuple
 
 from repro.queueing.broker import Broker
 from repro.utils.timing import SimClock
@@ -49,6 +49,9 @@ class Autoscaler:
         self._last_scale_down: float = -math.inf
         self.instance_seconds = 0.0  # integral for the cost model
         self._last_tick: Optional[float] = None
+        # (tick time, pool size after the tick): the piecewise-constant record
+        # the conformance suite re-integrates to audit instance_seconds
+        self.tick_log: List[Tuple[float, int]] = []
 
     def target_for(self, backlog_bytes: int) -> int:
         cfg = self.config
@@ -81,6 +84,7 @@ class Autoscaler:
                 self.events.append(ScaleEvent(now, self.current, target, stats.backlog_bytes, "scale-down"))
                 self.current = target
                 self._last_scale_down = now
+        self.tick_log.append((now, self.current))
         return self.current
 
     def cost_usd(self) -> float:

@@ -182,6 +182,60 @@ class WorkerPool:
         # scale-down deletes from the tail (paper: instances deleted when idle)
         del self.workers[n:]
 
+    def step(self) -> float:
+        """One scheduling round at the *current* sim time: autoscale, offer
+        each live worker at most one message, then run straggler mitigation.
+
+        Returns the busy-time (simulated seconds) of the slowest worker this
+        round, 0.0 when every worker idled. The clock is NOT advanced — the
+        caller owns time, which is what lets the fleet simulator interleave
+        arrivals, chaos events, and pool rounds at exact sim-times.
+        :meth:`drain` is the self-clocking wrapper.
+        """
+        n = self.autoscaler.tick()
+        self._resize(max(n, 1) if not self.broker.empty() else n)
+
+        busy = 0.0
+        for worker in list(self.workers):
+            msgs = self.broker.pull(worker.worker_id, max_messages=1)
+            if not msgs:
+                continue
+            try:
+                busy = max(busy, worker.process(self.broker, msgs[0], self.injector))
+            except WorkerCrash:
+                self.crashes += 1
+                # no ack: the lease expires and the broker redelivers
+
+        # straggler mitigation: clone stale leases back onto the queue
+        stats = self.broker.stats()
+        if stats.available == 0 and stats.leased > 0:
+            for stale in self.broker.stale_leases(self.straggler_age):
+                if self.broker.speculative_redeliver(stale.msg_id) is not None:
+                    self.speculative += 1
+        return busy
+
+    def finish(self) -> None:
+        """Final accounting tick + pool deletion (paper: instances deleted
+        once the queue is empty). Step-driven callers invoke this once the
+        broker is drained; :meth:`drain` does it automatically."""
+        self.autoscaler.tick()
+        self._resize(self.autoscaler.current)
+
+    def report(self, t0: float = 0.0, bytes_in: int = 0) -> PoolReport:
+        """Aggregate counters into a :class:`PoolReport` (step-driven callers
+        pass the drain-start time and initial backlog they observed)."""
+        return PoolReport(
+            processed=sum(w.processed for w in self._all_workers),
+            deduped=sum(w.deduped for w in self._all_workers),
+            crashes=self.crashes,
+            redeliveries=self.broker.total_redelivered,
+            speculative=self.speculative,
+            wall_seconds=self.broker.clock.now() - t0,
+            bytes_in=bytes_in,
+            cost_usd=self.autoscaler.cost_usd(),
+            scale_events=len(self.autoscaler.events),
+        )
+
     def drain(self) -> PoolReport:
         clock = self.broker.clock
         t0 = clock.now()
@@ -189,39 +243,7 @@ class WorkerPool:
         ticks = 0
         while not self.broker.empty() and ticks < self.max_ticks:
             ticks += 1
-            n = self.autoscaler.tick()
-            self._resize(max(n, 1) if not self.broker.empty() else n)
-
-            busy = 0.0
-            for worker in list(self.workers):
-                msgs = self.broker.pull(worker.worker_id, max_messages=1)
-                if not msgs:
-                    continue
-                try:
-                    busy = max(busy, worker.process(self.broker, msgs[0], self.injector))
-                except WorkerCrash:
-                    self.crashes += 1
-                    # no ack: the lease expires and the broker redelivers
-
-            # straggler mitigation: clone stale leases back onto the queue
-            stats = self.broker.stats()
-            if stats.available == 0 and stats.leased > 0:
-                for stale in self.broker.stale_leases(self.straggler_age):
-                    if self.broker.speculative_redeliver(stale.msg_id) is not None:
-                        self.speculative += 1
-
+            busy = self.step()
             clock.advance(max(busy, self.tick_seconds))
-        self.autoscaler.tick()  # final accounting tick (pool deletion)
-        self._resize(self.autoscaler.current)
-
-        return PoolReport(
-            processed=sum(w.processed for w in self._all_workers),
-            deduped=sum(w.deduped for w in self._all_workers),
-            crashes=self.crashes,
-            redeliveries=self.broker.total_redelivered,
-            speculative=self.speculative,
-            wall_seconds=clock.now() - t0,
-            bytes_in=bytes_in,
-            cost_usd=self.autoscaler.cost_usd(),
-            scale_events=len(self.autoscaler.events),
-        )
+        self.finish()
+        return self.report(t0, bytes_in)

@@ -51,14 +51,24 @@ class ServeEngine:
         self._pending.append(req)
 
     # ------------------------------------------------------------- serving
+    def step(self, key: Optional[jax.Array] = None) -> List[BatchResult]:
+        """Process at most one pending batch and return its results (empty
+        when the queue is idle). This is the event-loop entry point: a
+        step-driven caller (e.g. the fleet simulator) interleaves serve steps
+        with queue ticks instead of blocking in :meth:`run`."""
+        if not self._pending:
+            return []
+        batch = self._pending[: self.max_batch]
+        self._pending = self._pending[self.max_batch :]
+        key = key if key is not None else jax.random.PRNGKey(0)
+        return self._run_batch(batch, key)
+
     def run(self, key: Optional[jax.Array] = None) -> List[BatchResult]:
         """Drain pending requests in batches; returns completed results."""
         key = key if key is not None else jax.random.PRNGKey(0)
         results: List[BatchResult] = []
         while self._pending:
-            batch = self._pending[: self.max_batch]
-            self._pending = self._pending[self.max_batch :]
-            results.extend(self._run_batch(batch, key))
+            results.extend(self.step(key))
             key = jax.random.fold_in(key, len(results))
         return results
 

@@ -1,0 +1,49 @@
+"""Deterministic fleet simulator + invariant conformance suite (DESIGN.md §7).
+
+``FleetSim`` drives the real DeidService -> Broker -> WorkerPool -> Autoscaler
+-> ResultLake -> StudyStore stack under seeded traffic and chaos schedules;
+``repro.sim.invariants`` checks the run end to end. Single-seed replayability
+is the contract: same seed, byte-identical event log and metrics.
+"""
+from repro.sim.chaos import ChaosEvent, ChaosSchedule
+from repro.sim.events import Event, EventLog, EventQueue, HashRng
+from repro.sim.harness import FleetConfig, FleetReport, FleetSim
+from repro.sim.invariants import (
+    DEFAULT_CHECKERS,
+    AutoscalerAccounting,
+    ExactlyOnceDelivery,
+    InvariantChecker,
+    JournalDurability,
+    LakeConsistency,
+    NoWedgedSubscribers,
+    PhiBoundary,
+    Violation,
+    WarmReplayIdentity,
+)
+from repro.sim.traffic import BurstyTraffic, CohortArrival, DiurnalTraffic, ReplayStorm
+
+__all__ = [
+    "AutoscalerAccounting",
+    "BurstyTraffic",
+    "ChaosEvent",
+    "ChaosSchedule",
+    "CohortArrival",
+    "DEFAULT_CHECKERS",
+    "DiurnalTraffic",
+    "Event",
+    "EventLog",
+    "EventQueue",
+    "ExactlyOnceDelivery",
+    "FleetConfig",
+    "FleetReport",
+    "FleetSim",
+    "HashRng",
+    "InvariantChecker",
+    "JournalDurability",
+    "LakeConsistency",
+    "NoWedgedSubscribers",
+    "PhiBoundary",
+    "ReplayStorm",
+    "Violation",
+    "WarmReplayIdentity",
+]

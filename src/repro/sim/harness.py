@@ -1,0 +1,384 @@
+"""FleetSim: a deterministic discrete-event simulator over the REAL stack.
+
+Drives ``DeidService -> Broker -> WorkerPool -> Autoscaler -> ResultLake ->
+StudyStore`` — no mocks anywhere — under a traffic model and a chaos
+schedule, interleaving cohort arrivals, pool scheduling rounds, and fault
+injections at exact sim-times on the shared :class:`SimClock`.
+
+Determinism contract: everything a run does is a pure function of
+(:class:`FleetConfig`, traffic schedule, chaos schedule). Two runs with the
+same seed produce byte-identical event logs (``report.log_digest``) and
+metrics — the conformance suite enforces this, and it is what makes a chaos
+failure from CI replayable on a laptop from one integer.
+
+Event kinds in the log: ``ingest``, ``cohort``, ``tick``, ``chaos``,
+``chaos_restore``, ``cohort_done``, ``drain_done``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.pipeline import DeidPipeline
+from repro.core.pseudonym import TrustMode
+from repro.core import scripts as default_scripts
+from repro.dicom.generator import StudyGenerator, SyntheticStudy
+from repro.lake.store import ResultLake
+from repro.queueing.autoscaler import Autoscaler, AutoscalerConfig
+from repro.queueing.broker import Broker
+from repro.queueing.journal import Journal
+from repro.queueing.server import DeidService
+from repro.queueing.worker import DeidWorker, FailureInjector, WorkerPool
+from repro.sim.chaos import ChaosSchedule
+from repro.sim.events import EventLog, EventQueue
+from repro.sim.invariants import DEFAULT_CHECKERS, Violation
+from repro.sim.traffic import CohortArrival
+from repro.storage.object_store import StudyStore
+from repro.utils.timing import SimClock
+
+
+@dataclass
+class FleetConfig:
+    seed: int = 0
+    n_studies: int = 8
+    images_per_study: int = 3
+    modality: str = "CT"
+    delivery_window: float = 1800.0      # per-cohort SLA (seconds)
+    # modeled de-id compute rate, applied to BOTH the workers and the
+    # autoscaler's sizing estimate (a fleet whose planner disagrees with its
+    # workers about throughput is a different experiment)
+    worker_throughput: float = 160e6
+    max_instances: int = 16
+    visibility_timeout: float = 60.0
+    max_deliveries: int = 5
+    tick_seconds: float = 5.0
+    straggler_age: float = 120.0
+    lake_bytes: int = 1 << 30
+    recompress: bool = False             # cheap pixels by default; sim is about the fleet
+    max_events: int = 100_000
+
+
+@dataclass
+class FleetReport:
+    seed: int
+    log_digest: str
+    metrics: Dict[str, float]
+    violations: List[Violation]
+
+    def ok(self) -> bool:
+        return not self.violations
+
+
+class FleetSim:
+    def __init__(
+        self,
+        config: FleetConfig,
+        traffic: Sequence[CohortArrival],
+        journal_path,
+        chaos: Optional[ChaosSchedule] = None,
+    ) -> None:
+        self.config = config
+        self.traffic = sorted(traffic, key=lambda a: (a.t, a.study_id))
+        self.chaos = chaos or ChaosSchedule.quiet()
+        self.clock = SimClock()
+        self.log = EventLog()
+
+        # --- corpus: the identified data lake, with PHI ground truth retained
+        self.gen = StudyGenerator(config.seed)
+        self.source = StudyStore("lake", key=b"sim-at-rest-key")
+        self.mrns: Dict[str, str] = {}
+        self._versions: List[SyntheticStudy] = []  # every ingest, incl. re-ingests
+        self._etag_study: Dict[str, SyntheticStudy] = {}  # source etag -> version
+        self._hit_etag: Dict[Tuple[int, str], str] = {}   # (cohort, acc) at serve time
+        self._reingests = 0
+        for i in range(config.n_studies):
+            acc = f"SIM{i:04d}"
+            self._ingest(self.gen, acc)
+
+        # --- the real control/data plane, wired exactly like production
+        self.broker = Broker(
+            self.clock,
+            visibility_timeout=config.visibility_timeout,
+            max_deliveries=config.max_deliveries,
+        )
+        self.journal = Journal(journal_path)
+        self.lake = ResultLake(max_bytes=config.lake_bytes)
+        self.pipeline = DeidPipeline(recompress=config.recompress, lake=self.lake)
+        self.dest = StudyStore("researcher")
+        self.service = DeidService(
+            self.broker, self.source, self.journal,
+            result_lake=self.lake, pipeline=self.pipeline,
+        )
+        for arr in self.traffic:
+            if arr.study_id not in self.service._studies:
+                self.service.register_study(arr.study_id, TrustMode.POST_IRB)
+        self.injector = FailureInjector()
+        self.pool = WorkerPool(
+            self.broker,
+            Autoscaler(
+                self.broker,
+                AutoscalerConfig(
+                    delivery_window=config.delivery_window,
+                    per_instance_throughput=config.worker_throughput,
+                    max_instances=config.max_instances,
+                ),
+                self.clock,
+            ),
+            # factory object (not a closure over self.pipeline): workers spawned
+            # after a ruleset_edit chaos event get the edited pipeline
+            DeidWorkerProxyFactory(self),
+            self.injector,
+            straggler_age=config.straggler_age,
+            tick_seconds=config.tick_seconds,
+        )
+
+        self.tickets: List[Tuple[CohortArrival, object]] = []
+        self._cohort_arrival_t: Dict[int, float] = {}
+        self._cohort_done_t: Dict[int, float] = {}
+        self._tick_scheduled = False
+        self._ruleset_edits = 0
+        self._storm_depth = 0  # nested/overlapping lease storms (see _on_chaos)
+        # ruleset digest -> the pipeline that minted it, so the warm-replay
+        # checker can rebuild the exact cold oracle a hit was served under
+        self._pipelines: Dict[str, DeidPipeline] = {
+            self.pipeline.ruleset_fingerprint().digest: self.pipeline
+        }
+        self._ticket_digest: Dict[int, str] = {}
+
+    # ------------------------------------------------------------- corpus ops
+    def _ingest(self, gen: StudyGenerator, accession: str) -> None:
+        study = gen.gen_study(
+            accession, modality=self.config.modality,
+            n_images=self.config.images_per_study,
+        )
+        self.source.put_study(accession, study)
+        self.mrns[accession] = study.mrn
+        self._versions.append(study)
+        self._etag_study[self.source.study_etag(accession)] = study
+
+    def study_versions(self) -> List[SyntheticStudy]:
+        """Every source version ever ingested (re-ingests included) — the PHI
+        checker scans outputs against ALL of them."""
+        return list(self._versions)
+
+    def submitted_keys(self) -> set:
+        return {
+            f"{arr.study_id}/{acc}" for arr in self.traffic for acc in arr.accessions
+        }
+
+    def cold_pipeline_for(self, ticket) -> DeidPipeline:
+        """Lake-less clone of the pipeline whose ruleset served ``ticket``'s
+        warm hits — the oracle the warm-replay checker compares against.
+        (After a ruleset edit, earlier hits replay under the old scripts.)"""
+        src = self._pipelines[self._ticket_digest[ticket.cohort_id]]
+        return DeidPipeline(
+            filter_script=src.filter.script_text,
+            anonymizer_script=src.anonymizer.script_text,
+            scrub_script=src.scrub.script_text,
+            recompress=src.scrub.recompress,
+        )
+
+    # --------------------------------------------------------------- main loop
+    def run(self, checkers=DEFAULT_CHECKERS) -> FleetReport:
+        eq = EventQueue()
+        for arr in self.traffic:
+            eq.push(arr.t, "cohort", arrival=arr)
+        for ce in self.chaos.sorted():
+            eq.push(ce.t, "chaos", event=ce)
+
+        n_events = 0
+        while eq:
+            n_events += 1
+            if n_events > self.config.max_events:
+                self.log.append(self.clock.now(), "aborted", reason="max_events")
+                break
+            ev = eq.pop()
+            if ev.t > self.clock.now():
+                self.clock.advance(ev.t - self.clock.now())
+            if ev.kind == "cohort":
+                self._on_cohort(eq, ev.payload["arrival"])
+            elif ev.kind == "tick":
+                self._on_tick(eq)
+            elif ev.kind == "chaos":
+                self._on_chaos(eq, ev.payload["event"])
+            elif ev.kind == "chaos_restore":
+                # storms may overlap: only the last restore standing brings the
+                # baseline timeout back (a restore must never resurrect another
+                # storm's shrunken value)
+                self._storm_depth -= 1
+                if self._storm_depth == 0:
+                    self.broker.visibility_timeout = self.config.visibility_timeout
+                self.log.append(
+                    self.clock.now(), "chaos_restore",
+                    visibility_timeout=self.broker.visibility_timeout,
+                    storm_depth=self._storm_depth,
+                )
+
+        self.pool.finish()
+        self._resolve_and_log_done()
+        self.log.append(
+            self.clock.now(), "drain_done",
+            processed=sum(w.processed for w in self.pool._all_workers),
+            outstanding=self.broker.stats().outstanding,
+        )
+        return self._report(checkers)
+
+    # ---------------------------------------------------------------- handlers
+    def _schedule_tick(self, eq: EventQueue, t: float) -> None:
+        if not self._tick_scheduled:
+            eq.push(t, "tick")
+            self._tick_scheduled = True
+
+    def _on_cohort(self, eq: EventQueue, arr: CohortArrival) -> None:
+        ticket = self.service.submit_cohort(
+            arr.study_id, list(arr.accessions), self.mrns
+        )
+        self.tickets.append((arr, ticket))
+        self._ticket_digest[ticket.cohort_id] = self.service.planner.ruleset_digest
+        for acc in ticket.hits:  # pin the source version each hit replayed
+            self._hit_etag[(ticket.cohort_id, acc)] = self.source.study_etag(acc)
+        self._cohort_arrival_t[ticket.cohort_id] = self.clock.now()
+        if ticket.done():
+            self._cohort_done_t[ticket.cohort_id] = self.clock.now()
+        self.log.append(
+            self.clock.now(), "cohort",
+            cohort_id=ticket.cohort_id, study_id=arr.study_id,
+            n=len(arr.accessions), hits=len(ticket.hits),
+            coalesced=len(ticket.coalesced), cold=len(ticket.cold),
+            rejected=len(ticket.rejected),
+        )
+        if not self.broker.empty():
+            self._schedule_tick(eq, self.clock.now())
+
+    def _on_tick(self, eq: EventQueue) -> None:
+        self._tick_scheduled = False
+        busy = self.pool.step()
+        self._resolve_and_log_done()
+        stats = self.broker.stats()
+        self.log.append(
+            self.clock.now(), "tick",
+            workers=len(self.pool.workers), busy=busy,
+            available=stats.available, leased=stats.leased,
+            dead_lettered=stats.dead_lettered,
+            backlog_bytes=stats.backlog_bytes,
+        )
+        if not self.broker.empty():
+            self._schedule_tick(
+                eq, self.clock.now() + max(busy, self.config.tick_seconds)
+            )
+
+    def _on_chaos(self, eq: EventQueue, ce) -> None:
+        now = self.clock.now()
+        if ce.kind == "set_crash_rate":
+            self.injector.crash_rate = ce.payload["rate"]
+        elif ce.kind == "crash_keys":
+            keys = {
+                f"{sid}/{acc}"
+                for sid in self.service._studies
+                for acc in ce.payload["accessions"]
+            }
+            self.injector.crash_once_keys = frozenset(
+                self.injector.crash_once_keys | keys
+            )
+        elif ce.kind == "set_straggler":
+            self.injector.straggler_rate = ce.payload["rate"]
+            self.injector.slow_factor = ce.payload.get("slow_factor", 10.0)
+        elif ce.kind == "lease_storm":
+            self._storm_depth += 1
+            eq.push(now + ce.payload["duration"], "chaos_restore")
+            self.broker.visibility_timeout = ce.payload["visibility_timeout"]
+        elif ce.kind == "reingest":
+            self._reingests += 1
+            # re-acquisition: same accession, different bytes -> new etag; the
+            # planner's etag-keyed study records go stale, never stale-served
+            self._ingest(
+                StudyGenerator(self.config.seed + 1000 + self._reingests),
+                ce.payload["accession"],
+            )
+        elif ce.kind == "ruleset_edit":
+            self._ruleset_edits += 1
+            edited = (
+                default_scripts.DEFAULT_ANONYMIZER_SCRIPT
+                + f"\n# chaos ruleset edit {self._ruleset_edits}\nempty PatientAge\n"
+            )
+            self.pipeline = DeidPipeline(
+                anonymizer_script=edited,
+                recompress=self.config.recompress,
+                lake=self.lake,
+            )
+            # planner admissions and new workers move to the edited ruleset
+            # atomically; in-flight workers finish under the old one (their
+            # lake keys embed the old digest, so results never cross over)
+            digest = self.pipeline.ruleset_fingerprint().digest
+            self._pipelines[digest] = self.pipeline
+            self.service.planner.ruleset_digest = digest
+        self.log.append(now, "chaos", chaos_kind=ce.kind, **ce.payload)
+        if not self.broker.empty():
+            self._schedule_tick(eq, now)
+
+    def _resolve_and_log_done(self) -> None:
+        self.service.planner.resolve()
+        for _, ticket in self.tickets:
+            if ticket.done() and ticket.cohort_id not in self._cohort_done_t:
+                self._cohort_done_t[ticket.cohort_id] = self.clock.now()
+                self.log.append(
+                    self.clock.now(), "cohort_done",
+                    cohort_id=ticket.cohort_id,
+                    latency=self.clock.now()
+                    - self._cohort_arrival_t[ticket.cohort_id],
+                    failed=len(ticket.failed),
+                )
+
+    # ----------------------------------------------------------------- report
+    def _report(self, checkers) -> FleetReport:
+        cfg = self.config
+        latencies = {
+            cid: self._cohort_done_t[cid] - self._cohort_arrival_t[cid]
+            for cid in self._cohort_done_t
+        }
+        n_cohorts = len(self.tickets)
+        within = sum(1 for v in latencies.values() if v <= cfg.delivery_window)
+        a = self.pool.autoscaler
+        metrics = {
+            "cohorts": n_cohorts,
+            "cohorts_done": len(latencies),
+            "sla_attainment": within / n_cohorts if n_cohorts else 1.0,
+            "processed": sum(w.processed for w in self.pool._all_workers),
+            "deduped": sum(w.deduped for w in self.pool._all_workers),
+            "crashes": self.pool.crashes,
+            "redeliveries": self.broker.total_redelivered,
+            "speculative": self.pool.speculative,
+            "dead_lettered": len(self.broker.dead_letter),
+            "published": self.broker.total_published,
+            "lake_hit_rate": round(self.lake.stats.hit_rate(), 6),
+            "planner_lake_hits": self.service.planner.stats.lake_hits,
+            "planner_coalesced": self.service.planner.stats.coalesced,
+            "instance_seconds": round(a.instance_seconds, 6),
+            "cost_usd": round(a.cost_usd(), 6),
+            "sim_minutes": round(self.clock.now() / 60.0, 6),
+            "max_latency_s": round(max(latencies.values()), 6) if latencies else 0.0,
+        }
+        violations: List[Violation] = []
+        for checker in checkers:
+            violations.extend(checker.check(self))
+        return FleetReport(
+            seed=cfg.seed,
+            log_digest=self.log.digest(),
+            metrics=metrics,
+            violations=violations,
+        )
+
+
+class DeidWorkerProxyFactory:
+    """Worker factory that reads ``sim.pipeline`` at spawn time, so workers
+    created after a ``ruleset_edit`` chaos event pick up the edited pipeline
+    while already-running workers keep the old one (a rolling deploy)."""
+
+    def __init__(self, sim: FleetSim) -> None:
+        self.sim = sim
+
+    def __call__(self, wid: str) -> DeidWorker:
+        return DeidWorker(
+            wid, self.sim.pipeline, self.sim.source, self.sim.dest,
+            self.sim.journal, throughput=self.sim.config.worker_throughput,
+        )

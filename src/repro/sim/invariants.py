@@ -1,0 +1,297 @@
+"""Invariant checkers: the conformance contract of the fleet simulator.
+
+Each checker inspects the *real* post-run state of a :class:`FleetSim` — the
+journal file, the researcher bucket's bytes, the result lake, the autoscaler's
+accounting — and returns :class:`Violation`\\ s. Checkers never consult the
+event log for truth (the log is evidence for humans; the stores are the
+ground truth), and they are read-only except for ``NoWedgedSubscribers``,
+which runs a final ``planner.resolve()`` the way any live deployment would.
+
+The contract (DESIGN.md §7):
+
+* a checker returns ``[]`` iff the invariant held for the whole run;
+* every violation carries enough detail to reproduce (key / path / numbers);
+* checkers must themselves be deterministic — same sim state, same report.
+"""
+from __future__ import annotations
+
+import pickle
+from dataclasses import dataclass, field
+from typing import TYPE_CHECKING, Dict, List
+
+from repro.dicom.devices import DeviceKey, registry
+
+if TYPE_CHECKING:  # pragma: no cover - type-only
+    from repro.sim.harness import FleetSim
+
+
+@dataclass(frozen=True)
+class Violation:
+    checker: str
+    detail: str
+
+
+class InvariantChecker:
+    name = "base"
+
+    def check(self, sim: "FleetSim") -> List[Violation]:
+        raise NotImplementedError
+
+    def _v(self, detail: str) -> Violation:
+        return Violation(self.name, detail)
+
+
+class ExactlyOnceDelivery(InvariantChecker):
+    """At-least-once transport + journal dedup must net out to exactly-once
+    effect: worker `processed` counters equal unique journal completions, and
+    every completion maps to a submitted key with its outputs in the bucket."""
+
+    name = "exactly_once"
+
+    def check(self, sim: "FleetSim") -> List[Violation]:
+        out: List[Violation] = []
+        completed = sim.journal.completed_keys()
+        processed = sum(w.processed for w in sim.pool._all_workers)
+        if processed != len(completed):
+            out.append(
+                self._v(
+                    f"worker processed counters ({processed}) != unique journal "
+                    f"completions ({len(completed)}): some study was processed "
+                    "more than once or a completion was never journaled"
+                )
+            )
+        unknown = completed - sim.submitted_keys()
+        if unknown:
+            out.append(self._v(f"journal holds never-submitted keys: {sorted(unknown)}"))
+        for key in sorted(completed):
+            manifest = sim.journal.manifest_for(key)
+            if manifest is None:
+                out.append(self._v(f"{key}: done-record without a manifest"))
+                continue
+            rid = manifest.request_id
+            n_out = len(sim.dest.store.list(f"out/{rid}/"))
+            n_anon = manifest.counts()["anonymized"]
+            if n_out != n_anon:
+                out.append(
+                    self._v(
+                        f"{key}: manifest says {n_anon} anonymized instances but the "
+                        f"researcher bucket holds {n_out} under out/{rid}/"
+                    )
+                )
+        return out
+
+
+class PhiBoundary(InvariantChecker):
+    """No researcher-visible byte may contain PHI: original MRNs, patient
+    names, accessions (of any source version ever ingested) must not appear in
+    any bucket blob or warm-served output, and every delivered image must have
+    its device's burn-in regions blanked (checked from the output's own kept
+    equipment tags, so re-ingested device swaps are covered)."""
+
+    name = "phi_boundary"
+
+    def _forbidden(self, sim: "FleetSim") -> Dict[bytes, str]:
+        bad: Dict[bytes, str] = {}
+        for study in sim.study_versions():
+            bad[study.mrn.encode()] = f"MRN of {study.accession}"
+            bad[study.patient_name.encode()] = f"patient name of {study.accession}"
+        return bad
+
+    def _scan_blob(self, blob: bytes, where: str, bad: Dict[bytes, str]) -> List[Violation]:
+        return [
+            self._v(f"{where}: contains {what} ({token!r})")
+            for token, what in bad.items()
+            if token in blob
+        ]
+
+    def _scan_pixels(self, ds, where: str) -> List[Violation]:
+        if ds.pixels is None:
+            return []
+        key = DeviceKey(
+            str(ds.get("Modality", "")),
+            str(ds.get("Manufacturer", "")),
+            str(ds.get("ManufacturerModelName", "")),
+            int(ds.get("Rows", 0) or 0),
+            int(ds.get("Columns", 0) or 0),
+        )
+        out: List[Violation] = []
+        for x, y, w, h in registry().scrub_rects(key):
+            region = ds.pixels[y : y + h, x : x + w]
+            if region.size and int(region.max()) != 0:
+                out.append(
+                    self._v(
+                        f"{where}: device region ({x},{y},{w},{h}) of "
+                        f"{key.id()} not blanked (max={int(region.max())})"
+                    )
+                )
+        return out
+
+    def check(self, sim: "FleetSim") -> List[Violation]:
+        bad = self._forbidden(sim)
+        out: List[Violation] = []
+        for path in sim.dest.store.list("out/"):
+            blob = sim.dest.store.get(path)
+            out.extend(self._scan_blob(blob, f"bucket:{path}", bad))
+            out.extend(self._scan_pixels(pickle.loads(blob), f"bucket:{path}"))
+        for _, ticket in sim.tickets:
+            for acc, datasets in ticket.outputs.items():
+                for i, ds in enumerate(datasets):
+                    where = f"ticket{ticket.cohort_id}:{acc}[{i}]"
+                    out.extend(self._scan_blob(pickle.dumps(ds), where, bad))
+                    out.extend(self._scan_pixels(ds, where))
+        return out
+
+
+class WarmReplayIdentity(InvariantChecker):
+    """Results served warm from the result lake must be byte-identical to
+    what the cold path computes right now — re-runs every warm-served study
+    through a lake-less clone of the current pipeline and compares pickles."""
+
+    name = "warm_replay"
+
+    def check(self, sim: "FleetSim") -> List[Violation]:
+        from repro.core.pipeline import build_request
+
+        out: List[Violation] = []
+        for _, ticket in sim.tickets:
+            for acc in ticket.hits:
+                if acc not in ticket.outputs:
+                    continue  # journal-hit: manifest replayed, no lake bytes
+                # replay against the exact source version the hit was served
+                # from (a later re-ingest must not shift the oracle)
+                study = sim._etag_study[sim._hit_etag[(ticket.cohort_id, acc)]]
+                pseudo = sim.service._studies[ticket.study_id]
+                request = build_request(pseudo, acc, study.mrn)
+                cold = sim.cold_pipeline_for(ticket).run_study(
+                    study, request, "oracle"
+                )
+                warm_bytes = [pickle.dumps(ds) for ds in ticket.outputs[acc]]
+                cold_bytes = [pickle.dumps(ds) for ds in cold.delivered]
+                if warm_bytes != cold_bytes:
+                    out.append(
+                        self._v(
+                            f"ticket{ticket.cohort_id}:{acc}: warm replay differs "
+                            f"from cold path ({len(warm_bytes)} vs "
+                            f"{len(cold_bytes)} instances or byte mismatch)"
+                        )
+                    )
+        return out
+
+
+class AutoscalerAccounting(InvariantChecker):
+    """`instance_seconds` must equal the piecewise-constant integral of the
+    pool size over the tick log, and the dollar cost must be that integral
+    times the configured hourly rate."""
+
+    name = "autoscaler_accounting"
+
+    def check(self, sim: "FleetSim") -> List[Violation]:
+        a = sim.pool.autoscaler
+        log = a.tick_log
+        integral = sum(
+            n * (log[i + 1][0] - log[i][0]) for i, (_, n) in enumerate(log[:-1])
+        )
+        out: List[Violation] = []
+        if abs(integral - a.instance_seconds) > 1e-6 * max(1.0, integral):
+            out.append(
+                self._v(
+                    f"instance_seconds={a.instance_seconds:.6f} but tick-log "
+                    f"integral={integral:.6f} over {len(log)} ticks"
+                )
+            )
+        want_cost = a.instance_seconds / 3600.0 * a.config.instance_cost_per_hour
+        if abs(a.cost_usd() - want_cost) > 1e-9:
+            out.append(self._v(f"cost_usd()={a.cost_usd()} != {want_cost}"))
+        return out
+
+
+class NoWedgedSubscribers(InvariantChecker):
+    """After a final resolve, no cohort ticket may be waiting on work that no
+    longer exists: every pending accession must map to a live in-flight
+    registration, and the planner must report no wedged registrations."""
+
+    name = "no_wedged_subscribers"
+
+    def check(self, sim: "FleetSim") -> List[Violation]:
+        planner = sim.service.planner
+        planner.resolve()
+        out = [
+            self._v(f"in-flight registration {key} can never resolve")
+            for key in planner.audit_wedged()
+        ]
+        inflight = set(planner.inflight_keys())
+        for _, ticket in sim.tickets:
+            # match on the full study-scoped key: another IRB's registration
+            # for the same accession must not mask this ticket's wedge
+            stuck = {
+                acc for acc in ticket.pending
+                if f"{ticket.study_id}/{acc}" not in inflight
+            }
+            if stuck:
+                out.append(
+                    self._v(
+                        f"ticket{ticket.cohort_id} pending on {sorted(stuck)} "
+                        "with no in-flight registration (subscriber wedged)"
+                    )
+                )
+        return out
+
+
+class LakeConsistency(InvariantChecker):
+    """The result lake's byte accounting must match its index, stay within
+    budget, and every indexed key must still have backing bytes."""
+
+    name = "lake_consistency"
+
+    def check(self, sim: "FleetSim") -> List[Violation]:
+        lake = sim.lake
+        out: List[Violation] = []
+        indexed = sum(lake._lru.values())
+        if indexed != lake.stored_bytes():
+            out.append(
+                self._v(f"stored_bytes={lake.stored_bytes()} != index sum {indexed}")
+            )
+        if lake.stored_bytes() > lake.max_bytes:
+            out.append(
+                self._v(f"stored {lake.stored_bytes()} bytes > budget {lake.max_bytes}")
+            )
+        for key in lake.keys():
+            if lake.backend.get_bytes(key) is None:
+                out.append(self._v(f"indexed key {key} has no backing blob"))
+        return out
+
+
+class JournalDurability(InvariantChecker):
+    """A fresh replay of the journal file must reconstruct exactly the
+    completions the live journal reports (fsync'd, torn-tail tolerant)."""
+
+    name = "journal_durability"
+
+    def check(self, sim: "FleetSim") -> List[Violation]:
+        from repro.queueing.journal import Journal
+
+        replayed = Journal(sim.journal.path)
+        try:
+            if replayed.completed_keys() != sim.journal.completed_keys():
+                missing = sim.journal.completed_keys() - replayed.completed_keys()
+                extra = replayed.completed_keys() - sim.journal.completed_keys()
+                return [
+                    self._v(
+                        f"journal replay mismatch: missing={sorted(missing)} "
+                        f"extra={sorted(extra)}"
+                    )
+                ]
+            return []
+        finally:
+            replayed.close()
+
+
+DEFAULT_CHECKERS = (
+    ExactlyOnceDelivery(),
+    PhiBoundary(),
+    WarmReplayIdentity(),
+    AutoscalerAccounting(),
+    NoWedgedSubscribers(),
+    LakeConsistency(),
+    JournalDurability(),
+)

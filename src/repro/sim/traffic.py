@@ -1,0 +1,140 @@
+"""Traffic models: seeded cohort-arrival schedules (DESIGN.md §7).
+
+A traffic model turns (seed, corpus) into a flat, time-sorted list of
+:class:`CohortArrival`\\ s before the simulation starts — arrivals are *data*,
+not code, so the same seed always yields the same schedule and the event loop
+never consults randomness at run time.
+
+Three shapes, matching the operational patterns the paper's fleet must absorb:
+
+* :class:`BurstyTraffic` — clustered cohort submissions (a lab submits its
+  whole project at once), exponential gaps between bursts;
+* :class:`DiurnalTraffic` — researcher-working-hours load over multiple
+  simulated days, thinned at night;
+* :class:`ReplayStorm` — one seeding cohort, then a storm of mostly-warm
+  re-requests (the DESIGN.md §6 repeat-traffic regime, default 90% warm).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Sequence
+
+from repro.sim.events import HashRng
+
+
+@dataclass(frozen=True)
+class CohortArrival:
+    t: float
+    study_id: str           # research study (IRB protocol) submitting
+    accessions: tuple       # imaging accessions requested (tuple: hashable/frozen)
+
+
+class TrafficModel:
+    """Base: subclasses implement :meth:`schedule`."""
+
+    def schedule(self, corpus: Sequence[str], seed: int) -> List[CohortArrival]:
+        raise NotImplementedError
+
+
+@dataclass
+class BurstyTraffic(TrafficModel):
+    """Bursts of cohorts with exponential inter-burst gaps."""
+
+    n_bursts: int = 3
+    cohorts_per_burst: int = 2
+    cohort_size: int = 4
+    mean_gap: float = 600.0          # seconds between bursts
+    intra_gap: float = 10.0          # seconds between cohorts inside a burst
+    study_ids: Sequence[str] = ("IRB-A", "IRB-B")
+
+    def schedule(self, corpus: Sequence[str], seed: int) -> List[CohortArrival]:
+        rng = HashRng(seed, "bursty")
+        out: List[CohortArrival] = []
+        t = 0.0
+        for b in range(self.n_bursts):
+            if b:
+                t += rng.exp(self.mean_gap, "gap", b)
+            for c in range(self.cohorts_per_burst):
+                accs = rng.sample(list(corpus), self.cohort_size, "cohort", b, c)
+                out.append(
+                    CohortArrival(
+                        t=t + c * self.intra_gap,
+                        study_id=rng.choice(list(self.study_ids), "study", b, c),
+                        accessions=tuple(accs),
+                    )
+                )
+        return sorted(out, key=lambda a: (a.t, a.study_id))
+
+
+@dataclass
+class DiurnalTraffic(TrafficModel):
+    """Cohorts spread over ``days`` with a day/night density cycle: a cohort
+    drawn for hour ``h`` survives with probability prop. to the diurnal
+    weight, peaking mid-workday."""
+
+    days: int = 2
+    cohorts_per_day: int = 6
+    cohort_size: int = 3
+    study_ids: Sequence[str] = ("IRB-DAY",)
+
+    @staticmethod
+    def _weight(hour: float) -> float:
+        # smooth bump centred on 13:00, near-zero at night
+        return max(0.05, math.sin(math.pi * max(0.0, min(1.0, (hour - 7.0) / 12.0))))
+
+    def schedule(self, corpus: Sequence[str], seed: int) -> List[CohortArrival]:
+        rng = HashRng(seed, "diurnal")
+        out: List[CohortArrival] = []
+        for d in range(self.days):
+            placed = 0
+            slot = 0
+            # draw candidate slots until the day's quota is placed (bounded)
+            while placed < self.cohorts_per_day and slot < self.cohorts_per_day * 8:
+                hour = 24.0 * rng.u("hour", d, slot)
+                if rng.u("keep", d, slot) < self._weight(hour):
+                    t = (d * 24.0 + hour) * 3600.0
+                    accs = rng.sample(list(corpus), self.cohort_size, "cohort", d, slot)
+                    out.append(
+                        CohortArrival(
+                            t=t,
+                            study_id=rng.choice(list(self.study_ids), "study", d, slot),
+                            accessions=tuple(accs),
+                        )
+                    )
+                    placed += 1
+                slot += 1
+        return sorted(out, key=lambda a: (a.t, a.study_id))
+
+
+@dataclass
+class ReplayStorm(TrafficModel):
+    """One seeding cohort over a base set, then ``n_replays`` cohorts drawing
+    ``warm_fraction`` of their accessions from the (now warm) base set and
+    the rest from the cold remainder — the 90%-warm storm regime."""
+
+    warm_fraction: float = 0.9
+    base_size: int = 6
+    n_replays: int = 4
+    cohort_size: int = 5
+    gap: float = 120.0
+    study_id: str = "IRB-STORM"
+
+    def schedule(self, corpus: Sequence[str], seed: int) -> List[CohortArrival]:
+        rng = HashRng(seed, "storm")
+        corpus = list(corpus)
+        base = rng.sample(corpus, min(self.base_size, len(corpus)), "base")
+        cold_pool = [a for a in corpus if a not in set(base)]
+        out = [CohortArrival(t=0.0, study_id=self.study_id, accessions=tuple(base))]
+        for r in range(self.n_replays):
+            n_warm = min(int(round(self.warm_fraction * self.cohort_size)), len(base))
+            accs = rng.sample(base, n_warm, "warm", r)
+            n_cold = self.cohort_size - n_warm
+            if n_cold and cold_pool:
+                accs = accs + rng.sample(cold_pool, n_cold, "cold", r)
+            out.append(
+                CohortArrival(
+                    t=(r + 1) * self.gap, study_id=self.study_id, accessions=tuple(accs)
+                )
+            )
+        return out

@@ -167,6 +167,92 @@ class TestAutoscaler:
         a.tick()
         assert a.cost_usd() == pytest.approx(a.instance_seconds / 3600)
 
+    def test_scale_down_hysteresis(self):
+        """A second scale-down inside the cooldown window after the first one
+        must be held back (lease churn protection), then allowed once the
+        cooldown passes. Scale-ups are never throttled."""
+        clock = SimClock()
+        b = Broker(clock, visibility_timeout=10**6)
+        cfg = AutoscalerConfig(
+            delivery_window=10**6, per_instance_throughput=1.0,
+            max_instances=100, scale_down_cooldown=120.0,
+        )
+        a = Autoscaler(b, cfg, clock)
+
+        def swap_backlog(nbytes):
+            msg = b.pull("w0")[0]
+            b.publish(f"k{nbytes}", {}, nbytes=nbytes)
+            b.ack(msg.msg_id)
+
+        b.publish("big", {}, nbytes=9_500_000)
+        assert a.tick() == 10
+        swap_backlog(4_500_000)
+        clock.advance(10)
+        assert a.tick() == 5   # first scale-down: never throttled
+        swap_backlog(2_200_000)
+        clock.advance(10)
+        assert a.tick() == 5   # second, 10s later: held by the cooldown
+        clock.advance(130)
+        assert a.tick() == 3   # cooldown passed: allowed to shrink
+
+    def test_empty_queue_bypasses_cooldown(self):
+        """target==0 (pool deletion) ignores the cooldown — the paper deletes
+        instances as soon as the queue is empty."""
+        clock = SimClock()
+        b = Broker(clock)
+        cfg = AutoscalerConfig(delivery_window=10**6, per_instance_throughput=1.0,
+                               scale_down_cooldown=10**9, max_instances=8)
+        a = Autoscaler(b, cfg, clock)
+        b.publish("k", {}, nbytes=5 * 10**6)
+        assert a.tick() == 5
+        m = b.pull("w0")[0]
+        b.ack(m.msg_id)
+        clock.advance(1)
+        assert a.tick() == 0  # cooldown would forbid 5 -> lower, but 0 bypasses
+
+    def test_instance_seconds_irregular_tick_spacing(self):
+        """The cost integral is piecewise-constant over whatever tick spacing
+        the pool actually produced — including the first tick after a long
+        idle gap, which bills the whole gap at the pre-gap pool size."""
+        clock = SimClock()
+        b = Broker(clock, visibility_timeout=10**9)
+        cfg = AutoscalerConfig(
+            delivery_window=10**9, per_instance_throughput=1.0,
+            max_instances=100, scale_down_cooldown=0.0,
+        )
+        a = Autoscaler(b, cfg, clock)
+        # 3.5 GB over a 1 GB/s-equivalent window: ceil(3.5...) = 4 instances,
+        # stable against window-elapsed drift (an exact multiple would tip to
+        # 5 as soon as elapsed > 0)
+        b.publish("k", {}, nbytes=3_500_000_000)
+
+        a.tick()                      # t=0: 0 -> 4, nothing billed yet
+        clock.advance(7)
+        a.tick()                      # t=7: bills 4 * 7
+        clock.advance(11)
+        a.tick()                      # t=18: bills 4 * 11
+        m = b.pull("w0")[0]
+        b.ack(m.msg_id)               # queue empties; pool still 4 until next tick
+        clock.advance(1000)           # long idle gap with no ticks
+        a.tick()                      # t=1018: bills 4 * 1000, THEN deletes pool
+        clock.advance(50)
+        a.tick()                      # t=1068: bills 0 * 50
+        assert a.instance_seconds == pytest.approx(4 * (7 + 11 + 1000))
+        # the tick log re-integrates to the same number (conformance contract)
+        log = a.tick_log
+        integral = sum(n * (log[i + 1][0] - log[i][0]) for i, (_, n) in enumerate(log[:-1]))
+        assert integral == pytest.approx(a.instance_seconds)
+
+    def test_first_tick_never_bills(self):
+        """A first tick after construction has no billing interval, no matter
+        how late it happens."""
+        clock = SimClock()
+        b = Broker(clock)
+        a = Autoscaler(b, AutoscalerConfig(), clock)
+        clock.advance(10_000)
+        a.tick()
+        assert a.instance_seconds == 0.0
+
 
 class TestWorkerPool:
     def test_clean_drain(self, tmp_path):
@@ -247,6 +333,126 @@ class TestWorkerPool:
         assert journal2.completed_keys() == {f"IRB-9/{a}" for a in mrns}
         # the two already-done studies were deduped on redelivery, not redone
         assert report.processed == len(mrns) - 2
+
+
+try:
+    from hypothesis import HealthCheck, given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - CI installs hypothesis
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    from repro.core.manifest import Manifest
+    from repro.queueing.broker import Message
+
+    _settings = settings(
+        max_examples=30, deadline=None, suppress_health_check=[HealthCheck.too_slow]
+    )
+
+    class TestFailureInjectorProperties:
+        """The fault model must be a pure function of (worker, key, delivery)
+        — that is what makes chaos runs replayable from a seed."""
+
+        @given(
+            rate=st.floats(0.0, 1.0),
+            worker=st.text(min_size=1, max_size=8),
+            key=st.text(min_size=1, max_size=12),
+            deliveries=st.integers(1, 6),
+        )
+        @_settings
+        def test_decisions_are_deterministic(self, rate, worker, key, deliveries):
+            msg = Message(key=key, payload={}, deliveries=deliveries)
+            a = FailureInjector(crash_rate=rate, straggler_rate=rate)
+            b = FailureInjector(crash_rate=rate, straggler_rate=rate)
+            assert a.should_crash(worker, msg) == b.should_crash(worker, msg)
+            assert a.slowdown(worker, msg) == b.slowdown(worker, msg)
+
+        @given(
+            r1=st.floats(0.0, 1.0),
+            r2=st.floats(0.0, 1.0),
+            worker=st.text(min_size=1, max_size=8),
+            key=st.text(min_size=1, max_size=12),
+            delivery=st.integers(1, 6),
+        )
+        @_settings
+        def test_crash_set_is_monotone_in_rate(self, r1, r2, worker, key, delivery):
+            """Raising the crash rate only ever adds (worker, key, delivery)
+            crash points, never moves them — schedules at different
+            intensities stay comparable."""
+            lo, hi = sorted((r1, r2))
+            msg = Message(key=key, payload={}, deliveries=delivery)
+            crashed_lo = FailureInjector(crash_rate=lo).should_crash(worker, msg)
+            crashed_hi = FailureInjector(crash_rate=hi).should_crash(worker, msg)
+            assert not crashed_lo or crashed_hi
+
+        @given(
+            key=st.text(min_size=1, max_size=12),
+            worker=st.text(min_size=1, max_size=8),
+        )
+        @_settings
+        def test_crash_once_keys_crash_exactly_first_delivery(self, key, worker):
+            inj = FailureInjector(crash_once_keys=frozenset({key}))
+            first = Message(key=key, payload={}, deliveries=1)
+            retry = Message(key=key, payload={}, deliveries=2)
+            assert inj.should_crash(worker, first)
+            assert not inj.should_crash(worker, retry)
+
+    class TestJournalExactlyOnceProperties:
+        """Exactly-once effect under randomized crash schedules: however the
+        crashes land, every key completes exactly once and record_done
+        returns True exactly once per key."""
+
+        @given(
+            n_keys=st.integers(1, 6),
+            crash_pattern=st.sets(
+                st.tuples(st.integers(0, 5), st.integers(1, 3)), max_size=10
+            ),
+            seed=st.integers(0, 2**31 - 1),
+        )
+        @_settings
+        def test_randomized_crash_schedule(self, tmp_path_factory, n_keys, crash_pattern, seed):
+            clock = SimClock()
+            broker = Broker(clock, visibility_timeout=10.0, max_deliveries=10)
+            journal = Journal(
+                tmp_path_factory.mktemp("prop") / f"j{seed}.jsonl"
+            )
+            keys = [f"K{i}" for i in range(n_keys)]
+            for k in keys:
+                broker.publish(k, {}, nbytes=1)
+            crashes = {(f"K{i}", d) for i, d in crash_pattern if i < n_keys}
+
+            first_acks = 0
+            for _ in range(400):  # bounded drain loop
+                if broker.empty():
+                    break
+                msgs = broker.pull("w0", max_messages=1)
+                if not msgs:
+                    clock.advance(11.0)  # let crashed leases expire
+                    continue
+                m = msgs[0]
+                if (m.key, m.deliveries) in crashes:
+                    continue  # crash: no ack, no journal entry
+                if not journal.is_done(m.key):
+                    if journal.record_done(m.key, Manifest(m.key), "w0"):
+                        first_acks += 1
+                broker.ack(m.msg_id)
+            journal.close()
+
+            assert broker.empty()
+            assert journal.completed_keys() == set(keys)
+            assert first_acks == n_keys  # each key completed exactly once
+
+        @given(key=st.text(min_size=1, max_size=16))
+        @_settings
+        def test_record_done_is_idempotent(self, tmp_path_factory, key):
+            journal = Journal(tmp_path_factory.mktemp("idem") / "j.jsonl")
+            assert journal.record_done(key, Manifest(key), "w0") is True
+            assert journal.record_done(key, Manifest(key), "w1") is False
+            journal.close()
+            replay = Journal(journal.path)
+            assert replay.completed_keys() == {key}
+            replay.close()
 
 
 class TestService:

@@ -4,7 +4,13 @@ from pathlib import Path
 
 import pytest
 
-from repro.core.scenarios import VirtualDicomTree, parse_feature, run_feature
+from repro.core.scenarios import (
+    FeatureParseError,
+    VirtualDicomTree,
+    parse_feature,
+    run_feature,
+)
+from repro.dicom.generator import PROBLEM_KINDS
 
 FEATURES = sorted((Path(__file__).parent / "features").glob("*.feature"))
 
@@ -40,3 +46,72 @@ Scenario: wrong region expected blank
     feature = parse_feature(bad)
     results = run_feature(feature)
     assert not results[0].passed
+
+
+class TestMalformedFeatures:
+    """A suite author's typo must surface as a clear parse error with the
+    offending line, never a crash or a silently skipped step."""
+
+    def _err(self, text) -> FeatureParseError:
+        with pytest.raises(FeatureParseError) as ei:
+            parse_feature(text)
+        return ei.value
+
+    def test_bad_script_step(self):
+        err = self._err('Feature: f\nGiven the pipeline uses the filter script missing-quotes')
+        assert err.lineno == 2 and "script step" in err.why
+
+    def test_bad_parameter_step(self):
+        err = self._err('Feature: f\nAnd script parameter jitter is -6')
+        assert err.lineno == 2 and "parameter step" in err.why
+
+    def test_directory_without_quotes(self):
+        err = self._err("Feature: f\nScenario: s\n  Given the DICOM directory dicom-phi/CT")
+        assert err.lineno == 3 and "quoted path" in err.why
+
+    def test_directory_outside_scenario(self):
+        err = self._err('Feature: f\nGiven the DICOM directory "dicom-phi/CT/Anonymize"')
+        assert err.lineno == 2 and "outside any Scenario" in err.why
+
+    def test_then_outside_scenario(self):
+        err = self._err("Feature: f\nThen the images should be anonymized")
+        assert err.lineno == 2 and "outside any Scenario" in err.why
+
+    def test_malformed_scrub_rect(self):
+        err = self._err(
+            'Feature: f\nScenario: s\n  Given the DICOM directory "dicom-phi/CT/Anonymize"\n'
+            "  Then the resulting images should be scrubbed at 10,20,30"
+        )
+        assert err.lineno == 4 and "scrub expectation" in err.why
+
+    def test_unknown_then_step(self):
+        err = self._err(
+            'Feature: f\nScenario: s\n  Given the DICOM directory "dicom-phi/CT/Anonymize"\n'
+            "  Then the images should be deleted forever"
+        )
+        assert err.lineno == 4 and err.why == "unknown Then step"
+
+    def test_error_message_carries_context(self):
+        err = self._err("Feature: f\nThen the images should be anonymized")
+        assert "line 2" in str(err) and "anonymized" in str(err)
+
+
+@pytest.mark.parametrize("problem", PROBLEM_KINDS)
+def test_every_problem_kind_is_filtered(problem):
+    """Paper Discussion items 1-3: every categorical exclusion gets its own
+    executable scenario through the per-kind virtual directory."""
+    text = f"""
+Feature: categorical exclusions ({problem})
+Scenario: {problem} objects never reach the researcher
+  Given the DICOM directory "dicom-phi/CT/Filter/{problem}"
+  When ran through the deid pipeline
+  Then the images should not pass the filter
+"""
+    feature = parse_feature(text)
+    results = run_feature(feature, VirtualDicomTree())
+    assert results[0].passed, results[0].detail
+
+
+def test_filter_directory_rejects_unknown_kind():
+    with pytest.raises(KeyError):
+        VirtualDicomTree().resolve("dicom-phi/CT/Filter/not_a_problem")

@@ -1,0 +1,318 @@
+"""Fleet-simulator conformance suite (DESIGN.md §7).
+
+Three layers:
+* determinism — bit-replayability of event logs and metrics from one seed;
+* chaos — crashes, dead-letters, re-ingests, ruleset edits leave every
+  invariant green on the REAL stack;
+* negative controls — each invariant checker must catch a deliberately
+  injected violation (a checker that can't fail is not a check).
+"""
+import json
+import pickle
+
+import pytest
+
+from repro.core.pipeline import build_request
+from repro.sim import (
+    AutoscalerAccounting,
+    BurstyTraffic,
+    ChaosEvent,
+    ChaosSchedule,
+    CohortArrival,
+    DiurnalTraffic,
+    ExactlyOnceDelivery,
+    FleetConfig,
+    FleetSim,
+    JournalDurability,
+    LakeConsistency,
+    NoWedgedSubscribers,
+    PhiBoundary,
+    ReplayStorm,
+    WarmReplayIdentity,
+)
+
+
+def _tiny(tmp_path, name, seed=5, n_studies=3, traffic=None, chaos=None, **cfg_kw):
+    cfg = FleetConfig(seed=seed, n_studies=n_studies, images_per_study=1, **cfg_kw)
+    corpus = [f"SIM{i:04d}" for i in range(cfg.n_studies)]
+    if traffic is None:
+        traffic = [CohortArrival(t=0.0, study_id="IRB-T", accessions=tuple(corpus))]
+    return FleetSim(cfg, traffic, tmp_path / f"{name}.jsonl", chaos)
+
+
+# --------------------------------------------------------------- determinism
+class TestReplayability:
+    def test_same_seed_same_log_and_metrics(self, tmp_path):
+        corpus = [f"SIM{i:04d}" for i in range(5)]
+        traffic = BurstyTraffic(
+            n_bursts=2, cohorts_per_burst=2, cohort_size=3
+        ).schedule(corpus, seed=9)
+        chaos = ChaosSchedule.seeded(9, horizon=400.0, corpus=corpus)
+
+        def run(name):
+            sim = _tiny(tmp_path, name, seed=9, n_studies=5,
+                        traffic=traffic, chaos=chaos)
+            return sim.run()
+
+        r1, r2 = run("a"), run("b")
+        assert r1.log_digest == r2.log_digest
+        assert r1.metrics == r2.metrics
+        assert r1.ok() and r2.ok()
+
+    def test_different_seed_different_log(self, tmp_path):
+        corpus = [f"SIM{i:04d}" for i in range(4)]
+        t1 = ReplayStorm(base_size=3, n_replays=1, cohort_size=3).schedule(corpus, 1)
+        t2 = ReplayStorm(base_size=3, n_replays=1, cohort_size=3).schedule(corpus, 2)
+        r1 = _tiny(tmp_path, "s1", seed=1, n_studies=4, traffic=t1).run()
+        r2 = _tiny(tmp_path, "s2", seed=2, n_studies=4, traffic=t2).run()
+        assert r1.log_digest != r2.log_digest
+
+    def test_event_log_is_json_serializable(self, tmp_path):
+        sim = _tiny(tmp_path, "ser")
+        sim.run()
+        for line in sim.log.to_jsonl().splitlines():
+            json.loads(line)
+
+
+class TestTrafficModels:
+    def test_schedules_are_deterministic_and_sorted(self):
+        corpus = [f"A{i}" for i in range(10)]
+        for model in (BurstyTraffic(), DiurnalTraffic(days=1), ReplayStorm()):
+            s1, s2 = model.schedule(corpus, 42), model.schedule(corpus, 42)
+            assert s1 == s2
+            assert [a.t for a in s1] == sorted(a.t for a in s1)
+            assert all(a.accessions for a in s1)
+
+    def test_replay_storm_is_mostly_warm(self):
+        corpus = [f"A{i}" for i in range(20)]
+        arrivals = ReplayStorm(
+            warm_fraction=0.9, base_size=10, n_replays=4, cohort_size=10
+        ).schedule(corpus, 3)
+        base = set(arrivals[0].accessions)
+        for storm in arrivals[1:]:
+            warm = sum(1 for a in storm.accessions if a in base)
+            assert warm / len(storm.accessions) >= 0.8
+
+
+# --------------------------------------------------------------------- chaos
+class TestChaosRuns:
+    def test_crashes_and_stragglers_keep_invariants(self, tmp_path):
+        corpus = [f"SIM{i:04d}" for i in range(4)]
+        traffic = [
+            CohortArrival(0.0, "IRB-C", tuple(corpus)),
+            CohortArrival(200.0, "IRB-C", tuple(corpus)),  # warm replay
+        ]
+        chaos = ChaosSchedule([
+            ChaosEvent(0.0, "set_crash_rate", {"rate": 0.4}),
+            ChaosEvent(50.0, "set_straggler", {"rate": 0.3, "slow_factor": 30.0}),
+            ChaosEvent(80.0, "lease_storm", {"visibility_timeout": 8.0, "duration": 60.0}),
+        ])
+        report = _tiny(
+            tmp_path, "chaos", n_studies=4, traffic=traffic, chaos=chaos
+        ).run()
+        assert report.ok(), [v.detail for v in report.violations]
+        assert report.metrics["crashes"] > 0
+        assert report.metrics["processed"] == 4  # exactly once despite chaos
+
+    def test_overlapping_lease_storms_restore_baseline(self, tmp_path):
+        """Two overlapping storms must not leave the broker stuck on either
+        storm's shrunken visibility timeout after both end."""
+        corpus = [f"SIM{i:04d}" for i in range(3)]
+        chaos = ChaosSchedule([
+            ChaosEvent(0.0, "lease_storm", {"visibility_timeout": 5.0, "duration": 40.0}),
+            ChaosEvent(10.0, "lease_storm", {"visibility_timeout": 12.0, "duration": 60.0}),
+        ])
+        sim = _tiny(tmp_path, "storms", n_studies=3, chaos=chaos)
+        report = sim.run()
+        assert report.ok(), [v.detail for v in report.violations]
+        assert sim.broker.visibility_timeout == sim.config.visibility_timeout
+        # mid-overlap, the first restore must not resurrect the baseline
+        restores = sim.log.by_kind("chaos_restore")
+        assert [r["storm_depth"] for r in restores] == [1, 0]
+        assert restores[0]["visibility_timeout"] == 12.0
+        assert restores[1]["visibility_timeout"] == sim.config.visibility_timeout
+
+    def test_dead_letter_fails_ticket_without_wedging(self, tmp_path):
+        """A poisoned accession exhausts max_deliveries=1 and dead-letters;
+        its subscribers are failed out instead of waiting forever."""
+        corpus = [f"SIM{i:04d}" for i in range(3)]
+        chaos = ChaosSchedule([
+            ChaosEvent(0.0, "crash_keys", {"accessions": ["SIM0001"]}),
+        ])
+        sim = _tiny(
+            tmp_path, "dlq", n_studies=3, chaos=chaos, max_deliveries=1
+        )
+        report = sim.run()
+        assert report.ok(), [v.detail for v in report.violations]
+        assert report.metrics["dead_lettered"] == 1
+        (_, ticket), = sim.tickets[:1]
+        assert "SIM0001" in ticket.failed
+        assert ticket.done()
+
+    def test_reingest_and_ruleset_edit_keep_invariants(self, tmp_path):
+        corpus = [f"SIM{i:04d}" for i in range(3)]
+        traffic = [
+            CohortArrival(0.0, "IRB-R", tuple(corpus)),
+            CohortArrival(300.0, "IRB-R", tuple(corpus)),   # warm
+            # a second research study arrives after the chaos window: its salt
+            # differs, so it must recompute under the edited ruleset against
+            # the re-ingested source (journal dedup does not apply across IRBs)
+            CohortArrival(600.0, "IRB-R2", tuple(corpus)),
+        ]
+        chaos = ChaosSchedule([
+            ChaosEvent(320.0, "reingest", {"accession": "SIM0000"}),
+            ChaosEvent(340.0, "ruleset_edit", {"edit_id": 1}),
+        ])
+        sim = _tiny(tmp_path, "edit", n_studies=3, traffic=traffic, chaos=chaos)
+        report = sim.run()
+        assert report.ok(), [v.detail for v in report.violations]
+        # the re-ingested + ruleset-edited accessions were genuinely recomputed
+        assert report.metrics["processed"] > 3
+
+
+# --------------------------------------------------- negative controls (5+)
+class TestCheckersCatchInjectedViolations:
+    """Each checker must flag a deliberately corrupted run."""
+
+    def test_exactly_once_catches_double_count(self, tmp_path):
+        sim = _tiny(tmp_path, "neg_eo")
+        assert sim.run().ok()
+        sim.pool._all_workers[0].processed += 1  # phantom second completion
+        assert any(
+            "processed" in v.detail for v in ExactlyOnceDelivery().check(sim)
+        )
+
+    def test_exactly_once_catches_missing_bucket_output(self, tmp_path):
+        sim = _tiny(tmp_path, "neg_eo2")
+        assert sim.run().ok()
+        path = sim.dest.store.list("out/")[0]
+        sim.dest.store.delete(path)  # lose a delivered instance
+        assert any(
+            "researcher bucket holds" in v.detail
+            for v in ExactlyOnceDelivery().check(sim)
+        )
+
+    def test_phi_boundary_catches_planted_phi(self, tmp_path):
+        sim = _tiny(tmp_path, "neg_phi")
+        assert sim.run().ok()
+        # an identified source instance leaks into the researcher bucket
+        leaked = sim.source.get_study("SIM0000").datasets[0]
+        sim.dest.store.put("out/IRB-T/LEAK/1", pickle.dumps(leaked))
+        violations = PhiBoundary().check(sim)
+        assert any("MRN" in v.detail or "patient name" in v.detail for v in violations)
+
+    def test_warm_replay_catches_tampered_cache(self, tmp_path):
+        corpus = [f"SIM{i:04d}" for i in range(3)]
+        traffic = [
+            CohortArrival(0.0, "IRB-T", tuple(corpus)),
+            CohortArrival(120.0, "IRB-T", tuple(corpus)),  # served warm
+        ]
+        sim = _tiny(tmp_path, "neg_warm", traffic=traffic)
+        assert sim.run().ok()
+        warm_ticket = next(t for _, t in sim.tickets if t.hits and t.outputs)
+        acc = next(iter(t for t in warm_ticket.hits if t in warm_ticket.outputs))
+        warm_ticket.outputs[acc][0].elements["StudyID"] = "TAMPERED"
+        assert any(
+            acc in v.detail for v in WarmReplayIdentity().check(sim)
+        )
+
+    def test_autoscaler_accounting_catches_fudged_integral(self, tmp_path):
+        sim = _tiny(tmp_path, "neg_cost")
+        assert sim.run().ok()
+        sim.pool.autoscaler.instance_seconds += 7.0  # cooked books
+        assert any(
+            "integral" in v.detail for v in AutoscalerAccounting().check(sim)
+        )
+
+    def test_no_wedged_subscribers_catches_ghost_registration(self, tmp_path):
+        from repro.lake.planner import _InFlight
+
+        sim = _tiny(tmp_path, "neg_wedge")
+        assert sim.run().ok()
+        # a registration that was never published: no broker copy, no journal
+        # completion, no DLQ entry -> its subscribers would wait forever
+        _, ticket = sim.tickets[0]
+        pseudo = sim.service._studies[ticket.study_id]
+        req = build_request(pseudo, "SIM0000", sim.mrns["SIM0000"])
+        sim.service.planner._inflight["IRB-T/GHOST"] = _InFlight("GHOST", req, [ticket])
+        # ...and a ticket pending on work with no registration at all
+        ticket.pending.add("ORPHAN")
+        violations = NoWedgedSubscribers().check(sim)
+        assert any("IRB-T/GHOST" in v.detail for v in violations)
+        assert any("ORPHAN" in v.detail and "wedged" in v.detail for v in violations)
+
+    def test_lake_consistency_catches_lost_backing_blob(self, tmp_path):
+        sim = _tiny(tmp_path, "neg_lake")
+        assert sim.run().ok()
+        key = sim.lake.keys()[0]
+        sim.lake.backend.delete(key)  # index says present, backend lost it
+        assert any(
+            "no backing blob" in v.detail for v in LakeConsistency().check(sim)
+        )
+
+    def test_journal_durability_catches_unsynced_state(self, tmp_path):
+        sim = _tiny(tmp_path, "neg_journal")
+        assert sim.run().ok()
+        # a completion the journal file knows about but the live dict lost:
+        # a replay would resurrect work state the fleet never agreed on
+        sim.journal._fh.write(
+            json.dumps({"kind": "done", "key": "IRB-T/PHANTOM",
+                        "manifest": {"request_id": "x", "entries": []}}) + "\n"
+        )
+        sim.journal._fh.flush()
+        assert any(
+            "PHANTOM" in v.detail for v in JournalDurability().check(sim)
+        )
+
+
+# -------------------------------------------------- step-driven pool parity
+class TestStepDrivenPool:
+    def test_step_loop_matches_drain(self, tmp_path):
+        """Driving the pool via step()+manual clock must equal drain()."""
+        from repro.core import DeidPipeline, TrustMode
+        from repro.dicom.generator import StudyGenerator
+        from repro.queueing import (
+            Autoscaler, AutoscalerConfig, Broker, DeidWorker, Journal, WorkerPool,
+        )
+        from repro.queueing.server import DeidService
+        from repro.storage.object_store import StudyStore
+        from repro.utils.timing import SimClock
+
+        def env(tag):
+            clock = SimClock()
+            gen = StudyGenerator(3)
+            lake = StudyStore("lake")
+            mrns = {}
+            for i in range(3):
+                s = gen.gen_study(f"P{i}", modality="CT", n_images=1)
+                lake.put_study(f"P{i}", s)
+                mrns[f"P{i}"] = s.mrn
+            broker = Broker(clock, visibility_timeout=30.0)
+            journal = Journal(tmp_path / f"{tag}.jsonl")
+            service = DeidService(broker, lake, journal)
+            service.register_study("IRB-S", TrustMode.POST_IRB)
+            service.submit("IRB-S", list(mrns), mrns)
+            pipeline = DeidPipeline(recompress=False)
+            dest = StudyStore("researcher")
+            pool = WorkerPool(
+                broker,
+                Autoscaler(broker, AutoscalerConfig(), clock),
+                lambda wid: DeidWorker(wid, pipeline, lake, dest, journal),
+            )
+            return clock, broker, journal, pool
+
+        clock_a, _, journal_a, pool_a = env("drain")
+        report_a = pool_a.drain()
+
+        clock_b, broker_b, journal_b, pool_b = env("step")
+        t0 = clock_b.now()
+        bytes_in = broker_b.stats().backlog_bytes
+        while not broker_b.empty():
+            busy = pool_b.step()
+            clock_b.advance(max(busy, pool_b.tick_seconds))
+        pool_b.finish()
+        report_b = pool_b.report(t0, bytes_in)
+
+        assert journal_a.completed_keys() == journal_b.completed_keys()
+        assert report_a == report_b
+        assert clock_a.now() == clock_b.now()
