@@ -9,6 +9,7 @@ import traceback
 def main() -> None:
     from benchmarks import (
         autoscale,
+        catalogbench,
         cohortbench,
         fleetbench,
         kernelbench,
@@ -21,6 +22,7 @@ def main() -> None:
         ("table1_throughput", table1_throughput.main),
         ("table2_rules", table2_rules.main),
         ("cohortbench", cohortbench.main),
+        ("catalogbench", catalogbench.main),
         ("fleetbench", fleetbench.main),
         ("autoscale", autoscale.main),
         ("kernelbench", kernelbench.main),

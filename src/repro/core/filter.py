@@ -2,6 +2,12 @@
 
 First stage of the paper's three-stage engine (Figure 2a). A rejected image
 never reaches the researcher; the manifest records which rule fired.
+
+Value comparison contract: equals/notequals/in rules compare through
+``DicomDataset.matches`` (CS normalization — case/whitespace-insensitive),
+the same normalization the metadata catalog applies at ingest, so a study
+selected by a catalog query is judged by the filter under identical string
+semantics. ``startswith`` stays byte-exact (UID prefixes are not CS).
 """
 from __future__ import annotations
 

@@ -47,12 +47,14 @@ from repro.dicom.dataset import DicomDataset
 from repro.dicom.devices import DeviceKey, Rect, registry
 
 # --------------------------------------------------------------------- filter
+# equals/notequals/in are implemented via DicomDataset.matches (shared CS
+# normalization — case/whitespace-insensitive, the same the catalog uses at
+# ingest) inside FilterRule.matches, so they have no entry here. startswith
+# stays byte-exact — it is used for UID prefixes, which are never CS.
+_MATCHES_OPS = frozenset({"equals", "notequals", "in"})
 _FILTER_OPS: Dict[str, Callable[[str, str], bool]] = {
-    "equals": lambda v, arg: v == arg,
-    "notequals": lambda v, arg: v != arg,
     "contains": lambda v, arg: arg.upper() in v.upper(),
     "startswith": lambda v, arg: v.startswith(arg),
-    "in": lambda v, arg: v in [a.strip() for a in arg.split(",")],
     "empty": lambda v, arg: v == "",
     "exists": lambda v, arg: True,  # presence checked separately
     "missing": lambda v, arg: False,
@@ -110,6 +112,12 @@ class FilterRule:
                 hit = not present
             elif not present:
                 hit = False
+            elif self.op == "equals":
+                hit = ds.matches(self.keyword, self.arg)
+            elif self.op == "notequals":
+                hit = not ds.matches(self.keyword, self.arg)
+            elif self.op == "in":
+                hit = any(ds.matches(self.keyword, a) for a in self.arg.split(","))
             else:
                 hit = _FILTER_OPS[self.op](str(ds.get(self.keyword, "")), self.arg)
         if hit and self.unless and EXEMPTIONS[self.unless](ds):
@@ -138,7 +146,7 @@ def parse_filter_script(text: str) -> List[FilterRule]:
                 raise ValueError(f"unknown builtin {builtin!r}")
             rules.append(FilterRule(action, None, None, "", builtin, unless, line))
         else:
-            if op not in _FILTER_OPS:
+            if op not in _FILTER_OPS and op not in _MATCHES_OPS:
                 raise ValueError(f"unknown op {op!r} in {raw!r}")
             if unless and unless not in EXEMPTIONS:
                 raise ValueError(f"unknown exemption {unless!r}")

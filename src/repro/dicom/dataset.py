@@ -24,6 +24,15 @@ _UID_ROOT = "1.2.840.99999.2.1"  # research root, not a registered OID
 _uid_counter = itertools.count(1)
 
 
+def normalize_cs(value: Any) -> str:
+    """Normalize a CS-like string value for comparison: collapse internal
+    whitespace runs, strip, uppercase. DICOM CS values are case-insensitive
+    and frequently space-padded by devices; every metadata comparison in the
+    engine (filter rules, catalog dictionary encoding) goes through this one
+    function so the two layers can never disagree about what "equal" means."""
+    return " ".join(str(value).split()).upper()
+
+
 def new_uid(entropy: Optional[str] = None) -> str:
     """Generate a DICOM UID. Deterministic when ``entropy`` is given."""
     if entropy is not None:
@@ -78,6 +87,15 @@ class DicomDataset:
         if self.encapsulated is not None:
             n += len(self.encapsulated)
         return n
+
+    def matches(self, keyword: str, value: Any) -> bool:
+        """Case/whitespace-insensitive equality against a tag value (CS-like
+        semantics via :func:`normalize_cs`). False when the tag is absent.
+        Shared by the filter stage's equals/notequals/in ops and the catalog's
+        dictionary encoding."""
+        if keyword not in self.elements:
+            return False
+        return normalize_cs(self.elements[keyword]) == normalize_cs(value)
 
     def image_type_contains(self, token: str) -> bool:
         it = self.get("ImageType", "")

@@ -35,6 +35,17 @@ PROBLEM_KINDS = [
 _FIRST = ["JANE", "JOHN", "MARIA", "WEI", "PRIYA", "OMAR", "SOFIA", "LIAM"]
 _LAST = ["DOE", "SMITH", "GARCIA", "CHEN", "PATEL", "HASSAN", "ROSSI", "KIM"]
 
+# BodyPartExamined mix per modality — gives the metadata catalog a realistic
+# anatomical dimension to select cohorts on (no PHI content).
+_BODY_PARTS = {
+    "CT": ["CHEST", "ABDOMEN", "HEAD", "PELVIS"],
+    "MR": ["BRAIN", "SPINE", "KNEE"],
+    "PT": ["WHOLEBODY", "CHEST"],
+    "US": ["ABDOMEN", "HEART", "THYROID"],
+    "DX": ["CHEST", "HAND", "FOOT", "SPINE"],
+    "CR": ["CHEST", "ANKLE"],
+}
+
 
 @dataclass
 class SyntheticStudy:
@@ -45,6 +56,7 @@ class SyntheticStudy:
     study_date: str
     modality: str
     device: DeviceKey
+    body_part: str = ""
     datasets: List[DicomDataset] = field(default_factory=list)
     # ground truth for tests: regions that contain burned-in PHI, per instance
     phi_rects: Dict[str, List[Rect]] = field(default_factory=dict)
@@ -135,6 +147,8 @@ class StudyGenerator:
         ds["Modality"] = device.modality
         ds["Manufacturer"] = device.make
         ds["ManufacturerModelName"] = device.model
+        if study.body_part:
+            ds["BodyPartExamined"] = study.body_part
         ds["DeviceSerialNumber"] = f"SN{int(rng.integers(1e6)):06d}"
         ds["StationName"] = f"STA{int(rng.integers(100)):02d}"
         ds["Rows"] = device.rows
@@ -183,6 +197,7 @@ class StudyGenerator:
         mrn = f"{int(rng.integers(1e7)):08d}"
         name = f"{_LAST[int(rng.integers(len(_LAST)))]}^{_FIRST[int(rng.integers(len(_FIRST)))]}"
         y, m, d = 2015 + int(rng.integers(5)), 1 + int(rng.integers(12)), 1 + int(rng.integers(28))
+        parts = _BODY_PARTS.get(modality, ["CHEST"])
         study = SyntheticStudy(
             accession=accession,
             mrn=mrn,
@@ -191,6 +206,7 @@ class StudyGenerator:
             study_date=f"{y:04d}{m:02d}{d:02d}",
             modality=modality,
             device=device,
+            body_part=parts[int(rng.integers(len(parts)))],
         )
         series_uid = new_uid(f"series/{accession}/1")
         burn_rects = self.registry.scrub_rects(device)

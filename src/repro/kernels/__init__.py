@@ -2,5 +2,7 @@
 #   scrub      — batched PHI rectangle blanking (the paper's scrub stage)
 #   phi_detect — burned-in-text detector (paper Future Work: OCR/ML, TPU-adapted)
 #   jls        — JPEG-Lossless predictor residuals (TPU half of the codec)
+#   fused      — single-pass scrub+JLS (DESIGN.md §4)
+#   bitmap     — packed-bitmap predicate combine + popcount (catalog queries)
 # Each kernel ships <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
 # wrapper with CPU interpret fallback) and ref.py (pure-jnp oracle).

@@ -1,0 +1,19 @@
+"""Packed-bitmap predicate combine + popcount kernel (catalog query engine).
+
+The catalog's vectorized query path evaluates leaf predicates into packed
+uint32 bitmaps (one bit per row) and hands the boolean combine to this
+kernel, which evaluates the compiled stack program and popcounts the result
+in one VMEM pass. ``ref.py`` is the numpy oracle the Pallas path is
+parity-tested against.
+"""
+from repro.kernels.bitmap.ops import combine_bitmaps, pack_mask, unpack_mask
+from repro.kernels.bitmap.ref import combine_bitmaps_ref, pack_mask_np, unpack_mask_np
+
+__all__ = [
+    "combine_bitmaps",
+    "combine_bitmaps_ref",
+    "pack_mask",
+    "pack_mask_np",
+    "unpack_mask",
+    "unpack_mask_np",
+]

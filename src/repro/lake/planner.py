@@ -64,6 +64,11 @@ class CohortTicket:
 
     cohort_id: int
     study_id: str
+    # digest of (catalog snapshot, query) when this cohort came from
+    # DeidService.submit_query — joins the warm-replay identity: the same
+    # selection digest is guaranteed to name the same cohort, so a replayed
+    # query is attributable to the exact catalog state that answered it
+    selection_digest: str = ""
     hits: List[str] = field(default_factory=list)
     coalesced: List[str] = field(default_factory=list)
     cold: List[str] = field(default_factory=list)
@@ -113,14 +118,23 @@ class CohortPlanner:
         pseudo: PseudonymService,
         accessions: List[str],
         mrn_lookup: Dict[str, str],
+        selection_digest: str = "",
     ) -> CohortTicket:
-        """Partition one cohort request and publish only the cold slice."""
+        """Partition one cohort request and publish only the cold slice.
+        Callers are expected to pass deduplicated accessions
+        (``DeidService`` does); a duplicate here would coalesce the second
+        occurrence onto the first rather than double-publish, but would still
+        double-count admission stats."""
         # opportunistically clear finished in-flight work first, so a key
         # completed since the last resolve() is served warm rather than
         # coalesced onto a registration nobody will ever resolve
         self.resolve()
         self._cohorts += 1
-        ticket = CohortTicket(cohort_id=self._cohorts, study_id=pseudo.study_id)
+        ticket = CohortTicket(
+            cohort_id=self._cohorts,
+            study_id=pseudo.study_id,
+            selection_digest=selection_digest,
+        )
         for acc in accessions:
             self.stats.accessions += 1
             if self.validate is not None:

@@ -49,10 +49,14 @@ class DeidService:
         journal: Journal,
         result_lake=None,
         pipeline=None,
+        catalog=None,
     ) -> None:
         self.broker = broker
         self.lake = lake
         self.journal = journal
+        # optional metadata catalog (repro.catalog.StudyCatalog): enables
+        # query-then-de-identify via submit_query
+        self.catalog = catalog
         self._studies: Dict[str, PseudonymService] = {}
         self._ineligible: Set[str] = set()  # e.g. research-opt-out patients
         self.records: List[WorkflowRecord] = []
@@ -98,13 +102,26 @@ class DeidService:
             return False, "accession not present in the data lake"
         return True, ""
 
+    @staticmethod
+    def _dedupe(accessions: List[str]) -> List[str]:
+        """Drop repeated accessions, keeping stable first-occurrence order —
+        a duplicated accession in one request must neither double-publish
+        nor double-count planner admission stats."""
+        seen: Set[str] = set()
+        out: List[str] = []
+        for acc in accessions:
+            if acc not in seen:
+                seen.add(acc)
+                out.append(acc)
+        return out
+
     def submit(self, study_id: str, accessions: List[str], mrn_lookup: Dict[str, str]) -> List[WorkflowRecord]:
         """Validate + pseudonymize + enqueue one request per accession."""
         if study_id not in self._studies:
             raise KeyError(f"research study {study_id!r} not registered")
         pseudo = self._studies[study_id]
         out: List[WorkflowRecord] = []
-        for acc in accessions:
+        for acc in self._dedupe(accessions):
             ok, reason = self.validate(acc)
             if not ok:
                 rec = WorkflowRecord(study_id, acc, RequestState.REJECTED, reason=reason)
@@ -131,7 +148,13 @@ class DeidService:
             self.records.append(rec)
         return out
 
-    def submit_cohort(self, study_id: str, accessions: List[str], mrn_lookup: Dict[str, str]):
+    def submit_cohort(
+        self,
+        study_id: str,
+        accessions: List[str],
+        mrn_lookup: Dict[str, str],
+        selection_digest: str = "",
+    ):
         """Cohort admission through the planner: warm accessions are served
         from the result lake, in-flight ones coalesce onto existing work
         (single-flight), and only the cold slice is published to the broker.
@@ -140,7 +163,12 @@ class DeidService:
             raise RuntimeError("no result lake configured; use submit()")
         if study_id not in self._studies:
             raise KeyError(f"research study {study_id!r} not registered")
-        ticket = self.planner.submit(self._studies[study_id], accessions, mrn_lookup)
+        ticket = self.planner.submit(
+            self._studies[study_id],
+            self._dedupe(accessions),
+            mrn_lookup,
+            selection_digest=selection_digest,
+        )
         for acc in ticket.hits:
             self.records.append(
                 WorkflowRecord(study_id, acc, RequestState.DONE)
@@ -152,6 +180,28 @@ class DeidService:
                 WorkflowRecord(study_id, acc, RequestState.REJECTED, reason=reason)
             )
         return ticket
+
+    def submit_query(self, study_id: str, query, mrn_lookup: Dict[str, str]):
+        """Query-then-de-identify (the paper's core workflow): resolve a
+        metadata predicate against the catalog, then admit the matching
+        cohort through the planner. The selection digest — sha256 of
+        (catalog snapshot, canonical query) — rides the ticket, pinning
+        exactly which catalog state answered the query.
+
+        Returns ``(CohortSelection, CohortTicket)``. ``mrn_lookup`` must
+        cover every accession the catalog can return (in production the
+        central DB joins this; here callers pass the ingest-time map).
+        """
+        if self.catalog is None:
+            raise RuntimeError("no metadata catalog attached; pass catalog= or set .catalog")
+        selection = self.catalog.select(query)
+        ticket = self.submit_cohort(
+            study_id,
+            list(selection.accessions),
+            mrn_lookup,
+            selection_digest=selection.digest,
+        )
+        return selection, ticket
 
     def request_states(self, study_id: str) -> Dict[str, RequestState]:
         out: Dict[str, RequestState] = {}

@@ -17,10 +17,18 @@ from repro.sim.invariants import (
     LakeConsistency,
     NoWedgedSubscribers,
     PhiBoundary,
+    QueryConsistency,
     Violation,
     WarmReplayIdentity,
 )
-from repro.sim.traffic import BurstyTraffic, CohortArrival, DiurnalTraffic, ReplayStorm
+from repro.sim.traffic import (
+    BurstyTraffic,
+    CohortArrival,
+    DiurnalTraffic,
+    QueryArrival,
+    QueryMix,
+    ReplayStorm,
+)
 
 __all__ = [
     "AutoscalerAccounting",
@@ -43,6 +51,9 @@ __all__ = [
     "LakeConsistency",
     "NoWedgedSubscribers",
     "PhiBoundary",
+    "QueryArrival",
+    "QueryConsistency",
+    "QueryMix",
     "ReplayStorm",
     "Violation",
     "WarmReplayIdentity",

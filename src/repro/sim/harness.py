@@ -11,14 +11,15 @@ same seed produce byte-identical event logs (``report.log_digest``) and
 metrics — the conformance suite enforces this, and it is what makes a chaos
 failure from CI replayable on a laptop from one integer.
 
-Event kinds in the log: ``ingest``, ``cohort``, ``tick``, ``chaos``,
-``chaos_restore``, ``cohort_done``, ``drain_done``.
+Event kinds in the log: ``ingest``, ``cohort``, ``query``, ``tick``,
+``chaos``, ``chaos_restore``, ``cohort_done``, ``drain_done``.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
+from repro.catalog import CohortSelection, StudyCatalog
 from repro.core.pipeline import DeidPipeline
 from repro.core.pseudonym import TrustMode
 from repro.core import scripts as default_scripts
@@ -32,7 +33,7 @@ from repro.queueing.worker import DeidWorker, FailureInjector, WorkerPool
 from repro.sim.chaos import ChaosSchedule
 from repro.sim.events import EventLog, EventQueue
 from repro.sim.invariants import DEFAULT_CHECKERS, Violation
-from repro.sim.traffic import CohortArrival
+from repro.sim.traffic import CohortArrival, QueryArrival
 from repro.storage.object_store import StudyStore
 from repro.utils.timing import SimClock
 
@@ -42,7 +43,7 @@ class FleetConfig:
     seed: int = 0
     n_studies: int = 8
     images_per_study: int = 3
-    modality: str = "CT"
+    modality: Optional[str] = "CT"   # None = draw the paper's modality mix
     delivery_window: float = 1800.0      # per-cohort SLA (seconds)
     # modeled de-id compute rate, applied to BOTH the workers and the
     # autoscaler's sizing estimate (a fleet whose planner disagrees with its
@@ -86,6 +87,9 @@ class FleetSim:
         # --- corpus: the identified data lake, with PHI ground truth retained
         self.gen = StudyGenerator(config.seed)
         self.source = StudyStore("lake", key=b"sim-at-rest-key")
+        # metadata catalog indexes every ingest (incl. chaos re-ingests)
+        self.catalog = StudyCatalog()
+        self.source.attach_catalog(self.catalog)
         self.mrns: Dict[str, str] = {}
         self._versions: List[SyntheticStudy] = []  # every ingest, incl. re-ingests
         self._etag_study: Dict[str, SyntheticStudy] = {}  # source etag -> version
@@ -108,6 +112,7 @@ class FleetSim:
         self.service = DeidService(
             self.broker, self.source, self.journal,
             result_lake=self.lake, pipeline=self.pipeline,
+            catalog=self.catalog,
         )
         for arr in self.traffic:
             if arr.study_id not in self.service._studies:
@@ -132,7 +137,11 @@ class FleetSim:
             tick_seconds=config.tick_seconds,
         )
 
-        self.tickets: List[Tuple[CohortArrival, object]] = []
+        self.tickets: List[Tuple[object, object]] = []  # (arrival, ticket)
+        # (arrival, serve-time selection, serve-time accession->etag map) per
+        # query — what the QueryConsistency checker replays brute-force
+        self.query_log: List[Tuple[QueryArrival, CohortSelection, Dict[str, str]]] = []
+        self._submitted: Set[str] = set()
         self._cohort_arrival_t: Dict[int, float] = {}
         self._cohort_done_t: Dict[int, float] = {}
         self._tick_scheduled = False
@@ -162,9 +171,11 @@ class FleetSim:
         return list(self._versions)
 
     def submitted_keys(self) -> set:
-        return {
-            f"{arr.study_id}/{acc}" for arr in self.traffic for acc in arr.accessions
-        }
+        """Every study-scoped key admitted so far. Accession-list arrivals
+        contribute their full lists at admission; query arrivals contribute
+        whatever the catalog resolved at serve time (tracked live — the
+        traffic schedule alone cannot know a query's cohort)."""
+        return set(self._submitted)
 
     def cold_pipeline_for(self, ticket) -> DeidPipeline:
         """Lake-less clone of the pipeline whose ruleset served ``ticket``'s
@@ -182,7 +193,8 @@ class FleetSim:
     def run(self, checkers=DEFAULT_CHECKERS) -> FleetReport:
         eq = EventQueue()
         for arr in self.traffic:
-            eq.push(arr.t, "cohort", arrival=arr)
+            kind = "query" if isinstance(arr, QueryArrival) else "cohort"
+            eq.push(arr.t, kind, arrival=arr)
         for ce in self.chaos.sorted():
             eq.push(ce.t, "chaos", event=ce)
 
@@ -197,6 +209,8 @@ class FleetSim:
                 self.clock.advance(ev.t - self.clock.now())
             if ev.kind == "cohort":
                 self._on_cohort(eq, ev.payload["arrival"])
+            elif ev.kind == "query":
+                self._on_query(eq, ev.payload["arrival"])
             elif ev.kind == "tick":
                 self._on_tick(eq)
             elif ev.kind == "chaos":
@@ -229,10 +243,8 @@ class FleetSim:
             eq.push(t, "tick")
             self._tick_scheduled = True
 
-    def _on_cohort(self, eq: EventQueue, arr: CohortArrival) -> None:
-        ticket = self.service.submit_cohort(
-            arr.study_id, list(arr.accessions), self.mrns
-        )
+    def _admit_ticket(self, arr, ticket) -> None:
+        """Bookkeeping shared by accession-list and query admissions."""
         self.tickets.append((arr, ticket))
         self._ticket_digest[ticket.cohort_id] = self.service.planner.ruleset_digest
         for acc in ticket.hits:  # pin the source version each hit replayed
@@ -240,12 +252,46 @@ class FleetSim:
         self._cohort_arrival_t[ticket.cohort_id] = self.clock.now()
         if ticket.done():
             self._cohort_done_t[ticket.cohort_id] = self.clock.now()
+
+    def _on_cohort(self, eq: EventQueue, arr: CohortArrival) -> None:
+        ticket = self.service.submit_cohort(
+            arr.study_id, list(arr.accessions), self.mrns
+        )
+        self._submitted |= {f"{arr.study_id}/{acc}" for acc in arr.accessions}
+        self._admit_ticket(arr, ticket)
         self.log.append(
             self.clock.now(), "cohort",
             cohort_id=ticket.cohort_id, study_id=arr.study_id,
             n=len(arr.accessions), hits=len(ticket.hits),
             coalesced=len(ticket.coalesced), cold=len(ticket.cold),
             rejected=len(ticket.rejected),
+        )
+        if not self.broker.empty():
+            self._schedule_tick(eq, self.clock.now())
+
+    def _on_query(self, eq: EventQueue, arr: QueryArrival) -> None:
+        selection, ticket = self.service.submit_query(
+            arr.study_id, arr.query, self.mrns
+        )
+        # serve-time snapshot: which source version of each accession the
+        # catalog had indexed when it answered — the consistency checker
+        # replays the query brute-force against exactly these versions
+        self.query_log.append((arr, selection, self.catalog.accession_etags()))
+        self._submitted |= {
+            f"{arr.study_id}/{acc}" for acc in selection.accessions
+        }
+        self._admit_ticket(arr, ticket)
+        self.log.append(
+            self.clock.now(), "query",
+            cohort_id=ticket.cohort_id, study_id=arr.study_id,
+            query=selection.query, selection_digest=selection.digest,
+            matched=len(selection.accessions),
+            instances=selection.total_instances,
+            matched_bytes=selection.total_bytes,
+            blocks_scanned=selection.blocks_scanned,
+            blocks_pruned=selection.blocks_pruned,
+            hits=len(ticket.hits), coalesced=len(ticket.coalesced),
+            cold=len(ticket.cold), rejected=len(ticket.rejected),
         )
         if not self.broker.empty():
             self._schedule_tick(eq, self.clock.now())
@@ -357,6 +403,12 @@ class FleetSim:
             "cost_usd": round(a.cost_usd(), 6),
             "sim_minutes": round(self.clock.now() / 60.0, 6),
             "max_latency_s": round(max(latencies.values()), 6) if latencies else 0.0,
+            "queries": len(self.query_log),
+            "query_matched_accessions": sum(
+                len(sel.accessions) for _, sel, _ in self.query_log
+            ),
+            "catalog_rows": self.catalog.stats.rows,
+            "catalog_blocks_pruned": self.catalog.stats.blocks_pruned,
         }
         violations: List[Violation] = []
         for checker in checkers:

@@ -286,6 +286,73 @@ class JournalDurability(InvariantChecker):
             replayed.close()
 
 
+class QueryConsistency(InvariantChecker):
+    """Every query-served selection must equal a brute-force scan: the query
+    is re-evaluated row by row in pure python (``catalog.query.matches_row``
+    — no dictionary codes, no bitmaps, no zone-map pruning, no jax) over the
+    exact source versions the catalog had indexed at serve time, and the
+    selection's accessions, per-accession instance counts, and byte totals
+    must all agree."""
+
+    name = "query_consistency"
+
+    def check(self, sim: "FleetSim") -> List[Violation]:
+        from repro.catalog.columns import rows_from_study
+        from repro.catalog.query import matches_row
+
+        out: List[Violation] = []
+        for qi, (arr, selection, snapshot) in enumerate(sim.query_log):
+            where = f"query{qi} ({selection.query})"
+            counts: Dict[str, int] = {}
+            total_bytes = 0
+            for acc, etag in snapshot.items():
+                study = sim._etag_study.get(etag)
+                if study is None:
+                    out.append(
+                        self._v(f"{where}: no retained source version for "
+                                f"{acc} etag={etag}")
+                    )
+                    continue
+                n = 0
+                for row in rows_from_study(study):
+                    if matches_row(arr.query, row):
+                        n += 1
+                        total_bytes += row["nbytes"]
+                if n:
+                    counts[acc] = n
+            if list(selection.accessions) != sorted(counts):
+                out.append(
+                    self._v(
+                        f"{where}: selection accessions "
+                        f"{list(selection.accessions)} != brute-force "
+                        f"{sorted(counts)}"
+                    )
+                )
+                continue
+            if dict(selection.instance_counts) != counts:
+                out.append(
+                    self._v(
+                        f"{where}: instance counts {selection.instance_counts} "
+                        f"!= brute-force {counts}"
+                    )
+                )
+            if selection.total_instances != sum(counts.values()):
+                out.append(
+                    self._v(
+                        f"{where}: total_instances={selection.total_instances} "
+                        f"!= brute-force {sum(counts.values())}"
+                    )
+                )
+            if selection.total_bytes != total_bytes:
+                out.append(
+                    self._v(
+                        f"{where}: total_bytes={selection.total_bytes} "
+                        f"!= brute-force {total_bytes}"
+                    )
+                )
+        return out
+
+
 DEFAULT_CHECKERS = (
     ExactlyOnceDelivery(),
     PhiBoundary(),
@@ -294,4 +361,5 @@ DEFAULT_CHECKERS = (
     NoWedgedSubscribers(),
     LakeConsistency(),
     JournalDurability(),
+    QueryConsistency(),
 )

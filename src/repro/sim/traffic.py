@@ -12,7 +12,11 @@ Three shapes, matching the operational patterns the paper's fleet must absorb:
 * :class:`DiurnalTraffic` — researcher-working-hours load over multiple
   simulated days, thinned at night;
 * :class:`ReplayStorm` — one seeding cohort, then a storm of mostly-warm
-  re-requests (the DESIGN.md §6 repeat-traffic regime, default 90% warm).
+  re-requests (the DESIGN.md §6 repeat-traffic regime, default 90% warm);
+* :class:`QueryMix` — query-driven arrivals (DESIGN.md §8): researchers
+  submit metadata *predicates*, not accession lists, and the catalog
+  resolves the cohort at serve time. Selectivity knobs shape the mix from
+  scan-everything sweeps to single-modality-single-year slivers.
 """
 from __future__ import annotations
 
@@ -20,6 +24,7 @@ import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Sequence
 
+from repro.catalog.query import And, Eq, Not, Or, Predicate, Range
 from repro.sim.events import HashRng
 
 
@@ -28,6 +33,17 @@ class CohortArrival:
     t: float
     study_id: str           # research study (IRB protocol) submitting
     accessions: tuple       # imaging accessions requested (tuple: hashable/frozen)
+
+
+@dataclass(frozen=True)
+class QueryArrival:
+    """A cohort request expressed as a metadata query. Predicates are frozen
+    dataclasses, so arrivals stay hashable/replayable data just like
+    accession tuples."""
+
+    t: float
+    study_id: str
+    query: Predicate
 
 
 class TrafficModel:
@@ -138,3 +154,77 @@ class ReplayStorm(TrafficModel):
                 )
             )
         return out
+
+
+@dataclass
+class QueryMix(TrafficModel):
+    """Seeded mix of metadata queries with selectivity knobs.
+
+    Five shapes, drawn per arrival: ``broad`` (a StudyDate range spanning the
+    whole archive — selects ~everything), ``modality`` (one modality),
+    ``year`` (one acquisition year), ``and`` (modality ∧ year — the narrow
+    sliver), and ``negate`` (¬modality ∨ second modality — exercises NOT/OR
+    through the bitmap path). The fractions are the selectivity knobs; they
+    are weights over shapes, renormalized, so any subset can be zeroed.
+    """
+
+    n_queries: int = 6
+    mean_gap: float = 240.0
+    study_ids: Sequence[str] = ("IRB-Q",)
+    modalities: Sequence[str] = ("CT", "MR", "DX", "CR", "US", "PT")
+    years: Sequence[int] = (2015, 2016, 2017, 2018, 2019)
+    broad_fraction: float = 0.2
+    modality_fraction: float = 0.25
+    year_fraction: float = 0.2
+    and_fraction: float = 0.2
+    negate_fraction: float = 0.15
+
+    def _make_query(self, rng: HashRng, q: int) -> Predicate:
+        mods = list(self.modalities)
+        years = list(self.years)
+        mod = rng.choice(mods, "mod", q)
+        year = rng.choice(years, "year", q)
+        year_range = Range("study_date", year * 10000 + 101, year * 10000 + 1231)
+        weights = [
+            ("broad", self.broad_fraction),
+            ("modality", self.modality_fraction),
+            ("year", self.year_fraction),
+            ("and", self.and_fraction),
+            ("negate", self.negate_fraction),
+        ]
+        total = sum(w for _, w in weights) or 1.0
+        u = rng.u("shape", q) * total
+        acc = 0.0
+        shape = weights[-1][0]
+        for name, w in weights:
+            acc += w
+            if u < acc:
+                shape = name
+                break
+        if shape == "broad":
+            lo, hi = min(years), max(years)
+            return Range("study_date", lo * 10000 + 101, hi * 10000 + 1231)
+        if shape == "modality":
+            return Eq("modality", mod)
+        if shape == "year":
+            return year_range
+        if shape == "and":
+            return And(Eq("modality", mod), year_range)
+        other = rng.choice(mods, "mod2", q)
+        return Or(Not(Eq("modality", mod)), Eq("modality", other))
+
+    def schedule(self, corpus: Sequence[str], seed: int) -> List[QueryArrival]:
+        rng = HashRng(seed, "querymix")
+        out: List[QueryArrival] = []
+        t = 0.0
+        for q in range(self.n_queries):
+            if q:
+                t += rng.exp(self.mean_gap, "gap", q)
+            out.append(
+                QueryArrival(
+                    t=t,
+                    study_id=rng.choice(list(self.study_ids), "study", q),
+                    query=self._make_query(rng, q),
+                )
+            )
+        return sorted(out, key=lambda a: (a.t, a.study_id))

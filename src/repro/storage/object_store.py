@@ -90,10 +90,26 @@ class StudyStore:
 
     def __init__(self, name: str, key: Optional[bytes] = None) -> None:
         self.store = ObjectStore(name, key)
+        self.catalog = None  # optional metadata index (repro.catalog)
+
+    def attach_catalog(self, catalog) -> None:
+        """Route every ``put_study`` through the metadata catalog so the
+        index stays in lockstep with the lake. Studies already stored are
+        backfilled immediately (one read each — metadata indexing is the one
+        consumer allowed to read the lake besides the workers)."""
+        self.catalog = catalog
+        for accession in self.accessions():
+            catalog.ingest_study(
+                accession, self.get_study(accession), etag=self.study_etag(accession)
+            )
 
     def put_study(self, accession: str, study: Any) -> int:
         blob = pickle.dumps(study, protocol=pickle.HIGHEST_PROTOCOL)
         self.store.put(f"studies/{accession}", blob)
+        if self.catalog is not None:
+            # re-puts (re-acquisition) tombstone the old rows in the catalog,
+            # keyed by the fresh at-rest etag recorded by the put above
+            self.catalog.ingest_study(accession, study, etag=self.study_etag(accession))
         return len(blob)
 
     def get_study(self, accession: str) -> Any:

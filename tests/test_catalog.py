@@ -1,0 +1,416 @@
+"""Catalog conformance: encode/decode round-trips, query-path equivalence
+(vectorized jnp+Pallas vs numpy oracle vs brute-force row scan), zone-map
+pruning safety, tombstoned re-ingest, selection digests, the bitmap kernel's
+parity with its numpy reference, and the query-then-de-identify service path
+(DESIGN.md §8). Seeded-random sweeps here mirror the hypothesis properties in
+``test_catalog_properties.py`` so coverage survives without hypothesis."""
+import tempfile
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.catalog import (
+    And,
+    Contains,
+    Eq,
+    In,
+    Not,
+    Or,
+    Range,
+    StudyCatalog,
+    describe,
+    matches_row,
+    rows_from_study,
+)
+from repro.catalog.columns import COLUMN_KINDS, Dictionary, row_from_dataset
+from repro.core import DeidPipeline, TrustMode
+from repro.dicom.dataset import DicomDataset, normalize_cs
+from repro.dicom.generator import StudyGenerator
+from repro.kernels.bitmap.ops import combine_bitmaps, pack_mask
+from repro.kernels.bitmap.ref import combine_bitmaps_ref, pack_mask_np, unpack_mask_np
+from repro.lake import ResultLake
+from repro.queueing import Autoscaler, AutoscalerConfig, Broker, DeidWorker, Journal, WorkerPool
+from repro.queueing.server import DeidService
+from repro.storage.object_store import StudyStore
+from repro.utils.timing import SimClock
+
+
+# ----------------------------------------------------------- random fixtures
+_MODALITIES = ["CT", "MR", "DX", "US", "CR", "PT"]
+_PARTS = ["CHEST", "HEAD", "ABDOMEN", "KNEE", ""]
+_MAKES = ["GE Medical", "Siemens", "Philips", "Vidar"]
+_MODELS = ["Optima CT660", "MAGNETOM Aera", "Epiq 7", "DRX-1"]
+
+
+def random_rows(rng: np.random.Generator, n: int) -> list:
+    return [
+        {
+            "modality": str(rng.choice(_MODALITIES)),
+            "body_part": str(rng.choice(_PARTS)),
+            "manufacturer": str(rng.choice(_MAKES)),
+            "model": str(rng.choice(_MODELS)),
+            "study_date": 20150000 + int(rng.integers(1, 5)) * 10000
+            + int(rng.integers(1, 13)) * 100 + int(rng.integers(1, 29)),
+            "bits_stored": int(rng.choice([8, 12, 16])),
+            "rows": int(rng.choice([256, 512, 1024])),
+            "cols": int(rng.choice([256, 512, 1024])),
+            "nbytes": int(rng.integers(1_000, 2_000_000)),
+            "burned_in": int(rng.random() < 0.2),
+        }
+        for _ in range(n)
+    ]
+
+
+def random_pred(rng: np.random.Generator, depth: int = 2):
+    kind = int(rng.integers(0, 5 if depth <= 0 else 8))
+    if kind == 0:
+        return Eq("modality", str(rng.choice(_MODALITIES + ["XX"])))
+    if kind == 1:
+        return Eq("body_part", str(rng.choice(_PARTS)))
+    if kind == 2:
+        lo = 20150101 + int(rng.integers(0, 4)) * 10000
+        return Range("study_date", lo, lo + int(rng.integers(0, 3)) * 10000 + 1231 - 101)
+    if kind == 3:
+        return In("modality", tuple(rng.choice(_MODALITIES, size=int(rng.integers(1, 4)))))
+    if kind == 4:
+        return Contains("model", str(rng.choice(["ct", "MAG", "7", "zzz"])))
+    if kind == 5:
+        return Not(random_pred(rng, depth - 1))
+    sub = [random_pred(rng, depth - 1) for _ in range(int(rng.integers(2, 4)))]
+    return And(*sub) if kind == 6 else Or(*sub)
+
+
+def build_catalog(rng: np.random.Generator, n_accessions: int, rows_per: int,
+                  block_rows: int = 32) -> tuple:
+    cat = StudyCatalog(block_rows=block_rows)
+    all_rows = {}
+    for i in range(n_accessions):
+        acc = f"R{i:04d}"
+        rows = random_rows(rng, rows_per)
+        all_rows[acc] = rows
+        cat.ingest_rows(acc, rows, etag=f"etag{i}")
+    return cat, all_rows
+
+
+def brute_force(all_rows: dict, pred) -> dict:
+    out = {}
+    for acc, rows in all_rows.items():
+        n = sum(1 for r in rows if matches_row(pred, r))
+        if n:
+            out[acc] = n
+    return out
+
+
+# ------------------------------------------------------------------- columns
+class TestColumns:
+    def test_dictionary_roundtrip_and_normalization(self):
+        d = Dictionary()
+        a = d.encode("GE Medical")
+        assert d.encode("  ge   medical ") == a  # CS-normalized interning
+        b = d.encode("Siemens")
+        assert d.decode(a) == "GE MEDICAL" and d.decode(b) == "SIEMENS"
+        assert d.code_of("ge medical") == a
+        assert d.code_of("nope") is None
+        assert d.codes_containing("medic") == (a,)
+        assert len(d) == 2
+
+    def test_row_from_dataset(self):
+        gen = StudyGenerator(0)
+        study = gen.gen_study("A1", modality="CT", n_images=1)
+        row = row_from_dataset(study.datasets[0])
+        assert row["modality"] == "CT"
+        assert row["study_date"] == int(study.study_date)
+        assert row["rows"] == study.device.rows and row["cols"] == study.device.cols
+        assert row["nbytes"] == study.datasets[0].nbytes()
+        assert row["burned_in"] == 0
+        assert set(row) == set(COLUMN_KINDS)
+
+    def test_encode_decode_roundtrip_through_catalog(self):
+        """Every ingested value must be recoverable from its code — the
+        decode side of the dictionary is what Contains and selection
+        reporting rely on."""
+        rng = np.random.default_rng(7)
+        cat, all_rows = build_catalog(rng, 4, 20)
+        for col, kind in COLUMN_KINDS.items():
+            if kind != "dict":
+                continue
+            d = cat.dicts[col]
+            for rows in all_rows.values():
+                for r in rows:
+                    code = d.code_of(r[col])
+                    assert code is not None
+                    assert d.decode(code) == normalize_cs(r[col])
+
+
+# ------------------------------------------------------------- query engine
+class TestQueryEquivalence:
+    @pytest.mark.parametrize("seed", range(6))
+    def test_vectorized_equals_oracle_equals_bruteforce(self, seed):
+        rng = np.random.default_rng(seed)
+        cat, all_rows = build_catalog(rng, 6, 25, block_rows=16)
+        for q in range(8):
+            pred = random_pred(rng)
+            mv, _, _ = cat.match_mask(pred, mode="auto", prune=False)
+            mo, _, _ = cat.match_mask(pred, mode="oracle", prune=False)
+            assert np.array_equal(mv, mo), (seed, q, describe(pred))
+            sel = cat.select(pred, mode="auto")
+            assert dict(sel.instance_counts) == brute_force(all_rows, pred), describe(pred)
+
+    def test_pruning_never_changes_results(self):
+        rng = np.random.default_rng(42)
+        # date-sorted ingest gives blocks tight zone maps worth pruning
+        cat = StudyCatalog(block_rows=16)
+        all_rows = {}
+        rows = sorted(random_rows(rng, 120), key=lambda r: r["study_date"])
+        for i in range(6):
+            acc = f"S{i:03d}"
+            all_rows[acc] = rows[i * 20 : (i + 1) * 20]
+            cat.ingest_rows(acc, all_rows[acc], etag=str(i))
+        pred = Range("study_date", 20150101, 20151231)
+        pruned_sel = cat.select(pred, prune=True)
+        full_sel = cat.select(pred, prune=False)
+        assert pruned_sel.blocks_pruned > 0
+        assert pruned_sel.accessions == full_sel.accessions
+        assert pruned_sel.instance_counts == full_sel.instance_counts
+        assert pruned_sel.total_bytes == full_sel.total_bytes
+        assert dict(pruned_sel.instance_counts) == brute_force(all_rows, pred)
+
+    def test_statically_false_leaf_prunes_everything(self):
+        rng = np.random.default_rng(3)
+        cat, _ = build_catalog(rng, 4, 40, block_rows=16)
+        sel = cat.select(Eq("manufacturer", "NEVER-INGESTED"))
+        assert sel.total_instances == 0
+        assert sel.blocks_scanned == 0 and sel.blocks_pruned > 0
+
+    def test_not_under_pruning_is_conservative(self):
+        """NOT must disable zone pruning for its subtree: a block whose zone
+        map says 'no CT here' entirely MATCHES Not(Eq(CT))."""
+        cat = StudyCatalog(block_rows=4)
+        rows_ct = [dict(r, modality="CT") for r in random_rows(np.random.default_rng(1), 4)]
+        rows_mr = [dict(r, modality="MR") for r in random_rows(np.random.default_rng(2), 4)]
+        cat.ingest_rows("ACT", rows_ct, etag="a")
+        cat.ingest_rows("AMR", rows_mr, etag="b")
+        sel = cat.select(Not(Eq("modality", "CT")))
+        assert dict(sel.instance_counts) == {"AMR": 4}
+
+    def test_validation_errors(self):
+        cat = StudyCatalog()
+        with pytest.raises(KeyError):
+            cat.select(Eq("no_such_column", 1))
+        with pytest.raises(ValueError):
+            cat.select(Range("modality", 0, 1))  # Range needs an int column
+        with pytest.raises(ValueError):
+            cat.select(Contains("study_date", "2015"))  # Contains needs dict
+        with pytest.raises(ValueError):
+            cat.select(And())
+
+    def test_empty_catalog(self):
+        cat = StudyCatalog()
+        sel = cat.select(Eq("modality", "CT"))
+        assert sel.accessions == () and sel.total_instances == 0
+
+
+class TestTombstones:
+    def test_reingest_replaces_rows(self):
+        gen = StudyGenerator(5)
+        cat = StudyCatalog(block_rows=4)
+        s1 = gen.gen_study("A1", modality="CT", n_images=6)
+        cat.ingest_study("A1", s1, etag="v1")
+        d0 = cat.snapshot_digest()
+        s2 = StudyGenerator(6).gen_study("A1", modality="MR", n_images=2)
+        cat.ingest_study("A1", s2, etag="v2")
+        assert cat.snapshot_digest() != d0
+        assert cat.stats.tombstoned == 6
+        sel = cat.select(Range("study_date", 0, 99999999))
+        assert dict(sel.instance_counts) == {"A1": 2}
+        # the dead CT rows must not resurface even under NOT
+        assert cat.select(Not(Eq("modality", "MR"))).total_instances == 0
+        assert cat.accession_etags() == {"A1": "v2"}
+
+    def test_selection_digest_pins_catalog_state_and_query(self):
+        rng = np.random.default_rng(9)
+        cat, _ = build_catalog(rng, 3, 10)
+        q1, q2 = Eq("modality", "CT"), Eq("modality", "MR")
+        d1 = cat.select(q1).digest
+        assert cat.select(q1).digest == d1          # same state+query -> same
+        assert cat.select(q2).digest != d1          # query in the digest
+        cat.ingest_rows("NEW", random_rows(rng, 3), etag="x")
+        assert cat.select(q1).digest != d1          # catalog state in the digest
+
+
+# ------------------------------------------------------------- bitmap kernel
+class TestBitmapKernel:
+    @pytest.mark.parametrize("seed", range(5))
+    def test_kernel_equals_reference(self, seed):
+        rng = np.random.default_rng(seed)
+        n = int(rng.integers(1, 700))
+        k = int(rng.integers(1, 5))
+        masks = [rng.random(n) < rng.random() for _ in range(k)]
+        valid = rng.random(n) < 0.9
+        leaves = np.stack([pack_mask_np(m) for m in masks + [valid]])
+        # random balanced program over the k real leaves, then the valid AND
+        prog = [("leaf", 0)]
+        for i in range(1, k):
+            prog.append(("leaf", i))
+            if rng.random() < 0.3:
+                prog.append(("not",))
+            prog.append(("and",) if rng.random() < 0.5 else ("or",))
+        prog += [("leaf", k), ("and",)]
+        prog = tuple(prog)
+        bm_ref, cnt_ref = combine_bitmaps_ref(leaves, prog)
+        bm, cnt = combine_bitmaps(leaves, prog)
+        assert np.array_equal(np.asarray(bm), bm_ref)
+        assert cnt == cnt_ref
+
+    def test_pack_parity_and_roundtrip(self):
+        rng = np.random.default_rng(0)
+        for n in (1, 31, 32, 33, 257):
+            mask = rng.random(n) < 0.5
+            packed = pack_mask_np(mask)
+            assert np.array_equal(np.asarray(pack_mask(mask)), packed)
+            assert np.array_equal(unpack_mask_np(packed, n), mask)
+
+    def test_not_cannot_leak_padding_into_count(self):
+        n = 5  # one word, 27 padding bits
+        mask = np.zeros(n, bool)
+        valid = np.ones(n, bool)
+        leaves = np.stack([pack_mask_np(mask), pack_mask_np(valid)])
+        prog = (("leaf", 0), ("not",), ("leaf", 1), ("and",))
+        _, cnt = combine_bitmaps(leaves, prog)
+        assert cnt == n
+
+
+# ----------------------------------------------------- service integration
+def _stack(tmp, source, catalog=None):
+    clock = SimClock()
+    broker = Broker(clock, visibility_timeout=300.0)
+    journal = Journal(Path(tmp) / "j.jsonl")
+    lake = ResultLake(max_bytes=1 << 30)
+    pipeline = DeidPipeline(lake=lake)
+    service = DeidService(
+        broker, source, journal, result_lake=lake, pipeline=pipeline, catalog=catalog
+    )
+    service.register_study("IRB-C", TrustMode.POST_IRB)
+    dest = StudyStore("researcher")
+    pool = WorkerPool(
+        broker,
+        Autoscaler(broker, AutoscalerConfig(), clock),
+        lambda wid: DeidWorker(wid, pipeline, source, dest, journal),
+    )
+    return broker, service, pool
+
+
+def _corpus(n=6, images=2):
+    gen = StudyGenerator(21)
+    source = StudyStore("lake")
+    mrns = {}
+    for i in range(n):
+        acc = f"Q{i:03d}"
+        s = gen.gen_study(acc, n_images=images)
+        source.put_study(acc, s)
+        mrns[acc] = s.mrn
+    return source, mrns
+
+
+class TestSubmitQuery:
+    def test_query_then_deid_end_to_end(self, tmp_path):
+        source, mrns = _corpus()
+        catalog = StudyCatalog()
+        source.attach_catalog(catalog)  # backfills the 6 studies
+        assert catalog.n_rows() == 12
+        broker, service, pool = _stack(tmp_path, source, catalog)
+        query = Range("study_date", 0, 99999999)
+        selection, ticket = service.submit_query("IRB-C", query, mrns)
+        assert ticket.selection_digest == selection.digest
+        assert sorted(ticket.cold) == list(selection.accessions)
+        assert broker.total_published == len(selection.accessions)
+        pool.drain()
+        service.planner.resolve()
+        assert ticket.done() and not ticket.failed
+        # replay: same query is now fully warm — zero publishes
+        pub0 = broker.total_published
+        sel2, t2 = service.submit_query("IRB-C", query, mrns)
+        assert sel2.digest == selection.digest
+        assert not t2.cold and broker.total_published == pub0
+        assert sorted(t2.hits) == list(sel2.accessions)
+
+    def test_submit_query_without_catalog_raises(self, tmp_path):
+        source, mrns = _corpus(2, 1)
+        _, service, _ = _stack(tmp_path, source, catalog=None)
+        with pytest.raises(RuntimeError):
+            service.submit_query("IRB-C", Eq("modality", "CT"), mrns)
+
+    def test_put_study_keeps_catalog_fresh(self):
+        source, _ = _corpus(2, 1)
+        catalog = StudyCatalog()
+        source.attach_catalog(catalog)
+        s = StudyGenerator(77).gen_study("QNEW", modality="CT", n_images=3)
+        source.put_study("QNEW", s)
+        assert "QNEW" in catalog.accessions()
+        assert catalog.accession_etags()["QNEW"] == source.study_etag("QNEW")
+        # re-put replaces rows under the fresh etag
+        s2 = StudyGenerator(78).gen_study("QNEW", modality="MR", n_images=1)
+        source.put_study("QNEW", s2)
+        assert catalog.accession_etags()["QNEW"] == source.study_etag("QNEW")
+        sel = catalog.select(Eq("modality", "MR"))
+        assert dict(sel.instance_counts) == {"QNEW": 1}
+
+
+class TestSubmitDedup:
+    """Satellite: duplicated accessions within one request must neither
+    double-publish nor double-count planner stats (stable first-occurrence
+    order)."""
+
+    def test_submit_cohort_dedupes(self, tmp_path):
+        source, mrns = _corpus(3, 1)
+        broker, service, pool = _stack(tmp_path, source)
+        accs = list(mrns)
+        dup = [accs[0], accs[1], accs[0], accs[2], accs[1], accs[0]]
+        ticket = service.submit_cohort("IRB-C", dup, mrns)
+        assert ticket.cold == accs  # first-occurrence order preserved
+        assert broker.total_published == 3
+        assert service.planner.stats.accessions == 3
+        assert service.planner.stats.published == 3
+        assert service.planner.stats.coalesced == 0
+        pool.drain()
+        service.planner.resolve()
+        assert ticket.done()
+        # one workflow record per unique accession
+        assert len([r for r in service.records if r.research_study == "IRB-C"]) == 3
+
+    def test_submit_dedupes(self, tmp_path):
+        source, mrns = _corpus(3, 1)
+        broker, service, _ = _stack(tmp_path, source)
+        accs = list(mrns)
+        records = service.submit("IRB-C", [accs[0]] * 3 + [accs[1]], mrns)
+        assert [r.accession for r in records] == [accs[0], accs[1]]
+        assert broker.total_published == 2
+
+
+class TestMatchesHelper:
+    """Satellite: shared CS normalization between dataset, filter, catalog."""
+
+    def test_dataset_matches(self):
+        ds = DicomDataset()
+        ds["Modality"] = " ct "
+        ds["BodyPartExamined"] = "CHEST  WALL"
+        assert ds.matches("Modality", "CT")
+        assert ds.matches("Modality", "ct")
+        assert ds.matches("BodyPartExamined", "chest wall")
+        assert not ds.matches("Modality", "MR")
+        assert not ds.matches("StudyDate", "20200101")  # absent tag
+
+    def test_filter_equals_is_case_insensitive(self):
+        from repro.core.filter import FilterStage
+
+        stage = FilterStage('reject Modality equals "RAW"\nreject Modality in "SR,KO"')
+        raw = DicomDataset()
+        raw["Modality"] = "raw"
+        assert not stage(raw).accepted
+        sr = DicomDataset()
+        sr["Modality"] = " sr"
+        assert not stage(sr).accepted
+        ct = DicomDataset()
+        ct["Modality"] = "CT"
+        assert stage(ct).accepted

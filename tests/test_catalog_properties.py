@@ -1,0 +1,152 @@
+"""Property-based tests (hypothesis) for the metadata catalog.
+
+Skips cleanly where hypothesis isn't installed (the seeded-random sweeps in
+test_catalog.py cover the same ground without it): encode/decode round-trips
+through the dictionary, and query-vs-brute-force-scan equivalence across all
+three evaluation paths on randomized catalogs."""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed")
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.catalog import (
+    And,
+    Contains,
+    Eq,
+    In,
+    Not,
+    Or,
+    Range,
+    StudyCatalog,
+    describe,
+    matches_row,
+)
+from repro.catalog.columns import Dictionary
+from repro.dicom.dataset import normalize_cs
+from repro.kernels.bitmap.ops import combine_bitmaps
+from repro.kernels.bitmap.ref import combine_bitmaps_ref, pack_mask_np, unpack_mask_np
+
+_settings = settings(
+    max_examples=25, deadline=None, suppress_health_check=[HealthCheck.too_slow]
+)
+
+_MODALITIES = ["CT", "MR", "DX", "US"]
+_PARTS = ["CHEST", "HEAD", "ABDOMEN", ""]
+
+row_st = st.fixed_dictionaries(
+    {
+        "modality": st.sampled_from(_MODALITIES),
+        "body_part": st.sampled_from(_PARTS),
+        "manufacturer": st.sampled_from(["GE Medical", "Siemens", "Philips"]),
+        "model": st.sampled_from(["Optima CT660", "MAGNETOM Aera", "Epiq 7"]),
+        "study_date": st.integers(20150101, 20191231),
+        "bits_stored": st.sampled_from([8, 12, 16]),
+        "rows": st.sampled_from([256, 512]),
+        "cols": st.sampled_from([256, 512]),
+        "nbytes": st.integers(100, 10**6),
+        "burned_in": st.integers(0, 1),
+    }
+)
+
+leaf_st = st.one_of(
+    st.builds(Eq, st.just("modality"), st.sampled_from(_MODALITIES + ["XX"])),
+    st.builds(Eq, st.just("body_part"), st.sampled_from(_PARTS)),
+    st.builds(
+        In,
+        st.just("modality"),
+        st.lists(st.sampled_from(_MODALITIES), min_size=1, max_size=3).map(tuple),
+    ),
+    st.builds(
+        Range,
+        st.just("study_date"),
+        st.integers(20150101, 20181231),
+        st.integers(20160101, 20191231),
+    ),
+    st.builds(Contains, st.just("model"), st.sampled_from(["ct", "MAG", "7", "zzz"])),
+    st.builds(Eq, st.just("burned_in"), st.integers(0, 1)),
+)
+
+pred_st = st.recursive(
+    leaf_st,
+    lambda children: st.one_of(
+        st.builds(lambda a, b: And(a, b), children, children),
+        st.builds(lambda a, b: Or(a, b), children, children),
+        st.builds(Not, children),
+    ),
+    max_leaves=6,
+)
+
+
+class TestDictionaryProperties:
+    @given(values=st.lists(st.text(min_size=1, max_size=12), min_size=1, max_size=30))
+    @_settings
+    def test_encode_decode_roundtrip(self, values):
+        d = Dictionary()
+        for v in values:
+            code = d.encode(v)
+            assert d.decode(code) == normalize_cs(v)
+            assert d.code_of(v) == code
+        # codes are dense and stable
+        assert sorted(d.codes.values()) == list(range(len(d)))
+
+
+class TestQueryEquivalenceProperties:
+    @given(
+        rows=st.lists(row_st, min_size=1, max_size=60),
+        pred=pred_st,
+        block_rows=st.sampled_from([4, 16, 512]),
+    )
+    @_settings
+    def test_all_paths_agree(self, rows, pred, block_rows):
+        """Vectorized jnp+Pallas == numpy oracle == python brute force, with
+        and without zone-map pruning, on arbitrary catalogs."""
+        cat = StudyCatalog(block_rows=block_rows)
+        per_acc = {}
+        for i in range(0, len(rows), 10):
+            acc = f"H{i:03d}"
+            per_acc[acc] = rows[i : i + 10]
+            cat.ingest_rows(acc, per_acc[acc], etag=str(i))
+        mv, _, _ = cat.match_mask(pred, mode="auto", prune=False)
+        mo, _, _ = cat.match_mask(pred, mode="oracle", prune=False)
+        assert np.array_equal(mv, mo), describe(pred)
+        sel_pruned = cat.select(pred, mode="auto", prune=True)
+        sel_full = cat.select(pred, mode="oracle", prune=False)
+        assert sel_pruned.accessions == sel_full.accessions
+        assert sel_pruned.instance_counts == sel_full.instance_counts
+        assert sel_pruned.total_bytes == sel_full.total_bytes
+        expected = {
+            acc: n
+            for acc, n in (
+                (a, sum(1 for r in rs if matches_row(pred, r)))
+                for a, rs in per_acc.items()
+            )
+            if n
+        }
+        assert dict(sel_pruned.instance_counts) == expected, describe(pred)
+
+
+class TestBitmapKernelProperties:
+    @given(
+        n=st.integers(1, 400),
+        k=st.integers(1, 4),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    @_settings
+    def test_kernel_equals_reference(self, n, k, seed):
+        rng = np.random.default_rng(seed)
+        masks = [rng.random(n) < rng.random() for _ in range(k)]
+        valid = rng.random(n) < 0.9
+        leaves = np.stack([pack_mask_np(m) for m in masks + [valid]])
+        prog = [("leaf", 0)]
+        for i in range(1, k):
+            prog.append(("leaf", i))
+            if rng.random() < 0.3:
+                prog.append(("not",))
+            prog.append(("and",) if rng.random() < 0.5 else ("or",))
+        prog = tuple(prog) + (("leaf", k), ("and",))
+        bm_ref, cnt_ref = combine_bitmaps_ref(leaves, prog)
+        bm, cnt = combine_bitmaps(leaves, prog)
+        assert np.array_equal(np.asarray(bm), bm_ref)
+        assert cnt == cnt_ref
+        assert cnt == int(unpack_mask_np(bm_ref, n).sum())

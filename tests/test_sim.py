@@ -12,6 +12,7 @@ import pickle
 
 import pytest
 
+from repro.catalog import Eq, Range
 from repro.core.pipeline import build_request
 from repro.sim import (
     AutoscalerAccounting,
@@ -27,6 +28,9 @@ from repro.sim import (
     LakeConsistency,
     NoWedgedSubscribers,
     PhiBoundary,
+    QueryArrival,
+    QueryConsistency,
+    QueryMix,
     ReplayStorm,
     WarmReplayIdentity,
 )
@@ -92,6 +96,91 @@ class TestTrafficModels:
         for storm in arrivals[1:]:
             warm = sum(1 for a in storm.accessions if a in base)
             assert warm / len(storm.accessions) >= 0.8
+
+    def test_query_mix_is_deterministic_and_sorted(self):
+        corpus = [f"A{i}" for i in range(10)]
+        s1 = QueryMix(n_queries=8).schedule(corpus, 42)
+        s2 = QueryMix(n_queries=8).schedule(corpus, 42)
+        assert s1 == s2  # predicates are frozen data, comparable wholesale
+        assert [a.t for a in s1] == sorted(a.t for a in s1)
+        assert s1 != QueryMix(n_queries=8).schedule(corpus, 43)
+
+    def test_query_mix_selectivity_knobs(self):
+        corpus = [f"A{i}" for i in range(4)]
+        only_modality = QueryMix(
+            n_queries=6, broad_fraction=0, year_fraction=0,
+            and_fraction=0, negate_fraction=0, modality_fraction=1.0,
+        ).schedule(corpus, 7)
+        assert all(isinstance(a.query, Eq) for a in only_modality)
+        only_broad = QueryMix(
+            n_queries=4, broad_fraction=1.0, modality_fraction=0,
+            year_fraction=0, and_fraction=0, negate_fraction=0,
+        ).schedule(corpus, 7)
+        assert all(isinstance(a.query, Range) for a in only_broad)
+
+
+# ------------------------------------------------------------- query traffic
+class TestQueryDrivenRuns:
+    def test_query_sim_passes_all_invariants(self, tmp_path):
+        corpus = [f"SIM{i:04d}" for i in range(6)]
+        traffic = QueryMix(n_queries=5).schedule(corpus, seed=11)
+        sim = _tiny(
+            tmp_path, "qsim", seed=11, n_studies=6, traffic=traffic,
+            modality=None,  # mixed modalities make the queries selective
+            delivery_window=3600.0,
+        )
+        report = sim.run()
+        assert report.ok(), [v.detail for v in report.violations]
+        assert report.metrics["queries"] == 5
+        assert len(sim.query_log) == 5
+        assert sim.log.by_kind("query")  # admissions recorded in the log
+
+    def test_query_sim_is_replayable(self, tmp_path):
+        corpus = [f"SIM{i:04d}" for i in range(5)]
+        traffic = QueryMix(n_queries=4).schedule(corpus, seed=3)
+
+        def run(name):
+            return _tiny(
+                tmp_path, name, seed=3, n_studies=5, traffic=traffic,
+                modality=None, delivery_window=3600.0,
+            ).run()
+
+        r1, r2 = run("qa"), run("qb")
+        assert r1.log_digest == r2.log_digest
+        assert r1.metrics == r2.metrics
+
+    def test_mixed_query_and_cohort_traffic(self, tmp_path):
+        corpus = [f"SIM{i:04d}" for i in range(4)]
+        traffic = [
+            CohortArrival(t=0.0, study_id="IRB-T", accessions=tuple(corpus[:2])),
+            QueryArrival(t=60.0, study_id="IRB-T",
+                         query=Range("study_date", 0, 99999999)),
+        ]
+        sim = _tiny(
+            tmp_path, "mixed", n_studies=4, traffic=traffic,
+            delivery_window=3600.0,
+        )
+        report = sim.run()
+        assert report.ok(), [v.detail for v in report.violations]
+        # the query saw the whole corpus; the two already-submitted
+        # accessions ride the single-flight/journal path, never re-published
+        _, qticket = sim.tickets[-1]
+        assert len(qticket.hits) + len(qticket.coalesced) + len(qticket.cold) == 4
+        assert qticket.selection_digest
+
+    def test_reingest_chaos_keeps_query_consistency(self, tmp_path):
+        corpus = [f"SIM{i:04d}" for i in range(4)]
+        traffic = QueryMix(n_queries=4, mean_gap=120.0).schedule(corpus, seed=5)
+        chaos = ChaosSchedule(
+            [ChaosEvent(t=100.0, kind="reingest",
+                        payload={"accession": "SIM0001"})]
+        )
+        sim = _tiny(
+            tmp_path, "qreing", seed=5, n_studies=4, traffic=traffic,
+            chaos=chaos, modality=None, delivery_window=3600.0,
+        )
+        report = sim.run()
+        assert report.ok(), [v.detail for v in report.violations]
 
 
 # --------------------------------------------------------------------- chaos
@@ -262,6 +351,34 @@ class TestCheckersCatchInjectedViolations:
         sim.journal._fh.flush()
         assert any(
             "PHANTOM" in v.detail for v in JournalDurability().check(sim)
+        )
+
+    def test_query_consistency_catches_tampered_selection(self, tmp_path):
+        from dataclasses import replace
+
+        corpus = [f"SIM{i:04d}" for i in range(4)]
+        traffic = QueryMix(n_queries=3).schedule(corpus, seed=9)
+        sim = _tiny(
+            tmp_path, "neg_query", seed=9, n_studies=4, traffic=traffic,
+            modality=None, delivery_window=3600.0,
+        )
+        assert sim.run().ok()
+        qi = next(
+            i for i, (_, sel, _) in enumerate(sim.query_log) if sel.accessions
+        )
+        arr, sel, snap = sim.query_log[qi]
+        # drop one matched accession: the served selection no longer equals
+        # the brute-force scan
+        tampered = replace(
+            sel,
+            accessions=sel.accessions[1:],
+            instance_counts={
+                a: sel.instance_counts[a] for a in sel.accessions[1:]
+            },
+        )
+        sim.query_log[qi] = (arr, tampered, snap)
+        assert any(
+            "brute-force" in v.detail for v in QueryConsistency().check(sim)
         )
 
 
