@@ -70,6 +70,7 @@ def _scan_catalog():
                     "cols": 512,
                     "nbytes": int(rng.integers(10_000, 600_000)),
                     "burned_in": int(rng.random() < 0.1),
+                    "burned_in_detected": int(rng.random() < 0.08),
                 }
             )
             i += 1

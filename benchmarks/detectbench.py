@@ -1,0 +1,194 @@
+"""Text-band detector throughput + unknown-device cohort end-to-end cost
+(DESIGN.md §9).
+
+Two sections, both written to ``BENCH_detect.json`` (uploaded by CI next to
+the other BENCH artifacts):
+
+* **kernel** — a synthetic uint16 batch with seeded glyph bands, profiled
+  through the numpy oracle (``ref.row_hits_np``, the host fast path) and the
+  Pallas kernel (``ops.row_hit_profile``; interpret mode on CPU — a
+  correctness stand-in, so the "speedup" column is honest about being < 1
+  off-accelerator). Wall-clock is min-of-interleaved-reps; the deterministic
+  signal is that both paths emit bit-identical profiles (asserted).
+* **e2e** — the unknown-device story at small scale: a corpus where half the
+  studies come from novel (manufacturer, model) variants, served through
+  ``DeidService -> CohortPlanner -> WorkerPool`` with a registry-first
+  policy. Reports detector scans/detections, unknown lookups, wall time,
+  then the cache-identity behavior: a warm resubmit under the same policy
+  (all hits) and a resubmit after a policy edit (all cold — the fingerprint
+  forced a cold serve).
+"""
+from __future__ import annotations
+
+import json
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+KERNEL_BATCH = 4
+KERNEL_SHAPE = (512, 512)
+REPS = 3
+E2E_STUDIES = 8
+E2E_IMAGES = 2
+STUDY_ID = "IRB-DETBENCH"
+
+
+def run_kernel() -> list[dict]:
+    from repro.kernels.textdetect import ops, ref
+
+    rng = np.random.default_rng(97)
+    H, W = KERNEL_SHAPE
+    imgs = (rng.random((KERNEL_BATCH, H, W)) * 2000).astype(np.uint16)
+    imgs[:, 10:40, ::3] = 4095   # seeded banner
+    imgs[:, 400:420, ::3] = 4095
+    thresh = 4095 * 0.6
+
+    # parity before timing: the two paths must agree bit for bit
+    hits_o = ref.row_hits_np(imgs, thresh, (32, 128))
+    hits_k = ops.row_hit_profile(imgs, thresh=thresh, tile=(32, 128))
+    assert np.array_equal(hits_o, hits_k)
+
+    walls = {"oracle": [], "pallas": []}
+    for rep in range(REPS + 1):  # rep 0 warms jit caches, not timed
+        t0 = time.perf_counter()
+        ref.row_hits_np(imgs, thresh, (32, 128))
+        t1 = time.perf_counter()
+        ops.row_hit_profile(imgs, thresh=thresh, tile=(32, 128))
+        t2 = time.perf_counter()
+        if rep:
+            walls["oracle"].append(t1 - t0)
+            walls["pallas"].append(t2 - t1)
+    wo, wp = min(walls["oracle"]), min(walls["pallas"])
+    n_rows = KERNEL_BATCH * H
+    import jax
+
+    return [
+        {
+            "batch": KERNEL_BATCH,
+            "shape": list(KERNEL_SHAPE),
+            "backend": jax.default_backend(),
+            "oracle_wall_s": wo,
+            "oracle_rows_per_s": n_rows / wo,
+            "pallas_wall_s": wp,
+            "pallas_rows_per_s": n_rows / wp,
+            # > 1 on accelerators; < 1 on CPU where Pallas runs interpreted
+            "pallas_speedup": wo / wp,
+        }
+    ]
+
+
+def run_e2e() -> dict:
+    from repro.core import DeidPipeline, TrustMode
+    from repro.detect import DetectorPolicy
+    from repro.dicom.generator import StudyGenerator
+    from repro.lake import ResultLake
+    from repro.queueing import (
+        Autoscaler, AutoscalerConfig, Broker, DeidWorker, Journal, WorkerPool,
+    )
+    from repro.queueing.server import DeidService
+    from repro.storage.object_store import StudyStore
+    from repro.utils.timing import SimClock
+
+    gen = StudyGenerator(4242)
+    source = StudyStore("lake")
+    mrns = {}
+    unknown = 0
+    for i in range(E2E_STUDIES):
+        acc = f"DB{i:03d}"
+        dev = gen.unknown_device(acc, "CT") if i % 2 == 0 else None
+        unknown += dev is not None
+        s = gen.gen_study(acc, modality="CT", n_images=E2E_IMAGES, device=dev)
+        source.put_study(acc, s)
+        mrns[acc] = s.mrn
+    lake = ResultLake(max_bytes=1 << 30)
+
+    def deployment(tag: str, policy: DetectorPolicy, td: str):
+        clock = SimClock()
+        broker = Broker(clock, visibility_timeout=300.0)
+        journal = Journal(Path(td) / f"{tag}.jsonl")
+        pipeline = DeidPipeline(recompress=False, lake=lake, detector_policy=policy)
+        service = DeidService(
+            broker, source, journal, result_lake=lake, pipeline=pipeline
+        )
+        service.register_study(STUDY_ID, TrustMode.POST_IRB)
+        dest = StudyStore("researcher")
+        pool = WorkerPool(
+            broker,
+            Autoscaler(broker, AutoscalerConfig(), clock),
+            lambda wid: DeidWorker(wid, pipeline, source, dest, journal),
+        )
+        return service, pool, pipeline
+
+    with tempfile.TemporaryDirectory() as td:
+        service, pool, pipeline = deployment("cold", DetectorPolicy(), td)
+        t0 = time.perf_counter()
+        ticket = service.submit_cohort(STUDY_ID, list(mrns), mrns)
+        pool.drain()
+        service.planner.resolve()
+        cold_wall = time.perf_counter() - t0
+        assert ticket.done() and not ticket.failed
+        st = pipeline.scrub.detect_stats
+        ex = pipeline.executor.stats
+
+        warm = service.submit_cohort(STUDY_ID, list(mrns), mrns)
+        assert not warm.cold
+
+        edited, pool2, _ = deployment(
+            "edited", DetectorPolicy(row_frac=0.05), td
+        )
+        after = edited.submit_cohort(STUDY_ID, list(mrns), mrns)
+        pool2.drain()
+        edited.planner.resolve()
+
+        return {
+            "studies": E2E_STUDIES,
+            "images_per_study": E2E_IMAGES,
+            "unknown_device_studies": unknown,
+            "cold_wall_s": cold_wall,
+            "cold_published": len(ticket.cold),
+            "unknown_lookups": st.unknown_lookups,
+            "detector_runs": st.detector_runs,
+            "detector_detected": st.detected,
+            "detect_dispatches": ex.detect_dispatches,
+            "warm_hits_same_policy": len(warm.hits),
+            "cold_after_policy_change": len(after.cold),
+            "warm_hits_after_policy_change": len(after.hits),
+        }
+
+
+def main(json_path: str | None = "BENCH_detect.json") -> list[str]:
+    kernel = run_kernel()
+    e2e = run_e2e()
+    lines = []
+    for r in kernel:
+        lines.append(
+            f"detect_kernel,{r['pallas_wall_s']*1e6:.0f},"
+            f"oracle_rows_s={r['oracle_rows_per_s']:.0f};"
+            f"pallas_rows_s={r['pallas_rows_per_s']:.0f};"
+            f"speedup={r['pallas_speedup']:.3f};backend={r['backend']}"
+        )
+    lines.append(
+        f"detect_e2e_cold,{e2e['cold_wall_s']*1e6:.0f},"
+        f"unknown={e2e['unknown_device_studies']};"
+        f"runs={e2e['detector_runs']};detected={e2e['detector_detected']}"
+    )
+    lines.append(
+        "detect_e2e_policy_change,0,"
+        f"warm_same={e2e['warm_hits_same_policy']};"
+        f"cold_after_edit={e2e['cold_after_policy_change']}"
+    )
+    if json_path:
+        payload = {
+            "source": "benchmarks/detectbench.py",
+            "kernel": kernel,
+            "e2e": e2e,
+        }
+        Path(json_path).write_text(json.dumps(payload, indent=2) + "\n")
+    return lines
+
+
+if __name__ == "__main__":
+    for line in main():
+        print(line)

@@ -11,6 +11,7 @@ def main() -> None:
         autoscale,
         catalogbench,
         cohortbench,
+        detectbench,
         fleetbench,
         kernelbench,
         roofline,
@@ -23,6 +24,7 @@ def main() -> None:
         ("table2_rules", table2_rules.main),
         ("cohortbench", cohortbench.main),
         ("catalogbench", catalogbench.main),
+        ("detectbench", detectbench.main),
         ("fleetbench", fleetbench.main),
         ("autoscale", autoscale.main),
         ("kernelbench", kernelbench.main),

@@ -13,6 +13,7 @@ import json
 from pathlib import Path
 
 from repro.core import DeidPipeline, TrustMode
+from repro.detect import DetectorPolicy
 from repro.dicom.generator import StudyGenerator
 from repro.distributed import ScrubFarm
 from repro.kernels.scrub import ops as scrub_ops
@@ -60,7 +61,10 @@ def main() -> None:
     Path(args.journal).unlink(missing_ok=True)
     journal = Journal(args.journal)
     result_lake = ResultLake(max_bytes=1 << 30)  # de-id result cache (§6)
-    pipeline = DeidPipeline(blank_fn=scrub_ops.blank_fn, lake=result_lake)
+    policy = DetectorPolicy()  # registry-first burned-in-text fallback (§9)
+    pipeline = DeidPipeline(
+        blank_fn=scrub_ops.blank_fn, lake=result_lake, detector_policy=policy
+    )
     service = DeidService(broker, lake, journal, result_lake=result_lake, pipeline=pipeline)
     service.register_study("IRB-70007", TrustMode.POST_IRB)
     service.mark_ineligible("ACC00003")  # research opt-out
@@ -161,6 +165,68 @@ def main() -> None:
           f"selection digest {qticket.selection_digest[:16]}")
     # everything CT was de-identified above -> the query serves fully warm
     assert not qticket.cold and broker.total_published == pub0
+
+    # ------------------- unknown-device cohort (the §9 detector-fallback flow)
+    # novel (manufacturer, model) variants have no scrub rule: the registry
+    # miss is counted, the text-band detector proposes bands, and the blanked
+    # cohort is served — then a policy edit structurally invalidates it all
+    n_unknown = max(args.studies // 8, 2)
+    unknown_cohort = []
+    for i in range(n_unknown):
+        acc = f"ACCU{i:04d}"
+        s = gen.gen_study(acc, n_images=args.images_per_study,
+                          device=gen.unknown_device(acc, "CT"))
+        lake.put_study(acc, s)
+        mrns[acc] = s.mrn
+        unknown_cohort.append(acc)
+    uticket = service.submit_cohort("IRB-70007", unknown_cohort, mrns)
+    pool4 = WorkerPool(
+        broker,
+        Autoscaler(broker, AutoscalerConfig(delivery_window=1800), clock),
+        make_worker,
+    )
+    pool4.drain()
+    service.planner.resolve()
+    st = pipeline.scrub.detect_stats
+    print(f"\nunknown devices: {len(uticket.cold)} cold studies from novel "
+          f"(make, model) variants; {st.unknown_lookups} registry misses "
+          f"counted, {st.detector_runs} detector scans, "
+          f"{st.detected} with text bands blanked")
+    assert uticket.done() and not uticket.failed and st.detected > 0
+    replay = service.submit_cohort("IRB-70007", unknown_cohort, mrns)
+    assert not replay.cold, "same policy must serve the cohort warm"
+
+    # a policy edit (stricter row threshold) changes the ruleset fingerprint:
+    # every cached result minted under the old detector is structurally
+    # invalid. The journal is deliberately ruleset-agnostic (it records
+    # exactly-once *delivery*), so the edit rolls out as a redeploy — fresh
+    # journal and broker against the same source lake and result lake — and
+    # the very same cohort that just served warm now serves cold.
+    edited = DeidPipeline(
+        blank_fn=scrub_ops.blank_fn, lake=result_lake,
+        detector_policy=DetectorPolicy(row_frac=0.05),
+    )
+    broker2 = Broker(clock, visibility_timeout=120)
+    journal2_path = args.journal + ".edited"
+    Path(journal2_path).unlink(missing_ok=True)
+    journal2 = Journal(journal2_path)
+    service2 = DeidService(
+        broker2, lake, journal2, result_lake=result_lake, pipeline=edited
+    )
+    service2.register_study("IRB-70007", TrustMode.POST_IRB)
+    recold = service2.submit_cohort("IRB-70007", unknown_cohort, mrns)
+    print(f"policy edit:  fingerprint {pipeline.ruleset_fingerprint().digest[:12]} "
+          f"-> {edited.ruleset_fingerprint().digest[:12]}; "
+          f"{len(replay.hits)} warm before, {len(recold.cold)} cold after redeploy")
+    assert len(recold.cold) == len(unknown_cohort) and not recold.hits
+    pool5 = WorkerPool(
+        broker2,
+        Autoscaler(broker2, AutoscalerConfig(delivery_window=1800), clock),
+        lambda wid: DeidWorker(wid, edited, lake, dest, journal2),
+    )
+    pool5.drain()
+    service2.planner.resolve()
+    assert recold.done() and not recold.failed
 
 
 if __name__ == "__main__":

@@ -113,11 +113,14 @@ class StudyCatalog:
             self._acc_codes[accession] = code
             self._acc_values.append(accession)
         for row in rows:
+            # missing columns default to ""/0 (schema growth: row dicts built
+            # before a column existed stay ingestable; matches_row mirrors
+            # the same defaults, so oracle and vectorized paths agree)
             for col in COLUMNS:
                 if col in DICT_COLUMNS:
-                    self._open[col].append(self.dicts[col].encode(row[col]))
+                    self._open[col].append(self.dicts[col].encode(row.get(col, "")))
                 else:
-                    self._open[col].append(int(row[col]))
+                    self._open[col].append(int(row.get(col, 0)))
             self._open_acc.append(code)
             self._open_valid.append(True)
             if len(self._open_acc) >= self.block_rows:

@@ -34,6 +34,11 @@ COLUMN_KINDS: Dict[str, str] = {
     "cols": "int",
     "nbytes": "int",
     "burned_in": "int",
+    # detector-oracle verdict over the *source* pixels at ingest: 1 when the
+    # text-band detector (default policy knobs) proposes at least one band.
+    # Complements the self-declared BurnedInAnnotation tag — devices lie
+    # about burn-in far more often than pixels do (DESIGN.md §9).
+    "burned_in_detected": "int",
 }
 COLUMNS: Tuple[str, ...] = tuple(COLUMN_KINDS)
 DICT_COLUMNS: Tuple[str, ...] = tuple(c for c, k in COLUMN_KINDS.items() if k == "dict")
@@ -43,6 +48,19 @@ def date_int(value: Any) -> int:
     """DICOM DA string -> yyyymmdd integer (0 when absent/malformed)."""
     digits = "".join(ch for ch in str(value) if ch.isdigit())
     return int(digits[:8]) if digits else 0
+
+
+def burned_in_detected(ds: DicomDataset) -> int:
+    """Detector-oracle verdict for one instance's pixels (0 for pixel-less
+    or multi-plane objects). Pure numpy at scan time; imports are lazy so the
+    catalog module itself stays jax-free."""
+    pix = ds.pixels
+    if pix is None or getattr(pix, "ndim", 0) != 2:
+        return 0
+    from repro.detect import DetectorPolicy, detect_bands_for
+
+    bands, _ = detect_bands_for(ds, DetectorPolicy())
+    return int(bool(bands))
 
 
 def row_from_dataset(ds: DicomDataset) -> Dict[str, Any]:
@@ -62,6 +80,7 @@ def row_from_dataset(ds: DicomDataset) -> Dict[str, Any]:
         "cols": int(res[1]),
         "nbytes": int(ds.nbytes()),
         "burned_in": int(normalize_cs(ds.get("BurnedInAnnotation", "")) == "YES"),
+        "burned_in_detected": burned_in_detected(ds),
     }
 
 

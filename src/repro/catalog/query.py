@@ -116,19 +116,20 @@ def describe(pred: Predicate) -> str:
 # ----------------------------------------------------------- row-level oracle
 def matches_row(pred: Predicate, row: Dict[str, Any]) -> bool:
     """Ground truth for one raw row dict (`columns.row_from_dataset` output).
-    Pure python semantics — no dictionaries, no vectorization."""
+    Pure python semantics — no dictionaries, no vectorization. Missing
+    columns read as ""/0, the same defaults ``ingest_rows`` encodes."""
     if isinstance(pred, Eq):
         if COLUMN_KINDS[pred.col] == "dict":
-            return normalize_cs(row[pred.col]) == normalize_cs(pred.value)
-        return int(row[pred.col]) == int(pred.value)
+            return normalize_cs(row.get(pred.col, "")) == normalize_cs(pred.value)
+        return int(row.get(pred.col, 0)) == int(pred.value)
     if isinstance(pred, In):
         return any(matches_row(Eq(pred.col, v), row) for v in pred.values)
     if isinstance(pred, Range):
         _require_int(pred.col, "Range")
-        return int(pred.lo) <= int(row[pred.col]) <= int(pred.hi)
+        return int(pred.lo) <= int(row.get(pred.col, 0)) <= int(pred.hi)
     if isinstance(pred, Contains):
         _require_dict(pred.col, "Contains")
-        return normalize_cs(pred.needle) in normalize_cs(row[pred.col])
+        return normalize_cs(pred.needle) in normalize_cs(row.get(pred.col, ""))
     if isinstance(pred, And):
         return all(matches_row(p, row) for p in pred.preds)
     if isinstance(pred, Or):

@@ -67,6 +67,8 @@ class ExecutorStats:
     dispatches: int = 0       # device calls issued
     buckets: int = 0          # bucket keys seen across all runs
     padded_shapes: Set[tuple] = field(default_factory=set)  # jit-cache keys
+    detect_instances: int = 0  # instances scanned by the text-band detector
+    detect_dispatches: int = 0  # detector device calls issued
 
 
 class BatchedDeidExecutor:
@@ -185,6 +187,54 @@ class BatchedDeidExecutor:
                 pixels = items[i][0]
                 pixels[...] = scrubbed[j]
                 out[i] = BatchOutput(pixels=pixels)
+
+    # ------------------------------------------------------------- detection
+    def detect_row_hits(
+        self,
+        entries: Sequence[Tuple[np.ndarray, float]],
+        *,
+        tile: Tuple[int, int] = (32, 128),
+    ) -> List[np.ndarray]:
+        """Batched text-band profile pass for the burned-in-PHI detector.
+
+        entries: per instance (2D pixels, binarization threshold). Instances
+        are bucketed by (H, W, dtype, threshold) — the detector rides the
+        same shape-uniform dispatch discipline as the scrub kernel — and each
+        chunk is one ``kernels/textdetect`` call (Pallas on accelerators, the
+        bit-identical numpy oracle on CPU). Returns per-instance (H,) int32
+        row glyph-hit profiles aligned with ``entries``.
+        """
+        use_kernel = self._resolve_use_kernel()
+        out: List[Optional[np.ndarray]] = [None] * len(entries)
+        buckets: Dict[tuple, List[int]] = defaultdict(list)
+        for i, (pixels, thresh) in enumerate(entries):
+            buckets[(pixels.shape[0], pixels.shape[1], pixels.dtype.name, float(thresh))].append(i)
+        for (H, W, dtype_name, thresh), idxs in buckets.items():
+            for c0 in range(0, len(idxs), self.max_batch):
+                chunk = idxs[c0 : c0 + self.max_batch]
+                self.stats.detect_dispatches += 1
+                self.stats.detect_instances += len(chunk)
+                if use_kernel:
+                    from repro.kernels.textdetect.ops import row_hit_profile
+
+                    # pad the batch dim like the fused path: the jit cache
+                    # only ever sees a small closed set of padded shapes
+                    n_pad = _pow2_at_least(len(chunk), self.max_batch)
+                    stack = np.zeros((n_pad, H, W), np.dtype(dtype_name))
+                    for j, i in enumerate(chunk):
+                        stack[j] = entries[i][0]
+                    self.stats.padded_shapes.add((n_pad, H, W, dtype_name, "detect"))
+                    hits = row_hit_profile(
+                        stack, thresh=thresh, tile=tile, interpret=self.interpret
+                    )
+                else:
+                    stack = np.stack([entries[i][0] for i in chunk])
+                    from repro.kernels.textdetect.ref import row_hits_np
+
+                    hits = row_hits_np(stack, thresh, tile)
+                for j, i in enumerate(chunk):
+                    out[i] = hits[j]
+        return out  # every index was bucketed exactly once
 
     def _run_host_chunk(self, items, chunk, H, W, sv, recompress, out) -> None:
         """CPU fallback: same bucket walk, numpy blank + codec residuals."""

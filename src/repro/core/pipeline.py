@@ -87,6 +87,7 @@ class DeidPipeline:
         recompress: bool = True,
         batched: bool = True,
         lake: Optional["ResultLake"] = None,
+        detector_policy=None,
     ) -> None:
         self.filter = FilterStage(filter_script or default_scripts.DEFAULT_FILTER_SCRIPT)
         self.anonymizer = AnonymizerStage(
@@ -96,6 +97,7 @@ class DeidPipeline:
         self.scrub = ScrubStage(
             scrub_script or default_scripts.DEFAULT_SCRUB_SCRIPT,
             recompress=recompress,
+            policy=detector_policy,
             **scrub_kwargs,
         )
         # shape-bucketed batch dispatch over each study's instances; the
@@ -124,7 +126,18 @@ class DeidPipeline:
                 f"recompress={self.scrub.recompress}|sv={self.scrub.sv}|"
                 f"blank={callable_identity(self.scrub.blank_fn)}"
             )
-            self._fingerprint = RulesetFingerprint.of(self.script_shas, config=config)
+            # detector version + policy knobs: editing either must force a
+            # cold serve (DESIGN.md §9) — "" preserves pre-detector keys for
+            # pipelines with no policy attached AND for mode="off" (whose
+            # delivered bytes are byte-identical to the legacy path, tested)
+            detector = (
+                self.scrub.policy.fingerprint_identity
+                if self.scrub.policy is not None
+                else ""
+            )
+            self._fingerprint = RulesetFingerprint.of(
+                self.script_shas, config=config, detector=detector
+            )
         return self._fingerprint
 
     # ------------------------------------------------------------- instances

@@ -1,0 +1,32 @@
+"""Burned-in pixel-PHI detection subsystem (DESIGN.md §9).
+
+Registry-fallback text-band detection: ``kernels/textdetect`` reduces pixels
+to projection profiles (Pallas on accelerators, bit-identical numpy oracle on
+hosts), ``regions`` turns profiles into full-width blank rectangles,
+``policy`` decides when the detector runs (registry-first / union / off) and
+versions the behavior into the ruleset fingerprint, ``report`` carries the
+per-instance audit trail.
+"""
+from repro.detect.policy import DETECTOR_VERSION, DetectorPolicy
+from repro.detect.regions import (
+    bands_from_hits,
+    detect_bands_for,
+    detect_bands_np,
+    merge_rects,
+    policy_thresh,
+    rects_from_bands,
+)
+from repro.detect.report import DetectionReport, DetectStats
+
+__all__ = [
+    "DETECTOR_VERSION",
+    "DetectorPolicy",
+    "DetectionReport",
+    "DetectStats",
+    "bands_from_hits",
+    "detect_bands_for",
+    "detect_bands_np",
+    "merge_rects",
+    "policy_thresh",
+    "rects_from_bands",
+]

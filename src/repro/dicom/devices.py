@@ -148,6 +148,23 @@ class DeviceRegistry:
             for v in variants:
                 self._us_index[v.id()] = v
         self._fixed: Dict[str, DeviceKey] = {d.id(): d for d in FIXED_DEVICES}
+        # unknown (manufacturer, model) lookups: counted and surfaced as a
+        # worker/fleet metric — an unknown device is a PHI-coverage gap the
+        # detector must absorb, never a silent pass-through
+        self.unknown_lookups: Dict[Tuple[str, str], int] = {}
+
+    # -- membership ----------------------------------------------------------
+    def known(self, key: DeviceKey) -> bool:
+        """Is this (modality, make, model, resolution) variant registered?"""
+        return key.id() in self._fixed or key.id() in self._us_index
+
+    def note_unknown(self, key: DeviceKey) -> None:
+        """Record an unknown-device lookup (scrub-script miss)."""
+        mk = (key.make, key.model)
+        self.unknown_lookups[mk] = self.unknown_lookups.get(mk, 0) + 1
+
+    def unknown_lookup_total(self) -> int:
+        return sum(self.unknown_lookups.values())
 
     # -- scrub geometry ------------------------------------------------------
     def scrub_rects(self, key: DeviceKey) -> List[Rect]:

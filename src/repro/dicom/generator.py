@@ -82,6 +82,39 @@ class StudyGenerator:
         cands = [d for d in FIXED_DEVICES if d.modality == modality]
         return cands[int(rng.integers(len(cands)))]
 
+    # resolutions novel (manufacturer, model) variants show up with — modest
+    # sizes (sim corpora carry many of these), deliberately not tile-aligned
+    # so the detector's padding path is exercised end to end
+    _UNKNOWN_RES = {
+        "CT": (320, 512), "MR": (288, 320), "PT": (320, 512),
+        "DX": (520, 648), "CR": (520, 648),
+    }
+
+    def unknown_device(self, salt: str, modality: Optional[str] = None) -> DeviceKey:
+        """A device variant *outside* the registry (novel manufacturer/model).
+
+        The registry still synthesizes burn-in geometry for it (``scrub_rects``
+        is hash-derived for any key), so :meth:`gen_study` burns PHI text into
+        deterministic regions — but the scrub script has no rule for the
+        variant, which is exactly the coverage gap the detector subsystem
+        exists to close. US is excluded: unknown ultrasound is whitelist-
+        rejected upstream, never detector-scrubbed (paper Table 2).
+        """
+        rng = self._rng("unknown-device", salt)
+        if modality is None or modality == "US":
+            mods = sorted(self._UNKNOWN_RES)
+            modality = mods[int(rng.integers(len(mods)))]
+        rows, cols = self._UNKNOWN_RES[modality]
+        key = DeviceKey(
+            modality,
+            f"Novel{int(rng.integers(100)):02d}",
+            f"NX-{int(rng.integers(1000)):03d}",
+            rows,
+            cols,
+        )
+        assert not self.registry.known(key), key
+        return key
+
     def _background(self, rng: np.random.Generator, rows: int, cols: int, dtype) -> np.ndarray:
         """Cheap anatomy-ish background: radial falloff + low-freq noise."""
         maxv = _MAXVAL[dtype]

@@ -4,5 +4,8 @@
 #   jls        — JPEG-Lossless predictor residuals (TPU half of the codec)
 #   fused      — single-pass scrub+JLS (DESIGN.md §4)
 #   bitmap     — packed-bitmap predicate combine + popcount (catalog queries)
+#   textdetect — tile-wise text-band profiles for the burned-in-PHI
+#                detector's registry fallback (DESIGN.md §9; numpy ref.py
+#                is bit-identical, not just allclose)
 # Each kernel ships <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
 # wrapper with CPU interpret fallback) and ref.py (pure-jnp oracle).

@@ -1,0 +1,1 @@
+from repro.kernels.textdetect import ops, ref  # noqa: F401

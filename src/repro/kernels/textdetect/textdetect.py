@@ -1,0 +1,82 @@
+"""Pallas TPU kernel: tile-wise text-band statistics for burned-in PHI.
+
+The detector's device half (DESIGN.md §9). Each program owns one (th, tw)
+VMEM tile of one image and reduces it to three small statistics:
+
+* the tile's **row projection profile** (th int32 counts),
+* the tile's **column projection profile** (tw int32 counts),
+* the tile's **max horizontal run** of consecutive glyph hits (1 int32).
+
+Like ``phi_detect`` this is a pure streaming reduction — each pixel is read
+exactly once and the outputs are O(H/th * W/tw * (th + tw + 1)) int32s — so
+it runs at HBM bandwidth. Binarization happens in-register (one float32
+compare against the dtype-aware threshold), the profiles are lane/sublane
+sums, and the run-length scan is a static ``fori_loop`` over the tile width
+carrying a (th,) run vector. All post-compare arithmetic is int32, which is
+what makes the kernel bit-identical to the numpy oracle in ``ref.py`` rather
+than merely allclose.
+
+Band extraction (grouping hot rows into rectangles) is host logic in
+``repro.detect.regions`` — it consumes these profiles, so kernel and oracle
+paths produce identical rectangles by construction.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _textdetect_kernel(img_ref, rows_ref, cols_ref, runs_ref, *, thresh: float, th: int, tw: int):
+    tile = img_ref[0].astype(jnp.float32)                     # (th, tw)
+    b = (tile >= jnp.float32(thresh)).astype(jnp.int32)       # glyph hits
+    rows_ref[0, 0, 0] = jnp.sum(b, axis=1)
+    cols_ref[0, 0, 0] = jnp.sum(b, axis=0)
+
+    def scan(j, carry):
+        run, best = carry
+        col = jax.lax.dynamic_slice_in_dim(b, j, 1, axis=1)[:, 0]
+        run = (run + col) * col                               # resets on a gap
+        return run, jnp.maximum(best, run)
+
+    zero = jnp.zeros((th,), jnp.int32)
+    _, best = jax.lax.fori_loop(0, tw, scan, (zero, zero))
+    runs_ref[0, 0, 0] = jnp.max(best)
+
+
+def textdetect_pallas(
+    images: jnp.ndarray,
+    *,
+    thresh: float,
+    tile: tuple[int, int] = (32, 128),
+    interpret: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """images: (N, H, W), tile-aligned. Returns
+
+    (rows (N, H/th, W/tw, th), cols (N, H/th, W/tw, tw), runs (N, H/th, W/tw)),
+    all int32 — bit-identical to ``ref.tile_profiles_ref``.
+    """
+    N, H, W = images.shape
+    th, tw = tile
+    assert H % th == 0 and W % tw == 0, (images.shape, tile)
+    Ht, Wt = H // th, W // tw
+    grid = (N, Ht, Wt)
+    kernel = functools.partial(_textdetect_kernel, thresh=thresh, th=th, tw=tw)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, th, tw), lambda n, i, j: (n, i, j))],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, th), lambda n, i, j: (n, i, j, 0)),
+            pl.BlockSpec((1, 1, 1, tw), lambda n, i, j: (n, i, j, 0)),
+            pl.BlockSpec((1, 1, 1), lambda n, i, j: (n, i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((N, Ht, Wt, th), jnp.int32),
+            jax.ShapeDtypeStruct((N, Ht, Wt, tw), jnp.int32),
+            jax.ShapeDtypeStruct((N, Ht, Wt), jnp.int32),
+        ],
+        interpret=interpret,
+    )(images)

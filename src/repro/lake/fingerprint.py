@@ -78,6 +78,11 @@ class RulesetFingerprint:
     ``config_sha`` digests the pipeline settings that shape delivered bytes
     beyond the scripts themselves (recompress, codec selection value, blank
     function) — two pipelines differing only in those must not share keys.
+    ``detector_sha`` digests the burned-in pixel-PHI detector surface
+    (detector version + :class:`repro.detect.DetectorPolicy` knobs): a
+    policy edit or a new detector changes which pixels get blanked, so
+    results minted under the old behavior must never be served warm. The
+    empty string is the no-detector (pre-§9) identity.
     """
 
     filter_sha: str
@@ -85,6 +90,7 @@ class RulesetFingerprint:
     scrubber_sha: str
     geometry_sha: str
     config_sha: str = ""
+    detector_sha: str = ""
 
     @property
     def digest(self) -> str:
@@ -95,6 +101,7 @@ class RulesetFingerprint:
             self.scrubber_sha,
             self.geometry_sha,
             self.config_sha,
+            self.detector_sha,
         )
 
     @classmethod
@@ -103,6 +110,7 @@ class RulesetFingerprint:
         script_shas: Dict[str, str],
         reg: Optional[DeviceRegistry] = None,
         config: str = "",
+        detector: str = "",
     ) -> "RulesetFingerprint":
         """Build from a pipeline's ``script_shas`` + the live device registry."""
         return cls(
@@ -111,6 +119,7 @@ class RulesetFingerprint:
             scrubber_sha=script_shas["scrubber"],
             geometry_sha=geometry_digest(reg),
             config_sha=_sha("config", config),
+            detector_sha=_sha("detector", detector) if detector else "",
         )
 
 

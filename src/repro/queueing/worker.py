@@ -71,6 +71,8 @@ class DeidWorker:
     batched_instances: int = 0  # instances that went through the fused batch path
     lake_hits: int = 0          # instances short-circuited by the result lake
     lake_misses: int = 0
+    unknown_devices: int = 0    # registry misses (unknown manufacturer/model)
+    detector_runs: int = 0      # burned-in text detector scans this worker ran
 
     def process(self, broker: Broker, msg: Message, injector: Optional[FailureInjector] = None) -> float:
         """Process one message; returns simulated seconds of work."""
@@ -94,10 +96,16 @@ class DeidWorker:
         source_etag = self.source.study_etag(accession)
         study = self.source.get_study(accession)
         batched0 = self.pipeline.executor.stats.instances if self.pipeline.executor else 0
+        dstats = self.pipeline.scrub.detect_stats
+        unknown0, druns0 = dstats.unknown_lookups, dstats.detector_runs
         result = self.pipeline.run_study(study, request, self.worker_id)
         outputs, manifest = result.delivered, result.manifest
         if self.pipeline.executor is not None:
             self.batched_instances += self.pipeline.executor.stats.instances - batched0
+        # unknown-device lookups are a surfaced worker metric, never a silent
+        # pass-through (the shared scrub stage counts; workers take deltas)
+        self.unknown_devices += dstats.unknown_lookups - unknown0
+        self.detector_runs += dstats.detector_runs - druns0
         self.lake_hits += result.cache_hits
         self.lake_misses += result.cache_misses
         request_id = f"{request.research_study}/{request.anon_accession}"
@@ -147,6 +155,8 @@ class PoolReport:
     bytes_in: int
     cost_usd: float
     scale_events: int
+    unknown_devices: int = 0
+    detector_runs: int = 0
 
 
 class WorkerPool:
@@ -234,6 +244,8 @@ class WorkerPool:
             bytes_in=bytes_in,
             cost_usd=self.autoscaler.cost_usd(),
             scale_events=len(self.autoscaler.events),
+            unknown_devices=sum(w.unknown_devices for w in self._all_workers),
+            detector_runs=sum(w.detector_runs for w in self._all_workers),
         )
 
     def drain(self) -> PoolReport:

@@ -21,6 +21,7 @@ from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 from repro.catalog import CohortSelection, StudyCatalog
 from repro.core.pipeline import DeidPipeline
+from repro.detect import DetectorPolicy
 from repro.core.pseudonym import TrustMode
 from repro.core import scripts as default_scripts
 from repro.dicom.generator import StudyGenerator, SyntheticStudy
@@ -57,6 +58,12 @@ class FleetConfig:
     lake_bytes: int = 1 << 30
     recompress: bool = False             # cheap pixels by default; sim is about the fleet
     max_events: int = 100_000
+    # burned-in pixel-PHI detector (DESIGN.md §9): fraction of ingests drawn
+    # from novel (manufacturer, model) variants outside the registry, and the
+    # DetectorPolicy mode the fleet's pipelines run under ("off" is the
+    # registry-only negative control the PHI invariant is tested against)
+    unknown_device_rate: float = 0.0
+    detector_mode: str = "registry_first"
 
 
 @dataclass
@@ -107,7 +114,11 @@ class FleetSim:
         )
         self.journal = Journal(journal_path)
         self.lake = ResultLake(max_bytes=config.lake_bytes)
-        self.pipeline = DeidPipeline(recompress=config.recompress, lake=self.lake)
+        self.policy = DetectorPolicy(mode=config.detector_mode)
+        self.pipeline = DeidPipeline(
+            recompress=config.recompress, lake=self.lake,
+            detector_policy=self.policy,
+        )
         self.dest = StudyStore("researcher")
         self.service = DeidService(
             self.broker, self.source, self.journal,
@@ -156,9 +167,17 @@ class FleetSim:
 
     # ------------------------------------------------------------- corpus ops
     def _ingest(self, gen: StudyGenerator, accession: str) -> None:
+        device = None
+        if self.config.unknown_device_rate > 0.0:
+            # deterministic per (generator seed, accession): re-ingests under
+            # a chaos generator may re-roll, which is realistic (device swap)
+            u = gen._rng("unknown-device?", accession).random()
+            if u < self.config.unknown_device_rate:
+                device = gen.unknown_device(accession, self.config.modality)
         study = gen.gen_study(
             accession, modality=self.config.modality,
             n_images=self.config.images_per_study,
+            device=device,
         )
         self.source.put_study(accession, study)
         self.mrns[accession] = study.mrn
@@ -187,6 +206,7 @@ class FleetSim:
             anonymizer_script=src.anonymizer.script_text,
             scrub_script=src.scrub.script_text,
             recompress=src.scrub.recompress,
+            detector_policy=src.scrub.policy,
         )
 
     # --------------------------------------------------------------- main loop
@@ -351,6 +371,7 @@ class FleetSim:
                 anonymizer_script=edited,
                 recompress=self.config.recompress,
                 lake=self.lake,
+                detector_policy=self.policy,
             )
             # planner admissions and new workers move to the edited ruleset
             # atomically; in-flight workers finish under the old one (their
@@ -409,6 +430,15 @@ class FleetSim:
             ),
             "catalog_rows": self.catalog.stats.rows,
             "catalog_blocks_pruned": self.catalog.stats.blocks_pruned,
+            # burned-in pixel-PHI detector surface (DESIGN.md §9): unknown
+            # (manufacturer, model) lookups are a first-class fleet signal
+            "unknown_device_lookups": sum(
+                w.unknown_devices for w in self.pool._all_workers
+            ),
+            "detector_runs": sum(w.detector_runs for w in self.pool._all_workers),
+            "detector_detected": sum(
+                p.scrub.detect_stats.detected for p in self._pipelines.values()
+            ),
         }
         violations: List[Violation] = []
         for checker in checkers:

@@ -86,9 +86,33 @@ class PhiBoundary(InvariantChecker):
     names, accessions (of any source version ever ingested) must not appear in
     any bucket blob or warm-served output, and every delivered image must have
     its device's burn-in regions blanked (checked from the output's own kept
-    equipment tags, so re-ingested device swaps are covered)."""
+    equipment tags, so re-ingested device swaps are covered — the registry
+    synthesizes geometry for *any* key, so novel unknown-device variants are
+    held to the same standard). On top of the geometry check, every delivered
+    frame is scanned by the text-band detector oracle (DESIGN.md §9): a
+    detectable band surviving in researcher-visible pixels is a violation
+    regardless of what any registry believes — this is what fails when the
+    detector is disabled while unknown-device traffic carries burned-in text
+    (the subsystem's negative control)."""
 
     name = "phi_boundary"
+
+    def _scan_text_bands(self, ds, where: str) -> List[Violation]:
+        """Detector-oracle audit of delivered pixels (default policy knobs —
+        the auditor's own standard, independent of the fleet's config)."""
+        if ds.pixels is None or ds.pixels.ndim != 2:
+            return []
+        from repro.detect import DetectorPolicy, detect_bands_for
+
+        bands, _ = detect_bands_for(ds, DetectorPolicy())
+        if not bands:
+            return []
+        return [
+            self._v(
+                f"{where}: delivered pixels still contain detectable text "
+                f"band(s) {bands} (burned-in PHI survived the scrub)"
+            )
+        ]
 
     def _forbidden(self, sim: "FleetSim") -> Dict[bytes, str]:
         bad: Dict[bytes, str] = {}
@@ -114,6 +138,13 @@ class PhiBoundary(InvariantChecker):
             int(ds.get("Rows", 0) or 0),
             int(ds.get("Columns", 0) or 0),
         )
+        if not registry().known(key):
+            # unknown variant: registry geometry is synthesized, not a
+            # contract — the device never had a scrub rule, so clean slices
+            # legitimately keep anatomy in those rows. The pixel-truth
+            # standard (_scan_text_bands: no detectable band survives)
+            # covers these instances instead.
+            return []
         out: List[Violation] = []
         for x, y, w, h in registry().scrub_rects(key):
             region = ds.pixels[y : y + h, x : x + w]
@@ -131,14 +162,17 @@ class PhiBoundary(InvariantChecker):
         out: List[Violation] = []
         for path in sim.dest.store.list("out/"):
             blob = sim.dest.store.get(path)
+            ds = pickle.loads(blob)
             out.extend(self._scan_blob(blob, f"bucket:{path}", bad))
-            out.extend(self._scan_pixels(pickle.loads(blob), f"bucket:{path}"))
+            out.extend(self._scan_pixels(ds, f"bucket:{path}"))
+            out.extend(self._scan_text_bands(ds, f"bucket:{path}"))
         for _, ticket in sim.tickets:
             for acc, datasets in ticket.outputs.items():
                 for i, ds in enumerate(datasets):
                     where = f"ticket{ticket.cohort_id}:{acc}[{i}]"
                     out.extend(self._scan_blob(pickle.dumps(ds), where, bad))
                     out.extend(self._scan_pixels(ds, where))
+                    out.extend(self._scan_text_bands(ds, where))
         return out
 
 

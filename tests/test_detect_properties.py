@@ -1,0 +1,94 @@
+"""Property-based tests (hypothesis) for the text-band detector.
+
+Skips cleanly where hypothesis isn't installed (the seeded sweeps in
+test_textdetect.py / test_detect.py cover the same surface without it).
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed")
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core.scrub import numpy_blank
+from repro.detect import DetectorPolicy, detect_bands_np, merge_rects
+from repro.dicom.generator import StudyGenerator
+from repro.kernels.phi_detect.ops import stored_max_value
+
+_settings = settings(
+    max_examples=15, deadline=None, suppress_health_check=[HealthCheck.too_slow]
+)
+
+_MODALITIES = ["CT", "MR", "PT", "DX", "CR"]
+
+
+def _detect(ds, policy=DetectorPolicy()):
+    return detect_bands_np(
+        ds.pixels,
+        thresh=stored_max_value(ds) * policy.binarize_frac,
+        row_frac=policy.tau_for(str(ds.get("Modality", ""))),
+        tile=policy.tile,
+        min_rows=policy.min_band_rows,
+        pad_rows=policy.pad_rows,
+    )
+
+
+class TestDetectorCoverage:
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        modality=st.sampled_from(_MODALITIES),
+        salt=st.integers(0, 10_000),
+    )
+    @_settings
+    def test_seeded_bands_always_covered_at_default_thresholds(
+        self, seed, modality, salt
+    ):
+        """For any generator-seeded burned-in text on an unknown-device study,
+        detector proposals cover every seeded row at the default policy."""
+        gen = StudyGenerator(seed)
+        dev = gen.unknown_device(f"P{salt}", modality)
+        study = gen.gen_study(f"P{salt}", device=dev, n_images=1)
+        ds = study.datasets[0]
+        seeded = study.phi_rects.get(ds["SOPInstanceUID"], [])
+        bands, rects = _detect(ds)
+        H = ds.pixels.shape[0]
+        covered = np.zeros(H, bool)
+        for y0, y1 in bands:
+            covered[y0:y1] = True
+        for x, y, w, h in seeded:
+            assert covered[max(0, y) : min(H, y + h)].all(), (seeded, bands)
+        # and blanking the proposals reaches the detector's fixpoint
+        if rects:
+            clean = numpy_blank(ds.pixels, rects)
+            ds2 = ds.copy()
+            ds2.pixels = clean
+            assert _detect(ds2)[0] == []
+
+
+class TestMergeRectsProperties:
+    @given(
+        rects=st.lists(
+            st.tuples(
+                st.integers(-5, 60),
+                st.integers(-5, 60),
+                st.integers(-3, 40),
+                st.integers(-3, 40),
+            ),
+            min_size=0,
+            max_size=8,
+        )
+    )
+    @_settings
+    def test_merge_preserves_blanked_set_and_never_grows(self, rects):
+        before = np.zeros((80, 80), bool)
+        for x, y, w, h in rects:
+            if w > 0 and h > 0:
+                before[max(0, y) : max(0, y + h), max(0, x) : max(0, x + w)] = True
+        merged = merge_rects(rects)
+        after = np.zeros((80, 80), bool)
+        for x, y, w, h in merged:
+            assert w > 0 and h > 0
+            after[max(0, y) : max(0, y + h), max(0, x) : max(0, x + w)] = True
+        np.testing.assert_array_equal(before, after)
+        assert len(merged) <= len([r for r in rects if r[2] > 0 and r[3] > 0])
+        # idempotent
+        assert merge_rects(merged) == merged

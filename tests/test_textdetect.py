@@ -1,0 +1,228 @@
+"""Textdetect kernel parity + band-geometry unit tests (DESIGN.md §9).
+
+The contract is *exact*: every statistic the Pallas kernel emits (row/column
+projection profiles, max horizontal runs) must equal the numpy oracle bit for
+bit, so the rectangles derived from them — and therefore delivered bytes —
+are identical regardless of which path computed the profiles.
+"""
+import numpy as np
+import pytest
+
+from repro.detect.regions import (
+    bands_from_hits,
+    detect_bands_np,
+    merge_rects,
+    rects_from_bands,
+)
+from repro.kernels.textdetect import ops, ref
+
+SHAPES = [(1, 32, 128), (2, 96, 256), (1, 97, 300), (3, 64, 513)]
+DTYPES = [np.uint8, np.uint16]
+TILE = (32, 128)
+
+
+def _burn(imgs: np.ndarray, maxv: int) -> None:
+    """Glyph-ish strokes: bright columns every 3 px over a row band."""
+    imgs[:, 5:20, ::3] = maxv
+
+
+class TestKernelParity:
+    @pytest.mark.parametrize("shape", SHAPES)
+    @pytest.mark.parametrize("dtype", DTYPES)
+    def test_profiles_bit_identical(self, rng, shape, dtype):
+        maxv = 255 if dtype == np.uint8 else 4095
+        imgs = (rng.random(shape) * maxv * 0.5).astype(dtype)
+        _burn(imgs, maxv)
+        thresh = maxv * 0.6
+        padded = ref.pad_to_tiles_np(imgs, TILE)
+        r_ref, c_ref, runs_ref = ref.tile_profiles_ref(padded, thresh, TILE)
+        r_k, c_k, runs_k = ops.tile_profiles(imgs, thresh=thresh, tile=TILE)
+        np.testing.assert_array_equal(np.asarray(r_k), r_ref)
+        np.testing.assert_array_equal(np.asarray(c_k), c_ref)
+        np.testing.assert_array_equal(np.asarray(runs_k), runs_ref)
+
+    @pytest.mark.parametrize("interpret", [True, None])
+    def test_row_hits_bit_identical_both_paths(self, rng, interpret):
+        """interpret=True is the CPU-interpreted kernel; None resolves to the
+        backend default (compiled on accelerators) — both must match the
+        oracle exactly."""
+        imgs = (rng.random((2, 70, 200)) * 2000).astype(np.uint16)
+        _burn(imgs, 4095)
+        hits_k = ops.row_hit_profile(imgs, thresh=2457.0, tile=TILE, interpret=interpret)
+        hits_r = ref.row_hits_np(imgs, 2457.0, TILE)
+        np.testing.assert_array_equal(hits_k, hits_r)
+        assert hits_r.dtype == np.int32 and hits_r.shape == (2, 70)
+
+    def test_rect_masks_identical(self, rng):
+        """Band rects derived from kernel profiles == rects from the oracle,
+        and so are the blank masks they induce."""
+        imgs = (rng.random((1, 90, 256)) * 1500).astype(np.uint16)
+        _burn(imgs, 4095)
+        imgs[0, 60:75, ::3] = 4095
+        thresh = 4095 * 0.6
+        hk = ops.row_hit_profile(imgs, thresh=thresh, tile=TILE)[0]
+        hr = ref.row_hits_np(imgs, thresh, TILE)[0]
+        rects_k = rects_from_bands(
+            bands_from_hits(hk, 256, row_frac=0.04), 256
+        )
+        rects_r = rects_from_bands(
+            bands_from_hits(hr, 256, row_frac=0.04), 256
+        )
+        assert rects_k == rects_r and rects_k
+        mask_k = np.zeros((90, 256), bool)
+        mask_r = np.zeros((90, 256), bool)
+        for (x, y, w, h), m in ((r, mask_k) for r in rects_k):
+            m[y : y + h, x : x + w] = True
+        for (x, y, w, h), m in ((r, mask_r) for r in rects_r):
+            m[y : y + h, x : x + w] = True
+        np.testing.assert_array_equal(mask_k, mask_r)
+
+    def test_padding_never_adds_hits(self, rng):
+        """Zero padding can't binarize: profiles over real rows are the same
+        whether the image arrives tile-aligned or ragged."""
+        imgs = (rng.random((1, 64, 256)) * 4095).astype(np.uint16)
+        ragged = imgs[:, :50, :200]
+        hits_full = ref.row_hits_np(ragged, 1000.0, TILE)
+        aligned = np.zeros((1, 64, 256), np.uint16)
+        aligned[:, :50, :200] = ragged
+        hits_pad = ref.row_hits_np(aligned, 1000.0, TILE)[:, :50]
+        np.testing.assert_array_equal(hits_full, hits_pad)
+
+    def test_max_run_separates_text_from_saturation(self):
+        """Glyph strokes produce short runs; a saturated block produces one
+        tile-wide run — the statistic tells them apart."""
+        text = np.zeros((1, 32, 128), np.uint16)
+        text[0, :, ::3] = 4095  # 1-px strokes
+        sat = np.full((1, 32, 128), 4095, np.uint16)
+        assert int(ref.max_run_np(text, 2457.0, TILE)[0]) == 1
+        assert int(ref.max_run_np(sat, 2457.0, TILE)[0]) == 128
+
+    def test_dtype_aware_threshold(self):
+        assert ops.binarize_thresh(np.uint8) == 255 * 0.6
+        assert ops.binarize_thresh(np.uint16) == 65535 * 0.6
+        assert ops.binarize_thresh(np.uint16, max_value=4095) == 4095 * 0.6
+
+
+class TestBands:
+    def test_hot_rows_group_pad_and_merge(self):
+        hits = np.zeros(100, np.int32)
+        hits[10:20] = 50   # band 1
+        hits[23:30] = 50   # band 2: padding fuses it with band 1
+        hits[80:81] = 50   # single row: below min_rows
+        bands = bands_from_hits(hits, 100, row_frac=0.04, min_rows=2, pad_rows=2)
+        assert bands == [(8, 32)]
+
+    def test_threshold_is_width_relative(self):
+        hits = np.full(10, 5, np.int32)
+        assert bands_from_hits(hits, 100, row_frac=0.04) == [(0, 10)]
+        assert bands_from_hits(hits, 1000, row_frac=0.04) == []
+
+    def test_clipping_at_frame_edges(self):
+        hits = np.zeros(40, np.int32)
+        hits[0:4] = 9
+        hits[37:40] = 9
+        bands = bands_from_hits(hits, 100, row_frac=0.04, min_rows=2, pad_rows=3)
+        assert bands == [(0, 7), (34, 40)]
+
+    def test_empty_profile_no_bands(self):
+        assert bands_from_hits(np.zeros(64, np.int32), 128, row_frac=0.04) == []
+
+    def test_rects_are_full_width(self):
+        assert rects_from_bands([(4, 10), (20, 25)], 640) == [
+            (0, 4, 640, 6),
+            (0, 20, 640, 5),
+        ]
+
+
+class TestMergeRects:
+    """Satellite: registry + detector unions must never double-blank a tile.
+    Merging is conservative — the blanked pixel set is provably unchanged."""
+
+    def test_dedupe_and_drop_empty(self):
+        assert merge_rects([(0, 0, 10, 5), (0, 0, 10, 5), (3, 3, 0, 9), (1, 1, 4, 0)]) == [
+            (0, 0, 10, 5)
+        ]
+
+    def test_contained_rect_dropped(self):
+        assert merge_rects([(0, 0, 100, 50), (10, 10, 20, 20)]) == [(0, 0, 100, 50)]
+        assert merge_rects([(10, 10, 20, 20), (0, 0, 100, 50)]) == [(0, 0, 100, 50)]
+
+    def test_overlapping_stacked_bands_merge(self):
+        # same column extent, overlapping rows -> exact union
+        assert merge_rects([(0, 0, 640, 20), (0, 15, 640, 30)]) == [(0, 0, 640, 45)]
+
+    def test_touching_bands_merge(self):
+        # same column extent, touching rows (y2 == y0 + h0)
+        assert merge_rects([(0, 0, 640, 20), (0, 20, 640, 10)]) == [(0, 0, 640, 30)]
+
+    def test_side_by_side_blocks_merge(self):
+        assert merge_rects([(0, 5, 30, 10), (30, 5, 20, 10)]) == [(0, 5, 50, 10)]
+
+    def test_misaligned_overlap_not_merged(self):
+        # union is not a rectangle: merging would over-blank -> keep both
+        rects = [(0, 0, 100, 20), (50, 10, 100, 20)]
+        out = merge_rects(rects)
+        assert sorted(out) == sorted(rects)
+
+    def test_chain_merges_to_fixpoint(self):
+        out = merge_rects([(0, 0, 64, 8), (0, 8, 64, 8), (0, 16, 64, 8)])
+        assert out == [(0, 0, 64, 24)]
+
+    def test_blanked_set_invariant(self, rng):
+        """Property on random rect soup: merged rects blank exactly the same
+        pixels as the originals."""
+        for trial in range(20):
+            rects = [
+                (
+                    int(rng.integers(0, 50)),
+                    int(rng.integers(0, 50)),
+                    int(rng.integers(-2, 30)),
+                    int(rng.integers(-2, 30)),
+                )
+                for _ in range(6)
+            ]
+            before = np.zeros((70, 70), bool)
+            after = np.zeros((70, 70), bool)
+            for x, y, w, h in rects:
+                if w > 0 and h > 0:
+                    before[y : y + h, x : x + w] = True
+            merged = merge_rects(rects)
+            for x, y, w, h in merged:
+                after[y : y + h, x : x + w] = True
+            np.testing.assert_array_equal(before, after)
+            assert len(merged) <= len([r for r in rects if r[2] > 0 and r[3] > 0])
+
+
+class TestDetectBands:
+    def test_generator_text_is_found_and_blanking_clears_it(self, gen):
+        from repro.core.scrub import numpy_blank
+
+        study = gen.gen_study("TD-US", modality="US", n_images=1)
+        ds = study.datasets[0]
+        seeded = study.phi_rects[ds["SOPInstanceUID"]]
+        H, W = ds.pixels.shape
+        bands, rects = detect_bands_np(ds.pixels, thresh=255 * 0.6, row_frac=0.04)
+        covered = np.zeros(H, bool)
+        for y0, y1 in bands:
+            covered[y0:y1] = True
+        for x, y, w, h in seeded:
+            assert covered[max(0, y) : min(H, y + h)].all(), (seeded, bands)
+        clean = numpy_blank(ds.pixels, rects)
+        assert detect_bands_np(clean, thresh=255 * 0.6, row_frac=0.04)[0] == []
+
+    def test_clean_anatomy_is_quiet(self, gen):
+        study = gen.gen_study("TD-CT", modality="CT", n_images=3)
+        # CT: only every 17th slice carries the banner; slice 1 is clean
+        ds = study.datasets[1]
+        assert ds["SOPInstanceUID"] not in study.phi_rects
+        bands, _ = detect_bands_np(ds.pixels, thresh=4095 * 0.6, row_frac=0.04)
+        assert bands == []
+
+    def test_precomputed_row_hits_short_circuit(self, rng):
+        img = (rng.random((64, 128)) * 1000).astype(np.uint16)
+        img[10:20, ::3] = 4095
+        thresh = 4095 * 0.6
+        hits = ref.row_hits_np(img[None], thresh, TILE)[0]
+        direct = detect_bands_np(img, thresh=thresh, row_frac=0.04)
+        via_hits = detect_bands_np(img, thresh=thresh, row_frac=0.04, row_hits=hits)
+        assert direct == via_hits and direct[0]
