@@ -1,0 +1,229 @@
+"""Change-feed ingest benchmark (DESIGN.md §10).
+
+Three measurements, all exact and replayable from the seed:
+
+* ``drain`` — raw pooler->applier throughput: commit a burst of PACS
+  mutations and drain them into the lake + catalog through the real
+  checkpointed handoff (events/s is the only wall-time figure, for CI
+  trend-watching; the effect counts are deterministic).
+* ``chaos`` — a full feed-chaos fleet run (pooler crashes mid-batch, feed
+  outage, duplicate/out-of-order delivery): reports checkpoint-replay
+  recovery time and asserts zero invariant violations.
+* ``redeid`` — incremental re-de-identification amplification: mutate k of n
+  already-delivered source studies and resubmit the cohort. Amplification is
+  re-deids / mutations and must be exactly 1.0 — the untouched studies ride
+  the warm path.
+
+Writes ``BENCH_ingest.json`` (uploaded by CI next to the other BENCH files).
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+SEED = 23
+DRAIN_EVENTS = 64
+REDEID_STUDIES = 6
+REDEID_MUTATED = 2
+
+
+def _drain_row(tmpdir: Path) -> dict:
+    from repro.catalog import StudyCatalog
+    from repro.dicom.generator import StudyGenerator
+    from repro.ingest import ChangePooler, Checkpoint, IngestApplier, PacsFeed
+    from repro.queueing.broker import Broker
+    from repro.storage.object_store import StudyStore
+    from repro.utils.timing import SimClock
+
+    clock = SimClock()
+    feed = PacsFeed(SEED, images_per_study=1)
+    store = StudyStore("lake", key=b"k")
+    store.attach_catalog(StudyCatalog())
+    gen = StudyGenerator(SEED)
+    for i in range(4):
+        acc = f"ACC{i:04d}"
+        study = gen.gen_study(acc, modality="CT", n_images=1)
+        store.put_study(acc, study)
+        feed.adopt(acc, study)
+    broker = Broker(clock, visibility_timeout=60.0)
+    ckpt = Checkpoint(tmpdir / "drain.ckpt")
+    pooler = ChangePooler(feed, broker, ckpt, clock, seed=SEED, batch=16)
+    applier = IngestApplier(broker, feed, store, ckpt)
+    # 4 creates then an update burst cycling over the whole inventory: the
+    # drain exercises both the create path and burst-collapse dedup
+    for i in range(DRAIN_EVENTS):
+        if i < 4:
+            feed.commit("create", f"PACS{i:04d}")
+        else:
+            feed.commit("update", f"ACC{i % 4:04d}")
+    t0 = time.perf_counter()
+    applied = 0
+    while pooler.behind() or not broker.empty():
+        clock.advance(30.0)
+        pooler.poll_once()
+        applied += len(applier.drain())
+    wall = time.perf_counter() - t0
+    assert not pooler.behind() and broker.empty()
+    return {
+        "tag": "drain",
+        "seed": SEED,
+        "committed_events": feed.last_seq,
+        "applied": applier.stats.applied,
+        "effect_deduped": applier.stats.effect_deduped,
+        "checkpoint_floor": ckpt.floor(),
+        "events_per_s": round(feed.last_seq / max(wall, 1e-9), 1),
+        "wall_s": round(wall, 4),
+    }
+
+
+def _chaos_row(tmpdir: Path) -> dict:
+    from repro.sim import BurstyTraffic, ChaosSchedule, FleetConfig, FleetSim
+
+    corpus = [f"SIM{i:04d}" for i in range(6)]
+    traffic = BurstyTraffic(
+        n_bursts=2, cohorts_per_burst=2, cohort_size=3
+    ).schedule(corpus, SEED)
+    chaos = ChaosSchedule.seeded(
+        SEED, 600.0, corpus,
+        crash_events=1, reingests=2, lease_storms=1,
+        pooler_crashes=2, feed_outages=1, feed_faults=1,
+    )
+    cfg = FleetConfig(
+        seed=SEED, n_studies=6, images_per_study=1, feed_mutations=12
+    )
+    t0 = time.perf_counter()
+    sim = FleetSim(cfg, traffic, tmpdir / "chaos.jsonl", chaos)
+    report = sim.run()
+    wall = time.perf_counter() - t0
+    assert report.ok(), [v.detail for v in report.violations]
+    return {
+        "tag": "chaos",
+        "seed": SEED,
+        "feed_events": report.metrics["feed_events"],
+        "feed_applied": report.metrics["feed_applied"],
+        "pooler_crashes": report.metrics["pooler_crashes"],
+        "pooler_recovery_s": report.metrics.get("pooler_recovery_s", 0.0),
+        "feed_redelivered": report.metrics["feed_redelivered"],
+        "feed_outage_polls": report.metrics["feed_outage_polls"],
+        "violations": len(report.violations),
+        "log_digest": report.log_digest,
+        "wall_s": round(wall, 3),
+    }
+
+
+def _redeid_row(tmpdir: Path) -> dict:
+    from repro.core import DeidPipeline, TrustMode
+    from repro.dicom.generator import StudyGenerator
+    from repro.lake.store import ResultLake
+    from repro.queueing.autoscaler import Autoscaler, AutoscalerConfig
+    from repro.queueing.broker import Broker
+    from repro.queueing.journal import Journal
+    from repro.queueing.server import DeidService
+    from repro.queueing.worker import DeidWorker, WorkerPool
+    from repro.storage.object_store import StudyStore
+    from repro.utils.timing import SimClock
+
+    clock = SimClock()
+    gen = StudyGenerator(SEED)
+    store = StudyStore("lake", key=b"k")
+    mrns = {}
+    for i in range(REDEID_STUDIES):
+        acc = f"ACC{i:04d}"
+        s = gen.gen_study(acc, modality="CT", n_images=1)
+        store.put_study(acc, s)
+        mrns[acc] = s.mrn
+    broker = Broker(clock, visibility_timeout=60.0)
+    journal = Journal(tmpdir / "redeid.jsonl")
+    lake = ResultLake(max_bytes=1 << 30)
+    pipeline = DeidPipeline(recompress=False, lake=lake)
+    service = DeidService(
+        broker, store, journal, result_lake=lake, pipeline=pipeline
+    )
+    service.register_study("IRB-B", TrustMode.POST_IRB)
+    dest = StudyStore("researcher")
+    workers = []
+
+    def make_worker(wid):
+        w = DeidWorker(wid, pipeline, store, dest, journal)
+        workers.append(w)
+        return w
+
+    pool = WorkerPool(
+        broker, Autoscaler(broker, AutoscalerConfig(), clock), make_worker
+    )
+    service.submit_cohort("IRB-B", list(mrns), mrns)
+    pool.drain()
+    cold_processed = sum(w.processed for w in workers)
+    # mutate k source studies (re-acquired bytes, same patients)
+    mutated = list(mrns)[:REDEID_MUTATED]
+    for acc in mutated:
+        new = StudyGenerator(SEED + 99).gen_study(acc, modality="CT", n_images=1)
+        new.mrn = mrns[acc]
+        store.put_study(acc, new)
+    t0 = time.perf_counter()
+    service.submit_cohort("IRB-B", list(mrns), mrns)
+    pool.drain()
+    wall = time.perf_counter() - t0
+    re_deids = sum(w.processed for w in workers) - cold_processed
+    amplification = re_deids / REDEID_MUTATED
+    assert amplification == 1.0, amplification
+    assert journal.supersessions == REDEID_MUTATED
+    assert sum(w.evicted_stale for w in workers) == REDEID_MUTATED
+    return {
+        "tag": "redeid",
+        "seed": SEED,
+        "studies": REDEID_STUDIES,
+        "mutated": REDEID_MUTATED,
+        "re_deids": re_deids,
+        "amplification": amplification,
+        "stale_refreshes": service.planner.stats.stale_refreshes,
+        "supersessions": journal.supersessions,
+        "evicted_stale": sum(w.evicted_stale for w in workers),
+        "wall_s": round(wall, 4),
+    }
+
+
+def run(tmpdir: Path) -> list[dict]:
+    return [_drain_row(tmpdir), _chaos_row(tmpdir), _redeid_row(tmpdir)]
+
+
+def main(json_path: str | None = "BENCH_ingest.json") -> list[str]:
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as td:
+        rows = run(Path(td))
+    by_tag = {r["tag"]: r for r in rows}
+    lines = [
+        (
+            f"ingest_drain,{by_tag['drain']['wall_s'] * 1e6:.0f},"
+            f"events_per_s={by_tag['drain']['events_per_s']:.0f};"
+            f"applied={by_tag['drain']['applied']};"
+            f"deduped={by_tag['drain']['effect_deduped']}"
+        ),
+        (
+            f"ingest_chaos,{by_tag['chaos']['wall_s'] * 1e6:.0f},"
+            f"crashes={by_tag['chaos']['pooler_crashes']:.0f};"
+            f"recovery_s={by_tag['chaos']['pooler_recovery_s']:.1f};"
+            f"violations={by_tag['chaos']['violations']}"
+        ),
+        (
+            f"ingest_redeid,{by_tag['redeid']['wall_s'] * 1e6:.0f},"
+            f"amplification={by_tag['redeid']['amplification']:.2f};"
+            f"mutated={by_tag['redeid']['mutated']};"
+            f"re_deids={by_tag['redeid']['re_deids']}"
+        ),
+    ]
+    if json_path:
+        payload = {
+            "source": "benchmarks/ingestbench.py",
+            "seed": SEED,
+            "rows": rows,
+        }
+        Path(json_path).write_text(json.dumps(payload, indent=2) + "\n")
+    return lines
+
+
+if __name__ == "__main__":
+    for line in main():
+        print(line)

@@ -13,6 +13,7 @@ def main() -> None:
         cohortbench,
         detectbench,
         fleetbench,
+        ingestbench,
         kernelbench,
         roofline,
         table1_throughput,
@@ -26,6 +27,7 @@ def main() -> None:
         ("catalogbench", catalogbench.main),
         ("detectbench", detectbench.main),
         ("fleetbench", fleetbench.main),
+        ("ingestbench", ingestbench.main),
         ("autoscale", autoscale.main),
         ("kernelbench", kernelbench.main),
         ("roofline", roofline.main),

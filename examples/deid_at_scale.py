@@ -228,6 +228,47 @@ def main() -> None:
     service2.planner.resolve()
     assert recold.done() and not recold.failed
 
+    # ------------- source mutation mid-cohort (the §10 incremental re-deid)
+    # the PACS re-acquires one already-delivered study: the planner's etag
+    # check marks exactly that accession stale, its cached result is evicted,
+    # and ONE incremental re-deid runs — every other study still serves warm
+    victim = unknown_cohort[0]
+    reacquired = gen.gen_study(victim, n_images=args.images_per_study,
+                               device=gen.unknown_device(victim, "CT"))
+    reacquired.mrn = mrns[victim]  # same patient, new bytes
+    lake.put_study(victim, reacquired)
+    super0 = journal2.supersessions
+    mut_ticket = service2.submit_cohort("IRB-70007", unknown_cohort, mrns)
+    assert service2.planner.stats.stale_refreshes >= 1
+    assert victim in mut_ticket.cold or victim in mut_ticket.pending
+    assert len(mut_ticket.hits) == len(unknown_cohort) - 1  # rest stay warm
+    mworkers = []
+
+    def make_edited_worker(wid: str) -> DeidWorker:
+        w = DeidWorker(wid, edited, lake, dest, journal2)
+        mworkers.append(w)
+        return w
+
+    pool6 = WorkerPool(
+        broker2,
+        Autoscaler(broker2, AutoscalerConfig(delivery_window=1800), clock),
+        make_edited_worker,
+    )
+    pool6.drain()
+    service2.planner.resolve()
+    evicted = sum(w.evicted_stale for w in mworkers)
+    re_deids = sum(w.processed for w in mworkers)
+    print(f"\nsource mutated: {victim} re-acquired mid-cohort; "
+          f"{len(mut_ticket.hits)} warm / {len(mut_ticket.cold)} cold; "
+          f"{evicted} stale cache entry evicted, "
+          f"{journal2.supersessions - super0} supersession, "
+          f"{re_deids} incremental re-deid (amplification "
+          f"{re_deids}/{1} = {re_deids:.1f})")
+    assert mut_ticket.done() and not mut_ticket.failed
+    assert re_deids == 1, "exactly one re-deid: incrementality, not a rebuild"
+    assert evicted == 1 and journal2.supersessions - super0 == 1
+    assert journal2.etag_for(f"IRB-70007/{victim}") == lake.study_etag(victim)
+
 
 if __name__ == "__main__":
     main()

@@ -46,6 +46,7 @@ log = get_logger("catalog")
 class CatalogStats:
     rows: int = 0
     tombstoned: int = 0
+    deletes: int = 0      # accessions removed via remove_study (feed deletes)
     queries: int = 0
     blocks_scanned: int = 0
     blocks_pruned: int = 0
@@ -132,6 +133,20 @@ class StudyCatalog:
             f"{self._generation}|{accession}|{etag or ''}|{len(rows)}".encode()
         )
         return len(rows)
+
+    def remove_study(self, accession: str) -> int:
+        """Delta delete: tombstone an accession's live rows and drop it from
+        the etag inventory — no rebuild, work ∝ the accession's rows. Returns
+        the number of rows tombstoned (0 for unknown accessions)."""
+        if accession not in self._acc_codes:
+            return 0
+        before = self.stats.tombstoned
+        self._tombstone(accession)
+        self._etags.pop(accession, None)
+        self.stats.deletes += 1
+        self._generation += 1
+        self._digest.update(f"{self._generation}|{accession}|<deleted>|0".encode())
+        return self.stats.tombstoned - before
 
     def _seal_open(self) -> None:
         self._blocks.append(seal_block(self._open, self._open_acc, self._open_valid))

@@ -51,6 +51,7 @@ class PlannerStats:
     resolved: int = 0       # in-flight completions handed to subscribers
     demoted: int = 0        # study record found but instance blobs evicted
     dead_lettered: int = 0  # in-flight work that exhausted its deliveries
+    stale_refreshes: int = 0  # journal-done keys republished: source mutated
 
 
 @dataclass
@@ -159,13 +160,19 @@ class CohortPlanner:
                 self.stats.lake_hits += 1
                 continue
             done = self.journal.manifest_for(key)
-            if done is not None:
+            if done is not None and not self._journal_stale(key, acc):
                 # completed before, lake since evicted: outputs already sit in
                 # the researcher bucket; replay the manifest only
                 ticket.hits.append(acc)
                 ticket.manifests[acc] = done
                 self.stats.journal_hits += 1
                 continue
+            if done is not None:
+                # journal-done but the source mutated since: the recorded
+                # manifest describes pre-mutation bytes. Freshness fencing:
+                # never replay it — republish so only the changed content is
+                # re-de-identified (the worker supersedes the journal entry)
+                self.stats.stale_refreshes += 1
             ticket.cold.append(acc)
             ticket.pending.add(acc)
             self._register_and_publish(key, acc, request, [ticket])
@@ -261,6 +268,14 @@ class CohortPlanner:
         return wedged
 
     # ------------------------------------------------------------- internals
+    def _journal_stale(self, key: str, accession: str) -> bool:
+        """True when the journal's completion for ``key`` was computed from a
+        source version that has since mutated (etag drift). Legacy records
+        without an etag are treated as fresh — staleness must be proven."""
+        done_etag = self.journal.etag_for(key)
+        current = self.source.study_etag(accession)
+        return done_etag is not None and current is not None and done_etag != current
+
     def _materialize(
         self, accession: str, request: DeidRequest
     ) -> Optional[Tuple[List[DicomDataset], Manifest]]:

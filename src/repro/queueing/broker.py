@@ -107,9 +107,17 @@ class Broker:
             out.append(Message(**vars(msg)))
         return out
 
-    def extend_lease(self, msg_id: int, extra: float) -> None:
-        if msg_id in self._leased:
-            self._leased[msg_id].lease_deadline += extra
+    def extend_lease(self, msg_id: int, extra: float) -> bool:
+        """Heartbeat: push this delivery's lease deadline out by ``extra``
+        seconds. Returns False when the lease is gone — already acked, or
+        expired (the message has been redelivered under a fresh ack token) —
+        so the caller knows it is a zombie and must abort rather than ack."""
+        self._expire_leases()
+        msg = self._leased.get(msg_id)
+        if msg is None:
+            return False
+        msg.lease_deadline += extra
+        return True
 
     # ---------------------------------------------------------------- ack
     def ack(self, msg_id: int) -> bool:

@@ -23,37 +23,85 @@ class Journal:
         self.path = Path(path)
         self.path.parent.mkdir(parents=True, exist_ok=True)
         self._completed: Dict[str, dict] = {}
+        self.supersessions = 0  # done-records that replaced a stale-etag entry
+        self.torn_tail = 0      # truncated final records dropped at replay
+        self.corrupt_lines = 0  # malformed non-final lines skipped at replay
         if self.path.exists():
             self._replay()
         self._fh = open(self.path, "a", encoding="utf-8")
 
+    def _absorb(self, rec: dict) -> None:
+        if rec.get("kind") != "done" or "key" not in rec:
+            return
+        prev = self._completed.get(rec["key"])
+        if prev is not None and prev.get("source_etag") != rec.get("source_etag"):
+            self.supersessions += 1
+        self._completed[rec["key"]] = rec
+
     def _replay(self) -> None:
-        with open(self.path, encoding="utf-8") as fh:
-            for line in fh:
-                line = line.strip()
-                if not line:
-                    continue
-                try:
-                    rec = json.loads(line)
-                except json.JSONDecodeError:
-                    # torn tail write from a crash: ignore the partial record
-                    continue
-                if rec.get("kind") == "done":
-                    self._completed[rec["key"]] = rec
+        # Byte-level replay so a torn tail (crash mid-append) can be
+        # *repaired*, not just skipped: appending after a partial final line
+        # would concatenate the next record onto the garbage and corrupt both.
+        with open(self.path, "rb") as fh:
+            raw = fh.read()
+        body, sep, tail = raw.rpartition(b"\n")
+        for line in body.split(b"\n") if sep else []:
+            stripped = line.strip()
+            if not stripped:
+                continue
+            try:
+                rec = json.loads(stripped)
+                if not isinstance(rec, dict):
+                    raise ValueError("not a record")
+            except ValueError:
+                # a malformed line that is NOT the tail was fully written and
+                # then damaged — tolerated (skip) but surfaced via the counter
+                self.corrupt_lines += 1
+                continue
+            self._absorb(rec)
+        if tail.strip():
+            try:
+                rec = json.loads(tail)
+                if not isinstance(rec, dict):
+                    raise ValueError("not a record")
+            except ValueError:
+                # torn tail: the crash interrupted the final append. Recover
+                # every fully-written record and truncate the fragment away.
+                self.torn_tail += 1
+                with open(self.path, "r+b") as fh:
+                    fh.truncate(len(raw) - len(tail))
+            else:
+                # complete record, missing only its newline: finish the line
+                self._absorb(rec)
+                with open(self.path, "ab") as fh:
+                    fh.write(b"\n")
 
     # ------------------------------------------------------------------ api
     def is_done(self, key: str) -> bool:
         return key in self._completed
 
-    def record_done(self, key: str, manifest: Manifest, worker_id: str) -> bool:
-        """Record completion. Returns False if key was already done (the
-        duplicate worker's output is discarded — first ack wins)."""
-        if key in self._completed:
-            return False
+    def record_done(
+        self,
+        key: str,
+        manifest: Manifest,
+        worker_id: str,
+        source_etag: Optional[str] = None,
+    ) -> bool:
+        """Record completion. Returns False if key was already done for the
+        same source version (the duplicate worker's output is discarded —
+        first ack wins). A completion carrying a *different* ``source_etag``
+        supersedes the stale record: the source mutated and the key was
+        legitimately re-de-identified (incremental re-deid, not a duplicate)."""
+        prev = self._completed.get(key)
+        if prev is not None:
+            if source_etag is None or prev.get("source_etag") == source_etag:
+                return False
+            self.supersessions += 1
         rec = {
             "kind": "done",
             "key": key,
             "worker": worker_id,
+            "source_etag": source_etag,
             "counts": manifest.counts(),
             "manifest": json.loads(manifest.to_json()),
         }
@@ -62,6 +110,13 @@ class Journal:
         self._fh.flush()
         os.fsync(self._fh.fileno())
         return True
+
+    def etag_for(self, key: str) -> Optional[str]:
+        """Source content etag the completion for ``key`` was computed from
+        (None for legacy records or unknown keys) — the freshness handle the
+        planner and workers compare against the live source."""
+        rec = self._completed.get(key)
+        return rec.get("source_etag") if rec is not None else None
 
     def completed_keys(self) -> set:
         return set(self._completed)

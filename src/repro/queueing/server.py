@@ -123,9 +123,14 @@ class DeidService:
         out: List[WorkflowRecord] = []
         for acc in self._dedupe(accessions):
             ok, reason = self.validate(acc)
+            key = f"{study_id}/{acc}"
+            done_etag = self.journal.etag_for(key)
+            fresh_done = self.journal.is_done(key) and (
+                done_etag is None or done_etag == self.lake.study_etag(acc)
+            )
             if not ok:
                 rec = WorkflowRecord(study_id, acc, RequestState.REJECTED, reason=reason)
-            elif self.journal.is_done(f"{study_id}/{acc}"):
+            elif fresh_done:
                 rec = WorkflowRecord(study_id, acc, RequestState.DONE)
             else:
                 req = build_request(pseudo, acc, mrn_lookup[acc])

@@ -66,6 +66,8 @@ class DeidWorker:
     dest: StudyStore
     journal: Journal
     throughput: float = 160e6  # bytes/s of de-id compute (paper-calibrated)
+    fence_stale_reads: bool = True  # abort deliveries computed from mutated bytes
+    heartbeat_grace: float = 30.0   # lease headroom requested before delivery
     processed: int = 0
     deduped: int = 0
     batched_instances: int = 0  # instances that went through the fused batch path
@@ -73,28 +75,45 @@ class DeidWorker:
     lake_misses: int = 0
     unknown_devices: int = 0    # registry misses (unknown manufacturer/model)
     detector_runs: int = 0      # burned-in text detector scans this worker ran
+    fenced: int = 0             # stale-byte fences: source mutated mid-compute
+    zombie_aborts: int = 0      # lease lost mid-compute: aborted without ack
+    evicted_stale: int = 0      # superseded study records dropped from the lake
 
     def process(self, broker: Broker, msg: Message, injector: Optional[FailureInjector] = None) -> float:
         """Process one message; returns simulated seconds of work."""
         request = DeidRequest(**msg.payload["request"])
         key = msg.key
+        accession = msg.payload["accession"]
 
         if self.journal.is_done(key):
-            # duplicate delivery of completed work: ack and drop (exactly-once)
-            broker.ack(msg.msg_id)
-            self.deduped += 1
-            return 0.0
+            done_etag = self.journal.etag_for(key)
+            current = self.source.study_etag(accession)
+            if done_etag is None or current is None or done_etag == current:
+                # duplicate delivery of completed work: ack, drop (exactly-once)
+                broker.ack(msg.msg_id)
+                self.deduped += 1
+                return 0.0
+            # completed for a *previous* source version: the source mutated
+            # since — fall through and re-de-identify (incremental re-deid);
+            # record_done will supersede the stale journal entry
 
         if injector and injector.should_crash(self.worker_id, msg):
             # crash mid-processing: lease is abandoned, no ack, no journal entry
             raise WorkerCrash(f"{self.worker_id} crashed on {key} (delivery {msg.deliveries})")
 
-        accession = msg.payload["accession"]
         # pin the source version alongside the read: the study record must
         # bind results to the bytes we actually de-identified, not whatever
         # the source holds after a concurrent re-ingest
         source_etag = self.source.study_etag(accession)
+        if source_etag is None:
+            # deleted while queued: nack toward the DLQ so the planner fails
+            # subscribers out instead of leaving them waiting on erased bytes
+            broker.nack(msg.msg_id)
+            self.fenced += 1
+            return 0.0
         study = self.source.get_study(accession)
+        slowdown = injector.slowdown(self.worker_id, msg) if injector else 1.0
+        work_seconds = (study.nbytes() / self.throughput) * slowdown
         batched0 = self.pipeline.executor.stats.instances if self.pipeline.executor else 0
         dstats = self.pipeline.scrub.detect_stats
         unknown0, druns0 = dstats.unknown_lookups, dstats.detector_runs
@@ -108,39 +127,63 @@ class DeidWorker:
         self.detector_runs += dstats.detector_runs - druns0
         self.lake_hits += result.cache_hits
         self.lake_misses += result.cache_misses
+
+        # heartbeat before delivering: if the lease expired mid-compute this
+        # worker is a zombie — the broker already redelivered under a fresh
+        # ack token, so delivering or journaling here would race the new owner
+        if not broker.extend_lease(msg.msg_id, work_seconds + self.heartbeat_grace):
+            self.zombie_aborts += 1
+            return work_seconds
+
+        # stale-byte fence: a source mutation that raced this computation must
+        # invalidate, never deliver — drop the lease work and let redelivery
+        # read the post-mutation bytes
+        if self.fence_stale_reads and self.source.study_etag(accession) != source_etag:
+            broker.nack(msg.msg_id)
+            self.fenced += 1
+            return work_seconds
+
         request_id = f"{request.research_study}/{request.anon_accession}"
         for ds in outputs:
             self.dest.put_output(request_id, str(ds.get("SOPInstanceUID", "?")), ds)
         self._record_study(accession, source_etag, request, result)
 
-        if self.journal.record_done(key, manifest, self.worker_id):
+        if self.journal.record_done(key, manifest, self.worker_id, source_etag=source_etag):
             self.processed += 1
         else:
             self.deduped += 1  # lost the first-ack race to a speculative clone
         broker.ack(msg.msg_id)
-
-        slowdown = injector.slowdown(self.worker_id, msg) if injector else 1.0
-        return (study.nbytes() / self.throughput) * slowdown
+        return work_seconds
 
     def _record_study(self, accession: str, etag, request, result) -> None:
         """Write the study-level completion record to the result lake so the
-        cohort planner can serve this accession warm next time."""
+        cohort planner can serve this accession warm next time. When this
+        completion supersedes a previous source version, the stale study
+        record (old etag's key) is evicted — pre-mutation output must never
+        be materializable again."""
         lake = self.pipeline.lake
-        if lake is None or not result.instance_keys or etag is None:
+        if lake is None or etag is None:
+            return
+        # lazy import: repro.lake pulls core.pipeline back in (see lake/__init__)
+        from repro.lake.fingerprint import request_salt, study_key
+        from repro.lake.records import encode_study_record
+
+        digest = self.pipeline.ruleset_fingerprint().digest
+        salt = request_salt(request)
+        prev_etag = self.journal.etag_for(f"{request.research_study}/{accession}")
+        if prev_etag is not None and prev_etag != etag:
+            old_key = study_key(accession, prev_etag, digest, salt)
+            if lake.contains(old_key):
+                lake.delete(old_key)
+                self.evicted_stale += 1
+        if not result.instance_keys:
             return
         if not all(lake.contains(k) for k in result.instance_keys):
             # some instance record never landed (oversize reject) or was
             # already evicted: a study record pointing at missing blobs would
             # only feed the planner's demote/recompute churn
             return
-        # lazy import: repro.lake pulls core.pipeline back in (see lake/__init__)
-        from repro.lake.fingerprint import request_salt, study_key
-        from repro.lake.records import encode_study_record
-
-        skey = study_key(
-            accession, etag, self.pipeline.ruleset_fingerprint().digest,
-            request_salt(request),
-        )
+        skey = study_key(accession, etag, digest, salt)
         lake.put(skey, encode_study_record(result.instance_keys))
 
 
@@ -157,6 +200,9 @@ class PoolReport:
     scale_events: int
     unknown_devices: int = 0
     detector_runs: int = 0
+    fenced: int = 0          # stale-byte fences (source mutated mid-compute)
+    zombie_aborts: int = 0   # lease-expired heartbeats aborted without ack
+    evicted_stale: int = 0   # superseded study records evicted from the lake
 
 
 class WorkerPool:
@@ -246,6 +292,9 @@ class WorkerPool:
             scale_events=len(self.autoscaler.events),
             unknown_devices=sum(w.unknown_devices for w in self._all_workers),
             detector_runs=sum(w.detector_runs for w in self._all_workers),
+            fenced=sum(w.fenced for w in self._all_workers),
+            zombie_aborts=sum(w.zombie_aborts for w in self._all_workers),
+            evicted_stale=sum(w.evicted_stale for w in self._all_workers),
         )
 
     def drain(self) -> PoolReport:

@@ -11,10 +11,13 @@ from repro.sim.harness import FleetConfig, FleetReport, FleetSim
 from repro.sim.invariants import (
     DEFAULT_CHECKERS,
     AutoscalerAccounting,
+    CheckpointMonotonicity,
     ExactlyOnceDelivery,
+    Freshness,
     InvariantChecker,
     JournalDurability,
     LakeConsistency,
+    NoFullReingest,
     NoWedgedSubscribers,
     PhiBoundary,
     QueryConsistency,
@@ -35,6 +38,7 @@ __all__ = [
     "BurstyTraffic",
     "ChaosEvent",
     "ChaosSchedule",
+    "CheckpointMonotonicity",
     "CohortArrival",
     "DEFAULT_CHECKERS",
     "DiurnalTraffic",
@@ -45,10 +49,12 @@ __all__ = [
     "FleetConfig",
     "FleetReport",
     "FleetSim",
+    "Freshness",
     "HashRng",
     "InvariantChecker",
     "JournalDurability",
     "LakeConsistency",
+    "NoFullReingest",
     "NoWedgedSubscribers",
     "PhiBoundary",
     "QueryArrival",

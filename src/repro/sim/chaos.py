@@ -16,6 +16,12 @@ the harness understands:
                          (new content ⇒ new etag) while work may be in flight
 * ``ruleset_edit``     — swap the worker pipeline + planner onto an edited
                          ruleset (new fingerprint) mid-cohort
+* ``pooler_crash``     — crash the change pooler mid-batch on its next poll
+                         (``after`` events handed; recovery replays the
+                         durable checkpoint)
+* ``feed_outage``      — the PACS change feed raises outages for
+                         ``duration`` seconds (backoff + breaker path)
+* ``feed_faults``      — turn on duplicate/out-of-order delivery on the feed
 
 Every mutation is applied *at* an event boundary by the harness, never inside
 a worker round, so the interleaving is exact and replayable.
@@ -34,6 +40,9 @@ CHAOS_KINDS = (
     "lease_storm",
     "reingest",
     "ruleset_edit",
+    "pooler_crash",
+    "feed_outage",
+    "feed_faults",
 )
 
 
@@ -71,6 +80,9 @@ class ChaosSchedule:
         reingests: int = 1,
         lease_storms: int = 1,
         ruleset_edits: int = 0,
+        pooler_crashes: int = 0,
+        feed_outages: int = 0,
+        feed_faults: int = 0,
     ) -> "ChaosSchedule":
         """Hash-seeded schedule: event times and victims are pure functions of
         the seed, so a chaos run replays bit-identically."""
@@ -122,6 +134,33 @@ class ChaosSchedule:
                     t=horizon * rng.u("edit_t", i),
                     kind="ruleset_edit",
                     payload={"edit_id": i + 1},
+                )
+            )
+        for i in range(pooler_crashes):
+            ev.append(
+                ChaosEvent(
+                    t=horizon * rng.u("pcrash_t", i),
+                    kind="pooler_crash",
+                    payload={"after": rng.randint(0, 3, "pcrash_k", i)},
+                )
+            )
+        for i in range(feed_outages):
+            ev.append(
+                ChaosEvent(
+                    t=horizon * rng.u("outage_t", i),
+                    kind="feed_outage",
+                    payload={"duration": horizon * (0.05 + 0.1 * rng.u("outage_d", i))},
+                )
+            )
+        for i in range(feed_faults):
+            ev.append(
+                ChaosEvent(
+                    t=horizon * rng.u("fault_t", i),
+                    kind="feed_faults",
+                    payload={
+                        "dup_rate": 0.2 + 0.3 * rng.u("fault_r", i),
+                        "shuffle": True,
+                    },
                 )
             )
         return cls(sorted(ev, key=lambda e: (e.t, e.kind)))

@@ -12,7 +12,9 @@ metrics — the conformance suite enforces this, and it is what makes a chaos
 failure from CI replayable on a laptop from one integer.
 
 Event kinds in the log: ``ingest``, ``cohort``, ``query``, ``tick``,
-``chaos``, ``chaos_restore``, ``cohort_done``, ``drain_done``.
+``chaos``, ``chaos_restore``, ``cohort_done``, ``drain_done``, and — when the
+change feed is enabled — ``feed_commit``, ``feed_poll``, ``feed_restore``,
+``feed_drained``.
 """
 from __future__ import annotations
 
@@ -20,11 +22,15 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 from repro.catalog import CohortSelection, StudyCatalog
+from repro.catalog.columns import rows_from_study
 from repro.core.pipeline import DeidPipeline
 from repro.detect import DetectorPolicy
 from repro.core.pseudonym import TrustMode
 from repro.core import scripts as default_scripts
 from repro.dicom.generator import StudyGenerator, SyntheticStudy
+from repro.ingest.checkpoint import Checkpoint
+from repro.ingest.feed import PacsFeed, seeded_mutations
+from repro.ingest.pooler import ChangePooler, IngestApplier, PoolerCrash
 from repro.lake.store import ResultLake
 from repro.queueing.autoscaler import Autoscaler, AutoscalerConfig
 from repro.queueing.broker import Broker
@@ -64,6 +70,20 @@ class FleetConfig:
     # registry-only negative control the PHI invariant is tested against)
     unknown_device_rate: float = 0.0
     detector_mode: str = "registry_first"
+    # continuous change-feed ingest (DESIGN.md §10): number of PACS mutations
+    # committed during the run (0 = feed disabled, legacy batch-loaded lake),
+    # the pooler's poll cadence, and its fault-handling knobs
+    feed_mutations: int = 0
+    feed_poll_interval: float = 25.0
+    feed_create_fraction: float = 0.25
+    feed_delete_fraction: float = 0.15
+    pooler_batch: int = 16
+    pooler_base_backoff: float = 5.0
+    pooler_breaker_threshold: int = 3
+    pooler_breaker_cooldown: float = 60.0
+    # stale-byte fencing in the workers (False = the freshness invariant's
+    # negative control: pre-mutation bytes may be delivered)
+    fence_stale_reads: bool = True
 
 
 @dataclass
@@ -102,6 +122,30 @@ class FleetSim:
         self._etag_study: Dict[str, SyntheticStudy] = {}  # source etag -> version
         self._hit_etag: Dict[Tuple[int, str], str] = {}   # (cohort, acc) at serve time
         self._reingests = 0
+        # freshness ledger: one global order over source mutations and
+        # researcher-visible deliveries (same-sim-time events keep a definite
+        # order), plus the per-mutation row budget the no-full-reingest
+        # invariant counter-asserts against the catalog's own counters
+        self._order_seq = 0
+        self.mutation_log: List[Dict] = []
+        self.delivery_log: List[Dict] = []
+        self._acc_rows: Dict[str, int] = {}
+        self._expected_catalog_rows = 0
+        self._expected_tombstones = 0
+        # --- change-feed ingest plane (feed_mutations > 0)
+        self.feed: Optional[PacsFeed] = None
+        self.pooler: Optional[ChangePooler] = None
+        self.applier: Optional[IngestApplier] = None
+        self._ckpt_path = f"{journal_path}.ckpt"
+        self._pooler_crash_after: Optional[int] = None
+        self._pooler_crashes = 0
+        self._pooler_crashed_at: Optional[float] = None
+        self._recovery_times: List[float] = []
+        self._feed_totals: Dict[str, int] = {}
+        if config.feed_mutations > 0:
+            self.feed = PacsFeed(
+                config.seed + 500_000, config.modality, config.images_per_study
+            )
         for i in range(config.n_studies):
             acc = f"SIM{i:04d}"
             self._ingest(self.gen, acc)
@@ -113,6 +157,14 @@ class FleetSim:
             max_deliveries=config.max_deliveries,
         )
         self.journal = Journal(journal_path)
+        # the ingest plane gets its own queue: feed events and de-id work are
+        # separate streams in production (different consumers, different SLAs)
+        self.ingest_broker: Optional[Broker] = None
+        if self.feed is not None:
+            self.ingest_broker = Broker(
+                self.clock, visibility_timeout=config.visibility_timeout
+            )
+            self._build_ingest_process()
         self.lake = ResultLake(max_bytes=config.lake_bytes)
         self.policy = DetectorPolicy(mode=config.detector_mode)
         self.pipeline = DeidPipeline(
@@ -183,6 +235,142 @@ class FleetSim:
         self.mrns[accession] = study.mrn
         self._versions.append(study)
         self._etag_study[self.source.study_etag(accession)] = study
+        self._account_rows(accession, len(rows_from_study(study)))
+        self._log_mutation(accession, self.source.study_etag(accession))
+        if self.feed is not None:
+            # initial corpus predates the feed: version 0, no change event
+            self.feed.adopt(accession, study)
+
+    # ------------------------------------------------- freshness + row budget
+    def _log_mutation(self, accession: str, etag: Optional[str]) -> None:
+        """Source-visible mutation (put or delete) in the global order the
+        Freshness checker compares deliveries against."""
+        self._order_seq += 1
+        self.mutation_log.append(
+            {
+                "seq": self._order_seq,
+                "t": self.clock.now(),
+                "accession": accession,
+                "etag": etag,
+            }
+        )
+
+    def _log_delivery(self, key: str, accession: str, etag: Optional[str]) -> None:
+        """Researcher-visible delivery, tagged with the source etag the bytes
+        were de-identified from (warm hits: the etag pinned at admission)."""
+        self._order_seq += 1
+        self.delivery_log.append(
+            {
+                "seq": self._order_seq,
+                "t": self.clock.now(),
+                "key": key,
+                "accession": accession,
+                "etag": etag,
+            }
+        )
+
+    def _account_rows(self, accession: str, rows: int) -> None:
+        """Maintain the exact catalog row budget this mutation is allowed to
+        cost: a re-put tombstones the accession's prior live rows and appends
+        ``rows`` new ones. NoFullReingest counter-asserts these totals against
+        the catalog's own counters — any hidden rebuild breaks the equality."""
+        self._expected_tombstones += self._acc_rows.get(accession, 0)
+        self._expected_catalog_rows += rows
+        self._acc_rows[accession] = rows
+
+    # ------------------------------------------------------ change-feed plane
+    def _build_ingest_process(self) -> None:
+        cfg = self.config
+        ckpt = Checkpoint(self._ckpt_path)
+        self.pooler = ChangePooler(
+            self.feed,
+            self.ingest_broker,
+            ckpt,
+            self.clock,
+            seed=cfg.seed,
+            batch=cfg.pooler_batch,
+            base_backoff=cfg.pooler_base_backoff,
+            breaker_threshold=cfg.pooler_breaker_threshold,
+            breaker_cooldown=cfg.pooler_breaker_cooldown,
+        )
+        self.applier = IngestApplier(self.ingest_broker, self.feed, self.source, ckpt)
+
+    def _rebuild_ingest_process(self) -> None:
+        """Pooler crash recovery: every in-memory cursor dies with the
+        process; the replacement replays the durable checkpoint. This is the
+        crash-safety claim the conformance suite exercises."""
+        for name, val in (
+            ("polls", self.pooler.stats.polls),
+            ("handed", self.pooler.stats.handed),
+            ("duplicates", self.pooler.stats.duplicates),
+            ("outages", self.pooler.stats.outages),
+            ("breaker_opens", self.pooler.stats.breaker_opens),
+            ("applied", self.applier.stats.applied),
+            ("deletes", self.applier.stats.deletes),
+            ("effect_deduped", self.applier.stats.effect_deduped),
+            ("stale_skipped", self.applier.stats.stale_skipped),
+            ("redelivered", self.applier.stats.redelivered),
+        ):
+            self._feed_totals[name] = self._feed_totals.get(name, 0) + val
+        self.pooler.checkpoint.close()
+        self._build_ingest_process()
+
+    def _absorb_applied(self, ops) -> None:
+        """Fold applier effects into the sim's ground truth: PHI oracles see
+        the new source versions, mrn routing learns feed-created studies, and
+        the freshness/row-budget ledgers advance."""
+        for op in ops:
+            if op.op == "put":
+                etag = self.source.study_etag(op.accession)
+                self._versions.append(op.study)
+                self._etag_study[etag] = op.study
+                self.mrns[op.accession] = op.study.mrn
+                self._account_rows(op.accession, op.rows)
+                self._log_mutation(op.accession, etag)
+            else:  # delete
+                self._expected_tombstones += self._acc_rows.pop(op.accession, 0)
+                self._log_mutation(op.accession, None)
+
+    def _on_feed_poll(self, eq: Optional[EventQueue]) -> None:
+        now = self.clock.now()
+        try:
+            status = self.pooler.poll_once(crash_after=self._pooler_crash_after)
+        except PoolerCrash:
+            self._pooler_crashes += 1
+            self._pooler_crashed_at = now
+            self._pooler_crash_after = None
+            self._rebuild_ingest_process()
+            status = {"crashed": True}
+        else:
+            # an armed crash stays armed until a non-empty batch fires it
+            if self._pooler_crashed_at is not None and "handed" in status:
+                self._recovery_times.append(now - self._pooler_crashed_at)
+                self._pooler_crashed_at = None
+        applied = self.applier.drain()
+        self._absorb_applied(applied)
+        self.log.append(now, "feed_poll", applied=len(applied), **status)
+        if eq is not None and not self.broker.empty():
+            self._schedule_tick(eq, now)
+
+    def _drain_feed(self) -> None:
+        """End-of-run catch-up: clear any standing outage, then poll/apply —
+        jumping the clock over backoff/breaker windows — until the checkpoint
+        floor reaches the feed head and the ingest queue is empty. The lake
+        must not finish the run behind the PACS."""
+        self.feed.outage = False
+        for _ in range(1000):
+            if not self.pooler.behind() and self.ingest_broker.empty():
+                break
+            wake = max(
+                self.pooler.next_poll_at, self.pooler.breaker_open_until or 0.0
+            )
+            if wake > self.clock.now():
+                self.clock.advance(wake - self.clock.now())
+            self._on_feed_poll(None)
+        self.log.append(
+            self.clock.now(), "feed_drained",
+            floor=self.pooler.checkpoint.floor(), head=self.feed.last_seq,
+        )
 
     def study_versions(self) -> List[SyntheticStudy]:
         """Every source version ever ingested (re-ingests included) — the PHI
@@ -212,11 +400,32 @@ class FleetSim:
     # --------------------------------------------------------------- main loop
     def run(self, checkers=DEFAULT_CHECKERS) -> FleetReport:
         eq = EventQueue()
+        horizon = 600.0
         for arr in self.traffic:
             kind = "query" if isinstance(arr, QueryArrival) else "cohort"
             eq.push(arr.t, kind, arrival=arr)
+            horizon = max(horizon, arr.t)
         for ce in self.chaos.sorted():
             eq.push(ce.t, "chaos", event=ce)
+            horizon = max(horizon, ce.t)
+        self._horizon = horizon
+        if self.feed is not None:
+            cfg = self.config
+            for mut in seeded_mutations(
+                cfg.seed,
+                horizon,
+                [f"SIM{i:04d}" for i in range(cfg.n_studies)],
+                cfg.feed_mutations,
+                create_fraction=cfg.feed_create_fraction,
+                delete_fraction=cfg.feed_delete_fraction,
+            ):
+                eq.push(mut.t, "feed_commit", mutation=mut)
+            # poll cadence outlives the last scheduled event so the tail of
+            # the change sequence is picked up inside the loop when possible
+            t = cfg.feed_poll_interval
+            while t <= horizon + 4.0 * cfg.feed_poll_interval:
+                eq.push(t, "feed_poll")
+                t += cfg.feed_poll_interval
 
         n_events = 0
         while eq:
@@ -235,6 +444,19 @@ class FleetSim:
                 self._on_tick(eq)
             elif ev.kind == "chaos":
                 self._on_chaos(eq, ev.payload["event"])
+            elif ev.kind == "feed_commit":
+                mut = ev.payload["mutation"]
+                event = self.feed.commit(mut.op, mut.accession)
+                self.log.append(
+                    self.clock.now(), "feed_commit",
+                    op=mut.op, accession=mut.accession,
+                    seq=event.seq if event is not None else -1,
+                )
+            elif ev.kind == "feed_poll":
+                self._on_feed_poll(eq)
+            elif ev.kind == "feed_restore":
+                self.feed.outage = False
+                self.log.append(self.clock.now(), "feed_restore")
             elif ev.kind == "chaos_restore":
                 # storms may overlap: only the last restore standing brings the
                 # baseline timeout back (a restore must never resurrect another
@@ -248,6 +470,8 @@ class FleetSim:
                     storm_depth=self._storm_depth,
                 )
 
+        if self.feed is not None:
+            self._drain_feed()
         self.pool.finish()
         self._resolve_and_log_done()
         self.log.append(
@@ -268,7 +492,10 @@ class FleetSim:
         self.tickets.append((arr, ticket))
         self._ticket_digest[ticket.cohort_id] = self.service.planner.ruleset_digest
         for acc in ticket.hits:  # pin the source version each hit replayed
-            self._hit_etag[(ticket.cohort_id, acc)] = self.source.study_etag(acc)
+            etag = self.source.study_etag(acc)
+            self._hit_etag[(ticket.cohort_id, acc)] = etag
+            # a warm hit is a researcher-visible delivery at admission time
+            self._log_delivery(f"{arr.study_id}/{acc}", acc, etag)
         self._cohort_arrival_t[ticket.cohort_id] = self.clock.now()
         if ticket.done():
             self._cohort_done_t[ticket.cohort_id] = self.clock.now()
@@ -357,10 +584,26 @@ class FleetSim:
             self._reingests += 1
             # re-acquisition: same accession, different bytes -> new etag; the
             # planner's etag-keyed study records go stale, never stale-served
-            self._ingest(
-                StudyGenerator(self.config.seed + 1000 + self._reingests),
-                ce.payload["accession"],
-            )
+            if self.feed is not None:
+                # single-writer rule: once the ingest plane is live the feed
+                # owns source mutations — route the re-acquisition through it
+                self.feed.commit("update", ce.payload["accession"])
+            else:
+                self._ingest(
+                    StudyGenerator(self.config.seed + 1000 + self._reingests),
+                    ce.payload["accession"],
+                )
+        elif ce.kind == "pooler_crash":
+            if self.feed is not None:
+                self._pooler_crash_after = ce.payload["after"]
+        elif ce.kind == "feed_outage":
+            if self.feed is not None:
+                self.feed.outage = True
+                eq.push(now + ce.payload["duration"], "feed_restore")
+        elif ce.kind == "feed_faults":
+            if self.feed is not None:
+                self.feed.dup_rate = ce.payload["dup_rate"]
+                self.feed.shuffle = bool(ce.payload.get("shuffle", True))
         elif ce.kind == "ruleset_edit":
             self._ruleset_edits += 1
             edited = (
@@ -439,7 +682,42 @@ class FleetSim:
             "detector_detected": sum(
                 p.scrub.detect_stats.detected for p in self._pipelines.values()
             ),
+            # stale-byte fencing + incremental re-deid surface (DESIGN.md §10)
+            "fenced": sum(w.fenced for w in self.pool._all_workers),
+            "zombie_aborts": sum(w.zombie_aborts for w in self.pool._all_workers),
+            "evicted_stale": sum(w.evicted_stale for w in self.pool._all_workers),
+            "supersessions": self.journal.supersessions,
+            "stale_refreshes": self.service.planner.stats.stale_refreshes,
+            "catalog_tombstoned": self.catalog.stats.tombstoned,
+            "catalog_deletes": self.catalog.stats.deletes,
         }
+        if self.feed is not None:
+            t = self._feed_totals
+            ps, ap = self.pooler.stats, self.applier.stats
+            metrics.update(
+                {
+                    "feed_events": self.feed.last_seq,
+                    "feed_polls": t.get("polls", 0) + ps.polls,
+                    "feed_handed": t.get("handed", 0) + ps.handed,
+                    "feed_duplicates": t.get("duplicates", 0) + ps.duplicates,
+                    "feed_outage_polls": t.get("outages", 0) + ps.outages,
+                    "feed_breaker_opens": t.get("breaker_opens", 0)
+                    + ps.breaker_opens,
+                    "feed_applied": t.get("applied", 0) + ap.applied,
+                    "feed_deletes": t.get("deletes", 0) + ap.deletes,
+                    "feed_effect_deduped": t.get("effect_deduped", 0)
+                    + ap.effect_deduped,
+                    "feed_stale_skipped": t.get("stale_skipped", 0)
+                    + ap.stale_skipped,
+                    "feed_redelivered": t.get("redelivered", 0) + ap.redelivered,
+                    "pooler_crashes": self._pooler_crashes,
+                    "pooler_recovery_s": round(
+                        sum(self._recovery_times) / len(self._recovery_times), 6
+                    )
+                    if self._recovery_times
+                    else 0.0,
+                }
+            )
         violations: List[Violation] = []
         for checker in checkers:
             violations.extend(checker.check(self))
@@ -451,6 +729,21 @@ class FleetSim:
         )
 
 
+class _LoggingWorker(DeidWorker):
+    """DeidWorker that reports each researcher-visible delivery (a processed
+    message, not a dedup ack) into the sim's freshness ledger, tagged with the
+    source etag the journal pinned at read time."""
+
+    def process(self, broker, msg, injector=None) -> float:
+        before = self.processed
+        spent = super().process(broker, msg, injector)
+        if self.processed > before:
+            self._sim._log_delivery(
+                msg.key, msg.payload["accession"], self.journal.etag_for(msg.key)
+            )
+        return spent
+
+
 class DeidWorkerProxyFactory:
     """Worker factory that reads ``sim.pipeline`` at spawn time, so workers
     created after a ``ruleset_edit`` chaos event pick up the edited pipeline
@@ -460,7 +753,10 @@ class DeidWorkerProxyFactory:
         self.sim = sim
 
     def __call__(self, wid: str) -> DeidWorker:
-        return DeidWorker(
+        w = _LoggingWorker(
             wid, self.sim.pipeline, self.sim.source, self.sim.dest,
             self.sim.journal, throughput=self.sim.config.worker_throughput,
+            fence_stale_reads=self.sim.config.fence_stale_reads,
         )
+        w._sim = self.sim
+        return w

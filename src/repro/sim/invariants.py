@@ -52,12 +52,15 @@ class ExactlyOnceDelivery(InvariantChecker):
         out: List[Violation] = []
         completed = sim.journal.completed_keys()
         processed = sum(w.processed for w in sim.pool._all_workers)
-        if processed != len(completed):
+        # a supersession is a legitimate second completion of the same key —
+        # the source mutated and the key was incrementally re-de-identified
+        expected = len(completed) + sim.journal.supersessions
+        if processed != expected:
             out.append(
                 self._v(
                     f"worker processed counters ({processed}) != unique journal "
-                    f"completions ({len(completed)}): some study was processed "
-                    "more than once or a completion was never journaled"
+                    f"completions + supersessions ({expected}): some study was "
+                    "processed more than once or a completion was never journaled"
                 )
             )
         unknown = completed - sim.submitted_keys()
@@ -387,6 +390,142 @@ class QueryConsistency(InvariantChecker):
         return out
 
 
+class CheckpointMonotonicity(InvariantChecker):
+    """The pooler checkpoint must account for every committed feed event
+    exactly once after the final drain: no event lost across crashes (every
+    committed seq was checkpointed as seen AND reached a terminal outcome),
+    no event double-applied (two outcome records for one seq), and per
+    accession the *applied* outcomes never regress in seq order. Verified
+    against a fresh replay of the durable checkpoint file — the same
+    durability standard the journal is held to."""
+
+    name = "checkpoint_monotonicity"
+
+    def check(self, sim: "FleetSim") -> List[Violation]:
+        if getattr(sim, "feed", None) is None:
+            return []
+        from repro.ingest.checkpoint import Checkpoint
+
+        ck = Checkpoint(sim.pooler.checkpoint.path)
+        try:
+            out: List[Violation] = []
+            committed = {e.seq for e in sim.feed.events}
+            lost = committed - ck.seen
+            if lost:
+                out.append(
+                    self._v(f"feed events never checkpointed as seen: {sorted(lost)}")
+                )
+            unapplied = committed - set(ck.outcomes)
+            if unapplied:
+                out.append(
+                    self._v(
+                        "feed events with no terminal outcome after drain "
+                        f"(lost work): {sorted(unapplied)}"
+                    )
+                )
+            phantom = set(ck.outcomes) - committed
+            if phantom:
+                out.append(
+                    self._v(f"outcomes for never-committed seqs: {sorted(phantom)}")
+                )
+            if ck.double_applied:
+                out.append(
+                    self._v(
+                        f"seqs with more than one outcome record (double-applied "
+                        f"after crash): {sorted(set(ck.double_applied))}"
+                    )
+                )
+            last_applied: Dict[str, int] = {}
+            for rec in ck.outcome_log:
+                if rec.get("outcome") != "applied":
+                    continue
+                acc = rec.get("accession", "")
+                if rec["seq"] < last_applied.get(acc, 0):
+                    out.append(
+                        self._v(
+                            f"{acc}: applied seq {rec['seq']} after newer seq "
+                            f"{last_applied[acc]} (out-of-order apply regressed "
+                            "the lake)"
+                        )
+                    )
+                last_applied[acc] = max(last_applied.get(acc, 0), rec["seq"])
+            return out
+        finally:
+            ck.close()
+
+
+class Freshness(InvariantChecker):
+    """No delivered frame may be older than its source's last acked mutation:
+    for every delivery (worker completion or warm serve), the source etag the
+    content was computed from must equal the etag of the newest mutation
+    acked *before* that delivery. Ordering is by the sim's global handoff
+    sequence, not timestamps — two events at the same sim-time still have a
+    definite order."""
+
+    name = "freshness"
+
+    def check(self, sim: "FleetSim") -> List[Violation]:
+        out: List[Violation] = []
+        mutations = getattr(sim, "mutation_log", [])
+        for d in getattr(sim, "delivery_log", []):
+            last = None
+            for m in mutations:
+                if m["accession"] == d["accession"] and m["seq"] < d["seq"]:
+                    last = m
+            if last is None:
+                continue
+            if last["etag"] is None:
+                out.append(
+                    self._v(
+                        f"{d['key']}: delivered after the source study was "
+                        f"deleted (mutation seq {last['seq']})"
+                    )
+                )
+            elif d["etag"] is not None and d["etag"] != last["etag"]:
+                out.append(
+                    self._v(
+                        f"{d['key']}: delivered content from etag "
+                        f"{d['etag'][:12]} but the last acked mutation "
+                        f"(seq {last['seq']}) committed {last['etag'][:12]} "
+                        "— stale bytes delivered"
+                    )
+                )
+        return out
+
+
+class NoFullReingest(InvariantChecker):
+    """Catalog delta work must be proportional to changed rows, counter-
+    asserted: the catalog's cumulative row/tombstone counters must equal
+    exactly what the harness's applied mutations account for. A hidden full
+    rebuild (re-indexing unchanged studies) inflates the counters past the
+    per-mutation budget and fails here."""
+
+    name = "no_full_reingest"
+
+    def check(self, sim: "FleetSim") -> List[Violation]:
+        expected_rows = getattr(sim, "_expected_catalog_rows", None)
+        if expected_rows is None:
+            return []
+        out: List[Violation] = []
+        if sim.catalog.stats.rows != expected_rows:
+            out.append(
+                self._v(
+                    f"catalog ingested {sim.catalog.stats.rows} rows but the "
+                    f"applied mutations account for {expected_rows} — delta "
+                    "ingest did more work than the changed rows"
+                )
+            )
+        expected_tombs = sim._expected_tombstones
+        if sim.catalog.stats.tombstoned != expected_tombs:
+            out.append(
+                self._v(
+                    f"catalog tombstoned {sim.catalog.stats.tombstoned} rows "
+                    f"but the applied mutations account for {expected_tombs}"
+                )
+            )
+        return out
+
+
 DEFAULT_CHECKERS = (
     ExactlyOnceDelivery(),
     PhiBoundary(),
@@ -396,4 +535,7 @@ DEFAULT_CHECKERS = (
     LakeConsistency(),
     JournalDurability(),
     QueryConsistency(),
+    CheckpointMonotonicity(),
+    Freshness(),
+    NoFullReingest(),
 )

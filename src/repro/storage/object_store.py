@@ -19,7 +19,20 @@ import hashlib
 import io
 import pickle
 from dataclasses import dataclass, field
-from typing import Any, Dict, Iterator, List, Optional
+from typing import Any, Dict, Iterator, List, Optional, Tuple
+
+
+@dataclass(frozen=True)
+class StudyChange:
+    """One entry in a :class:`StudyStore`'s change sequence: a monotonically
+    numbered record of a study-level mutation (``put`` or ``delete``). This is
+    the surface downstream consumers (catalog delta ingest, change pooler
+    conformance checks) diff against instead of rescanning the lake."""
+
+    seq: int
+    op: str              # "put" | "delete"
+    accession: str
+    etag: Optional[str]  # at-rest content etag after the op (None for delete)
 
 
 def _keystream(key: bytes, n: int) -> bytes:
@@ -91,6 +104,20 @@ class StudyStore:
     def __init__(self, name: str, key: Optional[bytes] = None) -> None:
         self.store = ObjectStore(name, key)
         self.catalog = None  # optional metadata index (repro.catalog)
+        self._change_seq = 0
+        self._change_log: List[StudyChange] = []
+
+    def _record_change(self, op: str, accession: str, etag: Optional[str]) -> None:
+        self._change_seq += 1
+        self._change_log.append(StudyChange(self._change_seq, op, accession, etag))
+
+    def change_seq(self) -> int:
+        """Monotonic sequence number of the latest study-level mutation."""
+        return self._change_seq
+
+    def changes(self, after: int = 0) -> List[StudyChange]:
+        """Study-level mutations with ``seq > after``, oldest first."""
+        return [c for c in self._change_log if c.seq > after]
 
     def attach_catalog(self, catalog) -> None:
         """Route every ``put_study`` through the metadata catalog so the
@@ -110,7 +137,20 @@ class StudyStore:
             # re-puts (re-acquisition) tombstone the old rows in the catalog,
             # keyed by the fresh at-rest etag recorded by the put above
             self.catalog.ingest_study(accession, study, etag=self.study_etag(accession))
+        self._record_change("put", accession, self.study_etag(accession))
         return len(blob)
+
+    def delete_study(self, accession: str) -> bool:
+        """Remove a study from the lake (source deletion propagated by the
+        change feed). Tombstones the catalog rows and appends a delete entry
+        to the change sequence; returns False when the accession was absent."""
+        if not self.has_study(accession):
+            return False
+        self.store.delete(f"studies/{accession}")
+        if self.catalog is not None:
+            self.catalog.remove_study(accession)
+        self._record_change("delete", accession, None)
+        return True
 
     def get_study(self, accession: str) -> Any:
         return pickle.loads(self.store.get(f"studies/{accession}"))

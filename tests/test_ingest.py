@@ -1,0 +1,535 @@
+"""Change-feed ingest: feed, checkpoint, pooler/applier, stale-byte fencing.
+
+Covers the DESIGN.md §10 contract end to end at the unit level:
+
+* the simulated PACS emits a monotonic change sequence with deterministic
+  delivery faults;
+* the checkpoint is durable and crash-replayable (torn tails repaired);
+* pooler handoff is at-least-once and the applier is effect-idempotent, so
+  crashes, duplicates, and out-of-order delivery all net to exactly-once;
+* workers fence stale reads and abort zombie work instead of delivering
+  pre-mutation bytes (with the fence-off negative control).
+"""
+import json
+
+import pytest
+
+from repro.catalog import StudyCatalog
+from repro.core import DeidPipeline, TrustMode
+from repro.dicom.generator import StudyGenerator
+from repro.ingest import (
+    ChangePooler,
+    Checkpoint,
+    FeedOutage,
+    IngestApplier,
+    PacsFeed,
+    PoolerCrash,
+    seeded_mutations,
+)
+from repro.lake.store import ResultLake
+from repro.queueing.autoscaler import Autoscaler, AutoscalerConfig
+from repro.queueing.broker import Broker
+from repro.queueing.journal import Journal
+from repro.queueing.server import DeidService
+from repro.queueing.worker import DeidWorker, WorkerPool
+from repro.storage.object_store import StudyStore
+from repro.utils.timing import SimClock
+
+
+def _feed_env(tmp_path, name="ckpt", seed=3, n_initial=3, **pooler_kw):
+    """Lake + catalog + feed (initial corpus adopted) + pooler/applier pair."""
+    clock = SimClock()
+    feed = PacsFeed(seed)
+    gen = StudyGenerator(seed)
+    store = StudyStore("lake", key=b"k")
+    catalog = StudyCatalog()
+    store.attach_catalog(catalog)
+    for i in range(n_initial):
+        acc = f"ACC{i:04d}"
+        s = gen.gen_study(acc, modality="CT", n_images=2)
+        store.put_study(acc, s)
+        feed.adopt(acc, s)
+    broker = Broker(clock, visibility_timeout=60.0)
+    ckpt = Checkpoint(tmp_path / f"{name}.jsonl")
+    pooler = ChangePooler(feed, broker, ckpt, clock, seed=seed, **pooler_kw)
+    applier = IngestApplier(broker, feed, store, ckpt)
+    return clock, feed, store, catalog, broker, ckpt, pooler, applier
+
+
+def _drain(clock, pooler, applier, broker, step=30.0, max_rounds=200):
+    for _ in range(max_rounds):
+        if not pooler.behind() and broker.empty():
+            break
+        wake = max(pooler.next_poll_at, pooler.breaker_open_until or 0.0)
+        if wake > clock.now():
+            clock.advance(wake - clock.now())
+        pooler.poll_once()
+        applier.drain()
+        clock.advance(step)
+
+
+# ------------------------------------------------------------------ the feed
+class TestPacsFeed:
+    def test_commit_monotonic_seq_and_versions(self):
+        feed = PacsFeed(1)
+        e1 = feed.commit("create", "A")
+        e2 = feed.commit("update", "A")
+        e3 = feed.commit("delete", "A")
+        assert [e.seq for e in (e1, e2, e3)] == [1, 2, 3]
+        assert e1.etag and e2.etag and e1.etag != e2.etag  # new bytes, new etag
+        assert e3.etag == "" and feed.fetch("A") is None
+        assert feed.commit("delete", "A") is None  # no-op: already gone
+        assert feed.last_seq == 3
+
+    def test_poll_cursor_and_limit(self):
+        feed = PacsFeed(1)
+        for i in range(5):
+            feed.commit("create", f"A{i}")
+        assert [e.seq for e in feed.poll(0, limit=3)] == [1, 2, 3]
+        assert [e.seq for e in feed.poll(3)] == [4, 5]
+        assert feed.poll(5) == []
+
+    def test_outage_raises(self):
+        feed = PacsFeed(1)
+        feed.commit("create", "A")
+        feed.outage = True
+        with pytest.raises(FeedOutage):
+            feed.poll(0)
+        feed.outage = False
+        assert len(feed.poll(0)) == 1
+
+    def test_delivery_faults_are_deterministic(self):
+        def build():
+            f = PacsFeed(9)
+            for i in range(6):
+                f.commit("create", f"A{i}")
+            f.dup_rate, f.shuffle = 0.5, True
+            return [f.poll(0) for _ in range(3)]
+
+        assert build() == build()
+
+    def test_seeded_mutations_deterministic_and_delete_safe(self):
+        corpus = [f"ACC{i}" for i in range(4)]
+        m1 = seeded_mutations(5, 600.0, corpus, 20)
+        assert m1 == seeded_mutations(5, 600.0, corpus, 20)
+        assert m1 != seeded_mutations(6, 600.0, corpus, 20)
+        ts = [m.t for m in m1]
+        assert ts == sorted(ts) and len(set(ts)) == len(ts)
+        created = {m.accession for m in m1 if m.op == "create"}
+        for m in m1:
+            if m.op == "delete":  # never deletes the pre-feed corpus
+                assert m.accession in created
+
+
+# -------------------------------------------------------------- the checkpoint
+class TestCheckpoint:
+    def test_floor_is_largest_contiguous_seen(self, tmp_path):
+        ck = Checkpoint(tmp_path / "c.jsonl")
+        for s in (1, 2, 5):
+            ck.mark_seen(s)
+        assert ck.floor() == 2  # 5 is deduped in memory, not part of the floor
+        ck.mark_seen(3)
+        ck.mark_seen(4)
+        assert ck.floor() == 5
+        ck.close()
+
+    def test_replay_restores_state(self, tmp_path):
+        p = tmp_path / "c.jsonl"
+        ck = Checkpoint(p)
+        ck.mark_seen(1)
+        ck.mark_seen(2)
+        ck.mark_outcome(1, "A", "e1", "create", "applied", rows=2)
+        ck.mark_outcome(2, "A", "e1", "update", "dup")
+        ck.close()
+        ck2 = Checkpoint(p)
+        assert ck2.floor() == 2 and ck2.seen == {1, 2}
+        assert ck2.has_outcome(1) and ck2.has_outcome(2)
+        assert ck2.applied_etag == {"A": "e1"} and ck2.applied_seq == {"A": 1}
+        assert ck2.double_applied == []
+        ck2.close()
+
+    def test_torn_tail_is_repaired(self, tmp_path):
+        p = tmp_path / "c.jsonl"
+        ck = Checkpoint(p)
+        ck.mark_seen(1)
+        ck.close()
+        with open(p, "ab") as fh:  # crash mid-append: partial record, no newline
+            fh.write(b'{"kind": "seen", "se')
+        ck2 = Checkpoint(p)
+        assert ck2.torn_tail == 1 and ck2.seen == {1}
+        ck2.mark_seen(2)  # file must be line-aligned again after the repair
+        ck2.close()
+        ck3 = Checkpoint(p)
+        assert ck3.seen == {1, 2} and ck3.torn_tail == 0
+        ck3.close()
+
+    def test_complete_tail_missing_newline_is_absorbed(self, tmp_path):
+        p = tmp_path / "c.jsonl"
+        ck = Checkpoint(p)
+        ck.mark_seen(1)
+        ck.close()
+        with open(p, "ab") as fh:  # full record, crash before the newline
+            fh.write(json.dumps({"kind": "seen", "seq": 2}).encode())
+        ck2 = Checkpoint(p)
+        assert ck2.seen == {1, 2} and ck2.floor() == 2 and ck2.torn_tail == 0
+        ck2.close()
+
+    def test_duplicate_outcome_in_file_is_surfaced(self, tmp_path):
+        p = tmp_path / "c.jsonl"
+        ck = Checkpoint(p)
+        ck.mark_outcome(1, "A", "e1", "update", "applied")
+        ck._append({"kind": "op", "seq": 1, "accession": "A", "etag": "e1",
+                    "op": "update", "outcome": "applied", "rows": 0})
+        ck.close()
+        ck2 = Checkpoint(p)
+        assert ck2.double_applied == [1]  # the monotonicity checker's hook
+        ck2.close()
+
+
+# ------------------------------------------------------- pooler/applier plane
+class TestPoolerHandoff:
+    def test_drain_lands_every_mutation_exactly_once(self, tmp_path):
+        clock, feed, store, catalog, broker, ckpt, pooler, applier = _feed_env(
+            tmp_path
+        )
+        feed.commit("create", "PACS0")
+        feed.commit("update", "ACC0001")
+        feed.commit("create", "PACS1")
+        _drain(clock, pooler, applier, broker)
+        assert store.has_study("PACS0")
+        feed.commit("delete", "PACS0")  # delete lands after the create applied
+        _drain(clock, pooler, applier, broker)
+        assert not pooler.behind() and broker.empty()
+        assert sorted(store.accessions()) == sorted(feed.accessions())
+        assert not store.has_study("PACS0")
+        assert set(ckpt.outcomes) == {1, 2, 3, 4}
+        assert ckpt.double_applied == []
+        # catalog followed the deltas: delete tombstoned, update re-ingested
+        assert catalog.stats.deletes == 1
+        assert "PACS1" in catalog.accessions()
+        assert "PACS0" not in catalog.accessions()
+
+    def test_duplicates_and_out_of_order_are_effect_idempotent(self, tmp_path):
+        clock, feed, store, catalog, broker, ckpt, pooler, applier = _feed_env(
+            tmp_path, name="faulty"
+        )
+        feed.dup_rate, feed.shuffle = 1.0, True  # worst-case transport
+        for i in range(6):
+            feed.commit("create", f"P{i}")
+        _drain(clock, pooler, applier, broker)
+        assert not pooler.behind() and broker.empty()
+        assert set(ckpt.outcomes) == set(range(1, 7))
+        assert ckpt.double_applied == []
+        stats = applier.stats
+        assert stats.applied == 6  # one effective apply per committed event
+        assert pooler.stats.duplicates > 0  # the faults actually fired
+        for i in range(6):
+            assert store.has_study(f"P{i}")
+
+    def test_update_burst_collapses_to_one_apply(self, tmp_path):
+        clock, feed, store, catalog, broker, ckpt, pooler, applier = _feed_env(
+            tmp_path, name="burst"
+        )
+        for _ in range(3):
+            feed.commit("update", "ACC0000")
+        pooler.poll_once()
+        applier.drain()
+        # the applier fetches *current* bytes: first event lands the final
+        # version, the remaining two dedup against (accession, etag)
+        assert applier.stats.applied == 1
+        assert applier.stats.effect_deduped == 2
+        assert store.study_etag("ACC0000") is not None
+
+    def test_backoff_grows_then_breaker_opens_and_recovers(self, tmp_path):
+        clock, feed, store, catalog, broker, ckpt, pooler, applier = _feed_env(
+            tmp_path, name="outage", base_backoff=5.0,
+            breaker_threshold=3, breaker_cooldown=120.0,
+        )
+        feed.commit("create", "P0")
+        feed.outage = True
+        backoffs = []
+        for _ in range(3):
+            wake = pooler.next_poll_at
+            if wake > clock.now():
+                clock.advance(wake - clock.now())
+            status = pooler.poll_once()
+            assert status.get("outage")
+            backoffs.append(status["backoff"])
+        assert backoffs[0] < backoffs[1] < backoffs[2]  # exponential + jitter
+        assert pooler.stats.breaker_opens == 1
+        assert pooler.breaker_open_until is not None
+        # while open: polls are skipped entirely, the feed is never touched
+        assert pooler.poll_once() == {
+            "skipped": "breaker", "until": pooler.breaker_open_until
+        }
+        # after cooldown: half-open trial poll succeeds and closes the breaker
+        feed.outage = False
+        clock.advance(pooler.breaker_open_until - clock.now())
+        status = pooler.poll_once()
+        assert status.get("handed") == 1
+        assert pooler.failures == 0 and pooler.breaker_open_until is None
+        applier.drain()
+        assert store.has_study("P0")
+
+    def test_crash_mid_batch_resumes_from_checkpoint(self, tmp_path):
+        clock, feed, store, catalog, broker, ckpt, pooler, applier = _feed_env(
+            tmp_path, name="crash"
+        )
+        for i in range(5):
+            feed.commit("create", f"P{i}")
+        with pytest.raises(PoolerCrash):
+            pooler.poll_once(crash_after=2)  # seq 3 published, never marked seen
+        applier.drain()  # the pre-crash handoffs (and the orphan) still apply
+        ckpt.close()
+        # recovery: a fresh process replays the durable checkpoint
+        ck2 = Checkpoint(tmp_path / "crash.jsonl")
+        assert ck2.floor() == 2  # seqs 1-2 seen; 3 was published but not seen
+        pooler2 = ChangePooler(feed, broker, ck2, clock, seed=3)
+        applier2 = IngestApplier(broker, feed, store, ck2)
+        _drain(clock, pooler2, applier2, broker)
+        assert not pooler2.behind() and broker.empty()
+        assert set(ck2.outcomes) == set(range(1, 6))
+        assert ck2.double_applied == []
+        # seq 3 was redelivered after the crash and deduped, never re-applied
+        assert applier2.stats.redelivered >= 1
+        for i in range(5):
+            assert store.has_study(f"P{i}")
+
+    def test_resume_equals_uninterrupted_run(self, tmp_path):
+        base = self._run_with_crashes(tmp_path, "base", [])
+        crashed = self._run_with_crashes(tmp_path, "crsh", [True, False, True])
+        assert base == crashed
+
+    @staticmethod
+    def _run_with_crashes(tmp_path, name, crashes, seed=3):
+        clock, feed, store, catalog, broker, ckpt, pooler, applier = _feed_env(
+            tmp_path, name=name, seed=seed, batch=2
+        )
+        for mut in seeded_mutations(seed, 100.0, store.accessions(), 8):
+            feed.commit(mut.op, mut.accession)
+        path = ckpt.path
+        for i in range(200):
+            if not pooler.behind() and broker.empty():
+                break
+            crash = i < len(crashes) and crashes[i]
+            try:
+                pooler.poll_once(crash_after=0 if crash else None)
+            except PoolerCrash:
+                pooler.checkpoint.close()
+                ck = Checkpoint(path)
+                pooler = ChangePooler(feed, broker, ck, clock, seed=seed, batch=2)
+                applier = IngestApplier(broker, feed, store, ck)
+            applier.drain()
+            clock.advance(30.0)
+        pooler.checkpoint.close()
+        return (
+            {acc: store.study_etag(acc) for acc in store.accessions()},
+            catalog.accession_etags(),
+        )
+
+
+# ---------------------------------------------- hypothesis: resume equivalence
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - container without hypothesis
+    HAVE_HYPOTHESIS = False
+
+
+if HAVE_HYPOTHESIS:
+
+    class TestResumeEquivalenceProperty:
+        @settings(max_examples=15, deadline=None)
+        @given(
+            crashes=st.lists(st.booleans(), max_size=6),
+            seed=st.integers(0, 50),
+        )
+        def test_any_crash_schedule_converges_to_the_same_state(
+            self, tmp_path_factory, crashes, seed
+        ):
+            """Pooler crash/restart at ANY poll boundary must leave the final
+            lake + catalog state identical to an uninterrupted run."""
+            tmp = tmp_path_factory.mktemp("resume")
+            base = TestPoolerHandoff._run_with_crashes(tmp, "b", [], seed=seed)
+            crashed = TestPoolerHandoff._run_with_crashes(
+                tmp, "c", crashes, seed=seed
+            )
+            assert base == crashed
+
+else:  # the deterministic variant above still covers the core equivalence
+
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_any_crash_schedule_converges_to_the_same_state():
+        pass
+
+
+# ------------------------------------------------- store change-seq + catalog
+class TestStoreChangeSurface:
+    def test_puts_and_deletes_append_changes(self):
+        store = StudyStore("lake")
+        gen = StudyGenerator(2)
+        store.put_study("A", gen.gen_study("A", n_images=1))
+        store.put_study("B", gen.gen_study("B", n_images=1))
+        assert store.delete_study("A") is True
+        assert store.delete_study("A") is False  # already gone
+        assert store.change_seq() == 3
+        ops = [(c.op, c.accession) for c in store.changes()]
+        assert ops == [("put", "A"), ("put", "B"), ("delete", "A")]
+        assert store.changes(after=2)[0].op == "delete"
+        assert store.changes(after=2)[0].etag is None
+        assert not store.has_study("A") and store.has_study("B")
+
+    def test_delete_study_tombstones_catalog_delta(self):
+        store = StudyStore("lake")
+        catalog = StudyCatalog()
+        store.attach_catalog(catalog)
+        gen = StudyGenerator(2)
+        store.put_study("A", gen.gen_study("A", n_images=3))
+        store.put_study("B", gen.gen_study("B", n_images=2))
+        rows_before = catalog.stats.rows
+        store.delete_study("A")
+        assert catalog.stats.rows == rows_before  # no re-ingest of B
+        assert catalog.stats.tombstoned == 3  # exactly A's rows
+        assert catalog.stats.deletes == 1
+        assert catalog.accessions() == ["B"]
+
+
+# ------------------------------------------------- worker-side stale fencing
+class _MutatingStore(StudyStore):
+    """Mutates the target accession immediately after its bytes are read —
+    the tightest possible source-mutation race against an in-flight worker."""
+
+    def arm(self, accession, study):
+        self._arm = (accession, study)
+
+    def get_study(self, accession):
+        study = super().get_study(accession)
+        armed = getattr(self, "_arm", None)
+        if armed and armed[0] == accession:
+            self._arm = None
+            self.put_study(accession, armed[1])
+        return study
+
+
+def _service_env(tmp_path, store, n_studies=2, seed=7):
+    clock = SimClock()
+    gen = StudyGenerator(seed)
+    mrns = {}
+    for i in range(n_studies):
+        acc = f"ACC{i:04d}"
+        s = gen.gen_study(acc, modality="CT", n_images=1)
+        store.put_study(acc, s)
+        mrns[acc] = s.mrn
+    broker = Broker(clock, visibility_timeout=60.0)
+    journal = Journal(tmp_path / "journal.jsonl")
+    lake = ResultLake(max_bytes=1 << 30)
+    pipeline = DeidPipeline(recompress=False, lake=lake)
+    service = DeidService(
+        broker, store, journal, result_lake=lake, pipeline=pipeline
+    )
+    service.register_study("IRB-9", TrustMode.POST_IRB)
+    dest = StudyStore("researcher")
+    workers = []
+
+    def make_worker(wid, **kw):
+        w = DeidWorker(wid, pipeline, store, dest, journal, **kw)
+        workers.append(w)
+        return w
+
+    pool = WorkerPool(
+        broker, Autoscaler(broker, AutoscalerConfig(), clock), make_worker
+    )
+    return clock, broker, journal, lake, service, dest, pool, workers, mrns, pipeline
+
+
+class TestStaleByteFencing:
+    def test_fence_nacks_raced_read_and_redelivery_recovers(self, tmp_path):
+        store = _MutatingStore("lake", key=b"k")
+        clock, broker, journal, lake, service, dest, pool, workers, mrns, _ = (
+            _service_env(tmp_path, store)
+        )
+        new_version = StudyGenerator(99).gen_study(
+            "ACC0000", modality="CT", n_images=1
+        )
+        new_version.mrn = mrns["ACC0000"]  # same patient, re-acquired bytes
+        store.arm("ACC0000", new_version)
+        service.submit_cohort("IRB-9", list(mrns), mrns)
+        pool.drain()
+        assert sum(w.fenced for w in workers) == 1
+        # the redelivery re-read post-mutation bytes; what was journaled is
+        # exactly the current source version (never the pre-mutation read)
+        assert journal.etag_for("IRB-9/ACC0000") == store.study_etag("ACC0000")
+
+    def test_negative_control_fence_off_delivers_stale_bytes(self, tmp_path):
+        store = _MutatingStore("lake", key=b"k")
+        clock, broker, journal, lake, service, dest, pool, workers, mrns, pipe = (
+            _service_env(tmp_path, store)
+        )
+        pool.make_worker = lambda wid: DeidWorker(
+            wid, pipe, store, dest, journal, fence_stale_reads=False
+        )
+        new_version = StudyGenerator(99).gen_study(
+            "ACC0000", modality="CT", n_images=1
+        )
+        new_version.mrn = mrns["ACC0000"]
+        store.arm("ACC0000", new_version)
+        service.submit_cohort("IRB-9", list(mrns), mrns)
+        pool.drain()
+        # without the fence the pre-mutation output IS delivered: the journal
+        # pins an etag the source no longer holds (what Freshness would flag)
+        assert journal.etag_for("IRB-9/ACC0000") != store.study_etag("ACC0000")
+
+    def test_deleted_while_queued_is_fenced_to_dead_letter(self, tmp_path):
+        store = StudyStore("lake", key=b"k")
+        clock, broker, journal, lake, service, dest, pool, workers, mrns, _ = (
+            _service_env(tmp_path, store)
+        )
+        service.submit_cohort("IRB-9", list(mrns), mrns)
+        store.delete_study("ACC0000")
+        pool.drain()
+        assert sum(w.fenced for w in workers) >= 1
+        assert not journal.is_done("IRB-9/ACC0000")
+        assert any(m.key == "IRB-9/ACC0000" for m in broker.dead_letter)
+        assert journal.is_done("IRB-9/ACC0001")  # the rest completed normally
+
+    def test_supersession_evicts_stale_study_record(self, tmp_path):
+        from repro.core.pipeline import build_request
+        from repro.lake.fingerprint import request_salt, study_key
+
+        store = StudyStore("lake", key=b"k")
+        clock, broker, journal, lake, service, dest, pool, workers, mrns, pipe = (
+            _service_env(tmp_path, store)
+        )
+        service.submit_cohort("IRB-9", list(mrns), mrns)
+        pool.drain()
+        assert journal.supersessions == 0
+        old_etag = store.study_etag("ACC0000")
+        request = build_request(
+            service._studies["IRB-9"], "ACC0000", mrns["ACC0000"]
+        )
+        digest = pipe.ruleset_fingerprint().digest
+        old_key = study_key("ACC0000", old_etag, digest, request_salt(request))
+        assert lake.contains(old_key)  # warm study record from the first pass
+        # re-acquisition: same accession, new bytes
+        new_version = StudyGenerator(99).gen_study(
+            "ACC0000", modality="CT", n_images=1
+        )
+        new_version.mrn = mrns["ACC0000"]
+        store.put_study("ACC0000", new_version)
+        ticket = service.submit_cohort("IRB-9", list(mrns), mrns)
+        # only the mutated accession went cold; the other is still warm
+        assert service.planner.stats.stale_refreshes == 1
+        assert "ACC0000" in ticket.cold or "ACC0000" in ticket.pending
+        pool.drain()
+        assert journal.supersessions == 1
+        assert journal.etag_for("IRB-9/ACC0000") == store.study_etag("ACC0000")
+        assert sum(w.evicted_stale for w in workers) == 1
+        # the pre-mutation study record is no longer materializable, and the
+        # fresh one (new etag's key) took its place
+        assert not lake.contains(old_key)
+        new_key = study_key(
+            "ACC0000", store.study_etag("ACC0000"), digest, request_salt(request)
+        )
+        assert lake.contains(new_key)

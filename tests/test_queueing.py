@@ -335,6 +335,94 @@ class TestWorkerPool:
         assert report.processed == len(mrns) - 2
 
 
+class TestLeaseHeartbeat:
+    def test_extend_lease_pushes_deadline(self):
+        clock = SimClock()
+        b = Broker(clock, visibility_timeout=10)
+        b.publish("k1", {}, nbytes=1)
+        msg = b.pull("w0")[0]
+        assert b.extend_lease(msg.msg_id, 50.0) is True
+        clock.advance(40)  # past the original timeout, inside the extension
+        assert b.pull("w1") == []  # not redelivered: the lease is still live
+        assert b.ack(msg.msg_id)
+
+    def test_extend_lease_after_expiry_returns_false(self):
+        clock = SimClock()
+        b = Broker(clock, visibility_timeout=10)
+        b.publish("k1", {}, nbytes=1)
+        msg = b.pull("w0")[0]
+        clock.advance(11)  # lease expired; broker will redeliver
+        assert b.extend_lease(msg.msg_id, 100.0) is False
+        assert len(b.pull("w1")) == 1  # the redelivery was not blocked
+
+    def test_extend_lease_after_ack_returns_false(self):
+        b = Broker(SimClock(), visibility_timeout=10)
+        b.publish("k1", {}, nbytes=1)
+        msg = b.pull("w0")[0]
+        b.ack(msg.msg_id)
+        assert b.extend_lease(msg.msg_id, 100.0) is False
+
+    def test_zombie_worker_aborts_instead_of_acking(self, tmp_path):
+        """Regression: a worker whose lease expired mid-compute must abort —
+        no ack, no journal record, no delivered bytes — because the broker
+        already redelivered the work to a new owner."""
+        clock, broker, journal, service, dest, make_worker, mrns = _env(
+            tmp_path, n_studies=1
+        )
+        service.submit("IRB-9", list(mrns), mrns)
+        msg = broker.pull("w0")[0]
+        clock.advance(31)  # visibility_timeout=30: w0 is now a zombie
+        w = make_worker("w0")
+        w.process(broker, msg)
+        assert w.zombie_aborts == 1 and w.processed == 0
+        assert not journal.is_done(msg.key)
+        assert dest.store.list("out/") == []
+        # the redelivered copy completes normally under its own lease
+        msg2 = broker.pull("w1")[0]
+        w2 = make_worker("w1")
+        w2.process(broker, msg2)
+        assert w2.processed == 1 and journal.is_done(msg.key)
+
+
+class TestJournalTornTail:
+    def test_truncated_final_record_is_repaired(self, tmp_path):
+        from repro.core.manifest import Manifest
+
+        p = tmp_path / "j.jsonl"
+        j = Journal(p)
+        j.record_done("IRB-9/K1", Manifest("IRB-9"), "w0")
+        j.close()
+        with open(p, "ab") as fh:  # crash mid-append: partial record, no newline
+            fh.write(b'{"kind": "done", "key": "IRB-9/K2", "manif')
+        j2 = Journal(p)
+        assert j2.completed_keys() == {"IRB-9/K1"}
+        assert j2.torn_tail == 1
+        # the fragment was truncated away: appends stay line-aligned
+        j2.record_done("IRB-9/K3", Manifest("IRB-9"), "w0")
+        j2.close()
+        j3 = Journal(p)
+        assert j3.completed_keys() == {"IRB-9/K1", "IRB-9/K3"}
+        assert j3.torn_tail == 0 and j3.corrupt_lines == 0
+        j3.close()
+
+    def test_corrupt_mid_file_line_is_skipped_and_counted(self, tmp_path):
+        from repro.core.manifest import Manifest
+
+        p = tmp_path / "j.jsonl"
+        j = Journal(p)
+        j.record_done("IRB-9/K1", Manifest("IRB-9"), "w0")
+        j.close()
+        with open(p, "ab") as fh:
+            fh.write(b"garbage not json\n")  # damaged but newline-terminated
+        j2 = Journal(p)
+        j2.record_done("IRB-9/K2", Manifest("IRB-9"), "w0")
+        j2.close()
+        j3 = Journal(p)
+        assert j3.completed_keys() == {"IRB-9/K1", "IRB-9/K2"}
+        assert j3.corrupt_lines == 1 and j3.torn_tail == 0
+        j3.close()
+
+
 try:
     from hypothesis import HealthCheck, given, settings, strategies as st
 
