@@ -15,6 +15,7 @@ def main() -> None:
         fleetbench,
         ingestbench,
         kernelbench,
+        obsbench,
         roofline,
         table1_throughput,
         table2_rules,
@@ -28,6 +29,7 @@ def main() -> None:
         ("detectbench", detectbench.main),
         ("fleetbench", fleetbench.main),
         ("ingestbench", ingestbench.main),
+        ("obsbench", obsbench.main),
         ("autoscale", autoscale.main),
         ("kernelbench", kernelbench.main),
         ("roofline", roofline.main),

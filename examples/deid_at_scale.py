@@ -1,6 +1,6 @@
 """End-to-end driver (the paper's kind: a batched de-identification service).
 
-    PYTHONPATH=src python examples/deid_at_scale.py [--studies 40]
+    PYTHONPATH=src python examples/deid_at_scale.py [--studies 40] [--trace out.jsonl]
 
 Serves a Table-1-style request at simulation scale with everything turned on:
 autoscaled worker pool, worker crashes + lease redelivery, stragglers +
@@ -28,6 +28,7 @@ from repro.queueing import (
     WorkerPool,
 )
 from repro.queueing.server import DeidService, RequestState
+from repro.obs import NULL_TRACER, Redactor, Tracer, export_spans_jsonl, trace_id_for
 from repro.storage.object_store import StudyStore
 from repro.utils.bytesize import human_bytes
 from repro.utils.timing import SimClock
@@ -38,6 +39,9 @@ def main() -> None:
     ap.add_argument("--studies", type=int, default=40)
     ap.add_argument("--images-per-study", type=int, default=3)
     ap.add_argument("--journal", default="/tmp/deid-at-scale-journal.jsonl")
+    ap.add_argument("--trace", metavar="OUT_JSONL", default=None,
+                    help="write the run's redacted span JSONL here and print "
+                         "a critical-path latency breakdown (DESIGN.md §11)")
     args = ap.parse_args()
 
     # ---------------------------------------------------------------- ingest
@@ -55,7 +59,8 @@ def main() -> None:
 
     # ---------------------------------------------------------------- submit
     clock = SimClock()
-    broker = Broker(clock, visibility_timeout=120)
+    tracer = Tracer(clock) if args.trace else NULL_TRACER
+    broker = Broker(clock, visibility_timeout=120, tracer=tracer)
     # fresh deployment: a journal left by a previous example run would replay
     # its completions and mark this run's submissions DONE at admission
     Path(args.journal).unlink(missing_ok=True)
@@ -63,9 +68,13 @@ def main() -> None:
     result_lake = ResultLake(max_bytes=1 << 30)  # de-id result cache (§6)
     policy = DetectorPolicy()  # registry-first burned-in-text fallback (§9)
     pipeline = DeidPipeline(
-        blank_fn=scrub_ops.blank_fn, lake=result_lake, detector_policy=policy
+        blank_fn=scrub_ops.blank_fn, lake=result_lake, detector_policy=policy,
+        tracer=tracer,
     )
-    service = DeidService(broker, lake, journal, result_lake=result_lake, pipeline=pipeline)
+    service = DeidService(
+        broker, lake, journal, result_lake=result_lake, pipeline=pipeline,
+        tracer=tracer,
+    )
     service.register_study("IRB-70007", TrustMode.POST_IRB)
     service.mark_ineligible("ACC00003")  # research opt-out
     records = service.submit("IRB-70007", list(mrns), mrns)
@@ -80,7 +89,7 @@ def main() -> None:
     injector = FailureInjector(crash_rate=0.08, straggler_rate=0.05, slow_factor=30.0)
 
     def make_worker(wid: str) -> DeidWorker:
-        return DeidWorker(wid, pipeline, lake, dest, journal)
+        return DeidWorker(wid, pipeline, lake, dest, journal, tracer=tracer)
 
     pool = WorkerPool(
         broker,
@@ -268,6 +277,57 @@ def main() -> None:
     assert re_deids == 1, "exactly one re-deid: incrementality, not a rebuild"
     assert evicted == 1 and journal2.supersessions - super0 == 1
     assert journal2.etag_for(f"IRB-70007/{victim}") == lake.study_etag(victim)
+
+    # -------------------------------------------- trace epilogue (§11)
+    # Only the first deployment is traced: trace ids are (key, attempt)
+    # derived, so tracing the post-edit redeploy of the same cohort through
+    # the same tracer would alias its trace ids onto the first drain's.
+    if args.trace:
+        spans = tracer.spans()
+        Path(args.trace).write_text(export_spans_jsonl(spans, Redactor()))
+        # Reconstruct each delivered item's critical path from the broker
+        # event chain. Under SimClock a span's wall time inside one pool tick
+        # is zero — latency lives *between* events (queue wait, redelivery
+        # backoff) and in the worker's simulated busy_s, not inside spans.
+        publishes = {s.trace_id: s for s in spans if s.name == "broker.publish"}
+        entries = {}  # final attempt's queue-entry event (publish/redeliver)
+        for s in spans:
+            if s.name in ("broker.publish", "broker.redeliver"):
+                entries.setdefault(s.trace_id, s)
+        leases = {s.trace_id: s for s in spans if s.name == "broker.lease"}
+        procs = {s.trace_id: s for s in spans if s.name == "worker.process"}
+        chains = []
+        for ack in (s for s in spans if s.name == "broker.ack"):
+            key, attempts = ack.attrs["key"], ack.attrs["deliveries"]
+            first = publishes.get(trace_id_for(key, 1))
+            lease, proc = leases.get(ack.trace_id), procs.get(ack.trace_id)
+            if first is None or lease is None or proc is None:
+                continue  # speculative clone or fenced duplicate
+            entry = entries.get(ack.trace_id, first)
+            chains.append({
+                "key": key,
+                "attempts": attempts,
+                "retry_s": entry.t0 - first.t0,
+                "queue_s": lease.t0 - entry.t0,
+                "busy_s": proc.attrs.get("busy_s", 0.0),
+                "e2e_s": ack.t1 - first.t0,
+            })
+        chains.sort(key=lambda c: -c["e2e_s"])
+        print(f"\n=== critical path: slowest of {len(chains)} delivered items "
+              f"(simulated seconds) ===")
+        print(f"{'key':<24}{'attempts':>9}{'retry':>9}{'queued':>9}"
+              f"{'busy':>9}{'e2e':>9}")
+        for c in chains[:5]:
+            print(f"{c['key']:<24}{c['attempts']:>9}{c['retry_s']:>9.1f}"
+                  f"{c['queue_s']:>9.1f}{c['busy_s']:>9.1f}{c['e2e_s']:>9.1f}")
+        by_name: dict = {}
+        for s in spans:
+            by_name[s.name] = by_name.get(s.name, 0) + 1
+        names = ", ".join(f"{n}×{by_name[n]}"
+                          for n in sorted(by_name, key=by_name.get, reverse=True))
+        print(f"\nspans:        {len(spans)} across {len(tracer.traces())} traces ({names})")
+        print(f"trace:        {args.trace} (redacted JSONL), "
+              f"digest {tracer.digest()[:16]}")
 
 
 if __name__ == "__main__":

@@ -75,8 +75,11 @@ class CohortSelection:
 
 
 class StudyCatalog:
-    def __init__(self, block_rows: int = 512) -> None:
+    def __init__(self, block_rows: int = 512, tracer=None) -> None:
+        from repro.obs.trace import NULL_TRACER
+
         self.block_rows = block_rows
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.dicts: Dict[str, Dictionary] = {c: Dictionary() for c in DICT_COLUMNS}
         self._blocks: List[Block] = []
         # open (unsealed) block buffers
@@ -259,7 +262,13 @@ class StudyCatalog:
         self, pred: Predicate, mode: str = "auto", prune: bool = True
     ) -> CohortSelection:
         """Resolve a predicate to the matching cohort."""
-        mask, n_scanned, n_pruned = self.match_mask(pred, mode=mode, prune=prune)
+        with self.tracer.span("catalog.select", mode=mode) as _scan_span:
+            mask, n_scanned, n_pruned = self.match_mask(pred, mode=mode, prune=prune)
+            _scan_span.set(
+                blocks_scanned=n_scanned,
+                blocks_pruned=n_pruned,
+                matched=int(mask.sum()),
+            )
         acc, nbytes = self._row_identity()
         hit_acc = acc[mask]
         counts: Dict[str, int] = {}

@@ -32,6 +32,7 @@ import numpy as np
 
 from repro.dicom import codec
 from repro.dicom.devices import Rect
+from repro.obs.trace import NULL_TRACER
 
 _CODEC_DTYPES = ("uint8", "uint16")
 
@@ -88,12 +89,16 @@ class BatchedDeidExecutor:
         bh: int = 64,
         interpret: Optional[bool] = None,
         use_kernel: Optional[bool] = None,
+        tracer=None,
     ) -> None:
         self.max_batch = max_batch
         self.bh = bh
         self.interpret = interpret
         self.use_kernel = use_kernel
         self.stats = ExecutorStats()
+        # per-dispatch profiling spans (kernel.dispatch / kernel.entropy_code
+        # / kernel.detect_dispatch) — the roofline measurement substrate
+        self.tracer = tracer if tracer is not None else NULL_TRACER
 
     def _resolve_use_kernel(self) -> bool:
         if self.use_kernel is None:
@@ -145,10 +150,24 @@ class BatchedDeidExecutor:
                 chunk = idxs[c0 : c0 + self.max_batch]
                 self.stats.dispatches += 1
                 self.stats.instances += len(chunk)
-                if use_kernel:
-                    self._run_kernel_chunk(items, chunk, H, W, dtype_name, rb, sv, recompress, out)
-                else:
-                    self._run_host_chunk(items, chunk, H, W, sv, recompress, out)
+                bytes_in = sum(items[i][0].nbytes for i in chunk)
+                with self.tracer.span(
+                    "kernel.dispatch",
+                    path="fused" if use_kernel else "host",
+                    batch=len(chunk),
+                    shape=f"{H}x{W}",
+                    dtype=dtype_name,
+                    bucket=rb,
+                    bytes_in=bytes_in,
+                ) as sp:
+                    if use_kernel:
+                        self._run_kernel_chunk(items, chunk, H, W, dtype_name, rb, sv, recompress, out)
+                    else:
+                        self._run_host_chunk(items, chunk, H, W, sv, recompress, out)
+                    sp.set(bytes_out=sum(
+                        len(out[i].payload) if out[i].payload is not None else out[i].pixels.nbytes
+                        for i in chunk
+                    ))
         return out  # every index was bucketed exactly once
 
     def _run_kernel_chunk(self, items, chunk, H, W, dtype_name, rb, sv, recompress, out) -> None:
@@ -173,14 +192,20 @@ class BatchedDeidExecutor:
                     stack, rects, sv=sv, bits=bits, bh=self.bh, interpret=self.interpret
                 )
             )
-            for j, i in enumerate(chunk):
-                pixels, rl = items[i]
-                blank_inplace(pixels, rl)
-                payload, k = codec.rice_encode(res[j])
-                out[i] = BatchOutput(
-                    pixels=pixels,
-                    payload=codec.pack_header(H, W, bits, sv, k, len(payload)) + payload,
-                )
+            # host Golomb-Rice tail — the ROADMAP's entropy-coding bottleneck;
+            # its own span so a trace shows device vs host time per chunk
+            with self.tracer.span("kernel.entropy_code", batch=len(chunk)) as sp:
+                total = 0
+                for j, i in enumerate(chunk):
+                    pixels, rl = items[i]
+                    blank_inplace(pixels, rl)
+                    payload, k = codec.rice_encode(res[j])
+                    total += len(payload)
+                    out[i] = BatchOutput(
+                        pixels=pixels,
+                        payload=codec.pack_header(H, W, bits, sv, k, len(payload)) + payload,
+                    )
+                sp.set(bytes_out=total)
         else:
             scrubbed = np.asarray(scrub_images(stack, rects))
             for j, i in enumerate(chunk):
@@ -214,26 +239,34 @@ class BatchedDeidExecutor:
                 chunk = idxs[c0 : c0 + self.max_batch]
                 self.stats.detect_dispatches += 1
                 self.stats.detect_instances += len(chunk)
-                if use_kernel:
-                    from repro.kernels.textdetect.ops import row_hit_profile
+                with self.tracer.span(
+                    "kernel.detect_dispatch",
+                    path="textdetect" if use_kernel else "oracle",
+                    batch=len(chunk),
+                    shape=f"{H}x{W}",
+                    dtype=dtype_name,
+                    bytes_in=sum(entries[i][0].nbytes for i in chunk),
+                ):
+                    if use_kernel:
+                        from repro.kernels.textdetect.ops import row_hit_profile
 
-                    # pad the batch dim like the fused path: the jit cache
-                    # only ever sees a small closed set of padded shapes
-                    n_pad = _pow2_at_least(len(chunk), self.max_batch)
-                    stack = np.zeros((n_pad, H, W), np.dtype(dtype_name))
+                        # pad the batch dim like the fused path: the jit cache
+                        # only ever sees a small closed set of padded shapes
+                        n_pad = _pow2_at_least(len(chunk), self.max_batch)
+                        stack = np.zeros((n_pad, H, W), np.dtype(dtype_name))
+                        for j, i in enumerate(chunk):
+                            stack[j] = entries[i][0]
+                        self.stats.padded_shapes.add((n_pad, H, W, dtype_name, "detect"))
+                        hits = row_hit_profile(
+                            stack, thresh=thresh, tile=tile, interpret=self.interpret
+                        )
+                    else:
+                        stack = np.stack([entries[i][0] for i in chunk])
+                        from repro.kernels.textdetect.ref import row_hits_np
+
+                        hits = row_hits_np(stack, thresh, tile)
                     for j, i in enumerate(chunk):
-                        stack[j] = entries[i][0]
-                    self.stats.padded_shapes.add((n_pad, H, W, dtype_name, "detect"))
-                    hits = row_hit_profile(
-                        stack, thresh=thresh, tile=tile, interpret=self.interpret
-                    )
-                else:
-                    stack = np.stack([entries[i][0] for i in chunk])
-                    from repro.kernels.textdetect.ref import row_hits_np
-
-                    hits = row_hits_np(stack, thresh, tile)
-                for j, i in enumerate(chunk):
-                    out[i] = hits[j]
+                        out[i] = hits[j]
         return out  # every index was bucketed exactly once
 
     def _run_host_chunk(self, items, chunk, H, W, sv, recompress, out) -> None:

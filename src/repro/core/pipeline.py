@@ -19,6 +19,7 @@ from repro.core.scrub import ScrubError, ScrubStage
 from repro.core import scripts as default_scripts
 from repro.dicom.dataset import DicomDataset
 from repro.dicom.generator import SyntheticStudy
+from repro.obs.trace import NULL_TRACER
 
 if TYPE_CHECKING:  # type-only: repro.lake imports stay lazy (no import cycle)
     from repro.lake.fingerprint import RulesetFingerprint
@@ -88,6 +89,8 @@ class DeidPipeline:
         batched: bool = True,
         lake: Optional["ResultLake"] = None,
         detector_policy=None,
+        tracer=None,
+        registry=None,
     ) -> None:
         self.filter = FilterStage(filter_script or default_scripts.DEFAULT_FILTER_SCRIPT)
         self.anonymizer = AnonymizerStage(
@@ -98,12 +101,16 @@ class DeidPipeline:
             scrub_script or default_scripts.DEFAULT_SCRUB_SCRIPT,
             recompress=recompress,
             policy=detector_policy,
+            registry=registry,
             **scrub_kwargs,
         )
+        # deterministic tracing (repro.obs): run_study opens per-study spans;
+        # the executor emits per-dispatch kernel profiling spans under them
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         # shape-bucketed batch dispatch over each study's instances; the
         # per-instance loop survives as process_study_serial (fallback/oracle)
         self.executor: Optional[BatchedDeidExecutor] = (
-            BatchedDeidExecutor() if batched else None
+            BatchedDeidExecutor(tracer=self.tracer) if batched else None
         )
         self.script_shas = {
             "filter": self.filter.sha,
@@ -265,6 +272,18 @@ class DeidPipeline:
         lake this is the plain batched path.
         """
         manifest = Manifest(request_id=f"{request.research_study}/{request.anon_accession}")
+        with self.tracer.span(
+            "pipeline.run_study",
+            accession=request.accession,
+            instances=len(study.datasets),
+        ) as _study_span:
+            result = self._run_study_traced(study, request, worker_id, manifest, _study_span)
+        return result
+
+    def _run_study_traced(
+        self, study: SyntheticStudy, request: DeidRequest, worker_id: str,
+        manifest: Manifest, _study_span,
+    ) -> StudyDeidResult:
         if self.lake is None:
             pairs = self._deid_datasets(study.datasets, request, worker_id)
             result = StudyDeidResult([], manifest)
@@ -301,6 +320,7 @@ class DeidPipeline:
                 [], manifest, instance_keys=keys,
                 cache_hits=len(keys) - len(cold), cache_misses=len(cold),
             )
+        _study_span.set(lake_hits=result.cache_hits, cold=result.cache_misses)
         for out, entry in pairs:
             manifest.add(entry)
             if out is not None:

@@ -63,6 +63,7 @@ class ScrubStage:
         recompress: bool = True,
         sv: int = 1,
         policy: Optional[DetectorPolicy] = None,
+        registry=None,
     ) -> None:
         self.script_text = script_text
         self.rules = parse_scrub_script(script_text)
@@ -73,7 +74,9 @@ class ScrubStage:
         # burned-in pixel-PHI detector policy (DESIGN.md §9); None and
         # mode="off" are both the legacy registry-only behavior
         self.policy = policy
-        self.detect_stats = DetectStats()
+        # registry: optional shared MetricsRegistry so fleet-level snapshots
+        # see repro_detect_* totals across every pipeline
+        self.detect_stats = DetectStats(registry)
 
     def rects_for(self, ds: DicomDataset) -> Optional[Tuple[Rect, ...]]:
         res = ds.resolution()

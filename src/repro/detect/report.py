@@ -14,6 +14,7 @@ from typing import List, Tuple
 
 from repro.dicom.devices import Rect
 from repro.detect.policy import DETECTOR_VERSION
+from repro.obs.metrics import StatsShim
 
 Band = Tuple[int, int]
 
@@ -42,13 +43,19 @@ class DetectionReport:
         return self.detector_ran and bool(self.bands)
 
 
-@dataclass
-class DetectStats:
-    """Aggregate scrub-stage counters (worker metrics pull deltas of these)."""
+class DetectStats(StatsShim):
+    """Aggregate scrub-stage counters (worker metrics pull deltas of these).
 
-    instances: int = 0         # instances that went through rect resolution
-    registry_hits: int = 0     # resolved from the scrub script / registry
-    unknown_lookups: int = 0   # registry misses (unknown manufacturer/model)
-    detector_runs: int = 0     # instances the detector actually scanned
-    detected: int = 0          # scans that proposed at least one band
-    bands: int = 0             # total bands proposed
+    Attribute surface is unchanged; values are ``repro_detect_*`` counters so
+    a shared registry sees the fleet-wide totals across pipelines.
+    """
+
+    _SUBSYSTEM = "detect"
+    _FIELDS = (
+        "instances",        # instances that went through rect resolution
+        "registry_hits",    # resolved from the scrub script / registry
+        "unknown_lookups",  # registry misses (unknown manufacturer/model)
+        "detector_runs",    # instances the detector actually scanned
+        "detected",         # scans that proposed at least one band
+        "bands",            # total bands proposed
+    )

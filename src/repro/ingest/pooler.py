@@ -29,6 +29,8 @@ from typing import Any, Dict, List, Optional
 
 from repro.ingest.checkpoint import Checkpoint
 from repro.ingest.feed import ChangeEvent, FeedOutage, PacsFeed
+from repro.obs.metrics import StatsShim
+from repro.obs.trace import NULL_TRACER
 from repro.queueing.broker import Broker
 from repro.storage.object_store import StudyStore
 from repro.utils.logging import get_logger
@@ -41,15 +43,19 @@ class PoolerCrash(RuntimeError):
     replays the durable checkpoint."""
 
 
-@dataclass
-class PoolerStats:
-    polls: int = 0
-    handed: int = 0          # events published into the broker
-    duplicates: int = 0      # feed redeliveries dropped against the seen set
-    outages: int = 0         # polls that hit FeedOutage
-    backoff_skips: int = 0   # polls skipped inside a backoff window
-    breaker_skips: int = 0   # polls skipped while the breaker was open
-    breaker_opens: int = 0
+class PoolerStats(StatsShim):
+    """Pooler counters as real metrics (``repro_ingest_*``)."""
+
+    _SUBSYSTEM = "ingest"
+    _FIELDS = (
+        "polls",
+        "handed",          # events published into the broker
+        "duplicates",      # feed redeliveries dropped against the seen set
+        "outages",         # polls that hit FeedOutage
+        "backoff_skips",   # polls skipped inside a backoff window
+        "breaker_skips",   # polls skipped while the breaker was open
+        "breaker_opens",
+    )
 
 
 class ChangePooler:
@@ -67,11 +73,15 @@ class ChangePooler:
         jitter: float = 0.5,
         breaker_threshold: int = 3,
         breaker_cooldown: float = 120.0,
+        tracer=None,
+        registry=None,
     ) -> None:
         self.feed = feed
         self.broker = broker
         self.checkpoint = checkpoint
         self.clock = clock
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self._registry = registry
         self.batch = batch
         self.base_backoff = base_backoff
         self.max_backoff = max_backoff
@@ -81,7 +91,7 @@ class ChangePooler:
         self.failures = 0
         self.next_poll_at = 0.0
         self.breaker_open_until: Optional[float] = None
-        self.stats = PoolerStats()
+        self.stats = PoolerStats(registry)
         # lazy import: repro.sim's package __init__ imports the harness,
         # which imports this module (module-level import would be a cycle)
         from repro.sim.events import HashRng
@@ -107,6 +117,14 @@ class ChangePooler:
             self.stats.backoff_skips += 1
             return {"skipped": "backoff", "until": self.next_poll_at}
         self.stats.polls += 1
+        # skipped polls (backoff/breaker, every idle tick) stay span-free;
+        # only real poll attempts — including outages — leave a trace
+        with self.tracer.span("ingest.poll") as _poll_span:
+            return self._poll_traced(now, crash_after, _poll_span)
+
+    def _poll_traced(
+        self, now: float, crash_after: Optional[int], span
+    ) -> Dict[str, Any]:
         try:
             batch = self.feed.poll(self.checkpoint.floor(), self.batch)
         except FeedOutage:
@@ -121,6 +139,7 @@ class ChangePooler:
             if self.failures >= self.breaker_threshold:
                 self.breaker_open_until = now + self.breaker_cooldown
                 self.stats.breaker_opens += 1
+            span.set(kind="outage", error="FeedOutage")
             return {"outage": True, "failures": self.failures, "backoff": backoff}
         self.failures = 0
         handed = 0
@@ -158,16 +177,21 @@ class ChangePooler:
             self.checkpoint.mark_seen(event.seq)
             handed += 1
             self.stats.handed += 1
+        span.set(handed=handed, duplicates=dups, floor=self.checkpoint.floor())
         return {"handed": handed, "duplicates": dups, "floor": self.checkpoint.floor()}
 
 
-@dataclass
-class ApplierStats:
-    applied: int = 0
-    deletes: int = 0
-    effect_deduped: int = 0  # same (accession, etag) already applied
-    stale_skipped: int = 0   # older than the newest applied event for the acc
-    redelivered: int = 0     # broker redeliveries of an already-outcome'd seq
+class ApplierStats(StatsShim):
+    """Applier counters as real metrics (``repro_applier_*``)."""
+
+    _SUBSYSTEM = "applier"
+    _FIELDS = (
+        "applied",
+        "deletes",
+        "effect_deduped",  # same (accession, etag) already applied
+        "stale_skipped",   # older than the newest applied event for the acc
+        "redelivered",     # broker redeliveries of an already-outcome'd seq
+    )
 
 
 @dataclass
@@ -193,13 +217,16 @@ class IngestApplier:
         store: StudyStore,
         checkpoint: Checkpoint,
         worker_id: str = "ingest-applier",
+        tracer=None,
+        registry=None,
     ) -> None:
         self.broker = broker
         self.feed = feed
         self.store = store
         self.checkpoint = checkpoint
         self.worker_id = worker_id
-        self.stats = ApplierStats()
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.stats = ApplierStats(registry)
 
     def _apply_one(self, payload: Dict[str, Any]) -> Optional[AppliedOp]:
         ckpt = self.checkpoint
@@ -254,8 +281,18 @@ class IngestApplier:
             if not msgs:
                 break
             msg = msgs[0]
-            applied = self._apply_one(msg.payload)
-            if applied is not None:
-                out.append(applied)
-            self.broker.ack(msg.msg_id)
+            with self.tracer.span(
+                "ingest.apply",
+                trace_id=None,
+                key=msg.key,
+                seq=int(msg.payload["seq"]),
+                kind=msg.payload["kind"],
+            ) as sp:
+                applied = self._apply_one(msg.payload)
+                if applied is not None:
+                    out.append(applied)
+                    sp.set(ok=True, rows=applied.rows)
+                else:
+                    sp.set(ok=False)
+                self.broker.ack(msg.msg_id)
         return out

@@ -32,6 +32,8 @@ from repro.dicom.dataset import DicomDataset
 from repro.lake.fingerprint import request_salt, study_key
 from repro.lake.records import decode_instance_record, decode_study_record
 from repro.lake.store import ResultLake
+from repro.obs.metrics import StatsShim
+from repro.obs.trace import NULL_TRACER
 from repro.queueing.broker import Broker
 from repro.queueing.journal import Journal
 from repro.storage.object_store import StudyStore
@@ -40,18 +42,27 @@ from repro.utils.logging import get_logger
 log = get_logger("lake.planner")
 
 
-@dataclass
-class PlannerStats:
-    accessions: int = 0
-    lake_hits: int = 0      # served entirely from the result lake
-    journal_hits: int = 0   # already completed; outputs delivered previously
-    coalesced: int = 0      # subscribed to an in-flight computation
-    published: int = 0      # cold: emitted to the broker
-    rejected: int = 0
-    resolved: int = 0       # in-flight completions handed to subscribers
-    demoted: int = 0        # study record found but instance blobs evicted
-    dead_lettered: int = 0  # in-flight work that exhausted its deliveries
-    stale_refreshes: int = 0  # journal-done keys republished: source mutated
+class PlannerStats(StatsShim):
+    """Planner admission counters as real metrics (``repro_planner_*``).
+
+    The conservation identities the sim audits:
+    ``accessions == lake_hits + journal_hits + coalesced + published + rejected``
+    and ``published == resolved + dead_lettered + len(inflight)``.
+    """
+
+    _SUBSYSTEM = "planner"
+    _FIELDS = (
+        "accessions",
+        "lake_hits",        # served entirely from the result lake
+        "journal_hits",     # already completed; outputs delivered previously
+        "coalesced",        # subscribed to an in-flight computation
+        "published",        # cold: emitted to the broker
+        "rejected",
+        "resolved",         # in-flight completions handed to subscribers
+        "demoted",          # study record found but instance blobs evicted
+        "dead_lettered",    # in-flight work that exhausted its deliveries
+        "stale_refreshes",  # journal-done keys republished: source mutated
+    )
 
 
 @dataclass
@@ -100,6 +111,8 @@ class CohortPlanner:
         journal: Journal,
         validate: Optional[Callable[[str], Tuple[bool, str]]] = None,
         ruleset_digest: str = "",
+        tracer=None,
+        registry=None,
     ) -> None:
         self.result_lake = result_lake
         self.source = source
@@ -109,7 +122,8 @@ class CohortPlanner:
         # must match the digest of the pipeline serving the worker pool —
         # DeidService wires both sides from the same DeidPipeline
         self.ruleset_digest = ruleset_digest
-        self.stats = PlannerStats()
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.stats = PlannerStats(registry)
         self._inflight: Dict[str, _InFlight] = {}
         self._cohorts = 0
 
@@ -136,6 +150,25 @@ class CohortPlanner:
             study_id=pseudo.study_id,
             selection_digest=selection_digest,
         )
+        with self.tracer.span(
+            "planner.partition", cohort_id=ticket.cohort_id, n=len(accessions)
+        ) as _part_span:
+            self._partition(pseudo, accessions, mrn_lookup, ticket)
+            _part_span.set(
+                warm=len(ticket.hits),
+                coalesced=len(ticket.coalesced),
+                cold=len(ticket.cold),
+                rejected=len(ticket.rejected),
+            )
+        return ticket
+
+    def _partition(
+        self,
+        pseudo: PseudonymService,
+        accessions: List[str],
+        mrn_lookup: Dict[str, str],
+        ticket: CohortTicket,
+    ) -> None:
         for acc in accessions:
             self.stats.accessions += 1
             if self.validate is not None:
@@ -176,7 +209,6 @@ class CohortPlanner:
             ticket.cold.append(acc)
             ticket.pending.add(acc)
             self._register_and_publish(key, acc, request, [ticket])
-        return ticket
 
     def admit(self, pseudo: PseudonymService, accession: str, request: DeidRequest) -> bool:
         """Single-flight admission for non-cohort submits (`DeidService.submit`).
@@ -233,6 +265,7 @@ class CohortPlanner:
                         )
                     del self._inflight[key]
                     self.stats.dead_lettered += 1
+                    self.tracer.event("planner.failout", key=key)
                 continue
             warm = self._materialize(entry.accession, entry.request)
             manifest = warm[1] if warm is not None else self.journal.manifest_for(key)
@@ -245,6 +278,10 @@ class CohortPlanner:
             del self._inflight[key]
             self.stats.resolved += 1
             resolved.append(key)
+        if resolved:
+            # emit only when work actually resolved: resolve() runs on every
+            # sim step, and an unconditional event would swamp the trace
+            self.tracer.event("planner.resolve", n=len(resolved))
         return resolved
 
     def inflight_keys(self) -> List[str]:

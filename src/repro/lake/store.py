@@ -13,8 +13,9 @@ touching eviction or metrics, which live in :class:`ResultLake`.
 from __future__ import annotations
 
 from collections import OrderedDict
-from dataclasses import dataclass, field
 from typing import Dict, List, Optional
+
+from repro.obs.metrics import MetricsRegistry, StatsShim
 
 
 class LakeBackend:
@@ -51,16 +52,21 @@ class InMemoryBackend(LakeBackend):
         return 0 if b is None else len(b)
 
 
-@dataclass
-class LakeStats:
-    hits: int = 0
-    misses: int = 0
-    puts: int = 0
-    evictions: int = 0
-    bytes_in: int = 0       # bytes written into the lake
-    bytes_out: int = 0      # bytes served from the lake
-    evicted_bytes: int = 0
-    oversize_rejects: int = 0  # single blobs larger than the whole budget
+class LakeStats(StatsShim):
+    """Lake counters; attribute surface unchanged, values are real metrics
+    (``repro_lake_*``) aggregated by whichever registry owns them."""
+
+    _SUBSYSTEM = "lake"
+    _FIELDS = (
+        "hits",
+        "misses",
+        "puts",
+        "evictions",
+        "bytes_in",       # bytes written into the lake
+        "bytes_out",      # bytes served from the lake
+        "evicted_bytes",
+        "oversize_rejects",  # single blobs larger than the whole budget
+    )
 
     def hit_rate(self) -> float:
         n = self.hits + self.misses
@@ -77,11 +83,14 @@ class ResultLake:
     """
 
     def __init__(
-        self, max_bytes: int = 256 * 1024 * 1024, backend: Optional[LakeBackend] = None
+        self,
+        max_bytes: int = 256 * 1024 * 1024,
+        backend: Optional[LakeBackend] = None,
+        registry: Optional[MetricsRegistry] = None,
     ) -> None:
         self.max_bytes = max_bytes
         self.backend = backend or InMemoryBackend()
-        self.stats = LakeStats()
+        self.stats = LakeStats(registry)
         self._lru: "OrderedDict[str, int]" = OrderedDict()  # key -> nbytes
         self._stored_bytes = 0
 

@@ -1,0 +1,42 @@
+"""Observability plane: deterministic tracing, typed metrics, PHI-safe export.
+
+Three layers, all clock-injected and fully deterministic under a SimClock:
+
+- :mod:`repro.obs.metrics` — typed Counter/Gauge/Histogram with label sets,
+  a :class:`MetricsRegistry` that aggregates across instances on snapshot,
+  and :class:`StatsShim`, which lets the existing ``*.stats.field`` attribute
+  surfaces keep working while the values live in real metrics.
+- :mod:`repro.obs.trace` — :class:`Tracer`/:class:`Span` with explicit
+  context propagation (trace ids derived from ticket key + attempt),
+  deterministic span ids, and a canonical SHA-256 trace digest so a seeded
+  fleet run replays bit-identically. ``NULL_TRACER`` is a zero-overhead
+  no-op used wherever tracing is disabled.
+- :mod:`repro.obs.export` — allowlist :class:`Redactor` plus JSONL and
+  Chrome-trace exporters; *every* attribute and label crosses the redactor
+  before leaving the process, making exported telemetry provably PHI-free.
+"""
+from repro.obs.metrics import Counter, Gauge, Histogram, MetricsRegistry, StatsShim
+from repro.obs.trace import NULL_TRACER, NullTracer, Span, Tracer, trace_id_for
+from repro.obs.export import (
+    Redactor,
+    export_metrics_jsonl,
+    export_spans_jsonl,
+    to_chrome_trace,
+)
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "StatsShim",
+    "NULL_TRACER",
+    "NullTracer",
+    "Span",
+    "Tracer",
+    "trace_id_for",
+    "Redactor",
+    "export_metrics_jsonl",
+    "export_spans_jsonl",
+    "to_chrome_trace",
+]

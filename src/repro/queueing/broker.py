@@ -16,6 +16,8 @@ import itertools
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
 
+from repro.obs.metrics import StatsShim
+from repro.obs.trace import NULL_TRACER, trace_id_for
 from repro.utils.timing import SimClock
 
 
@@ -43,24 +45,71 @@ class QueueStats:
     dead_letter_bytes: int = 0  # poisoned payload bytes, reported separately
 
 
+class BrokerCounters(StatsShim):
+    """Lifetime broker counters as real metrics (``repro_broker_*``).
+
+    ``deliveries`` counts leases handed out by :meth:`Broker.pull` and
+    ``speculative_clones`` counts :meth:`Broker.speculative_redeliver` copies
+    — together they close the conservation identities the sim's
+    ``MetricsConservation`` checker audits.
+    """
+
+    _SUBSYSTEM = "broker"
+    _FIELDS = (
+        "published",
+        "acked",
+        "redelivered",
+        "deliveries",
+        "speculative_clones",
+        "dead_lettered",
+    )
+
+
 class Broker:
     def __init__(
         self,
         clock: Optional[SimClock] = None,
         visibility_timeout: float = 120.0,
         max_deliveries: int = 5,
+        tracer=None,
+        registry=None,
     ) -> None:
         self.clock = clock or SimClock()
         self.visibility_timeout = visibility_timeout
         self.max_deliveries = max_deliveries
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.counters = BrokerCounters(registry)
         self._ids = itertools.count(1)
         self._available: List[Message] = []
         self._leased: Dict[int, Message] = {}
         self._acked_keys: set[str] = set()
         self.dead_letter: List[Message] = []
-        self.total_published = 0
-        self.total_acked = 0
-        self.total_redelivered = 0
+
+    # lifetime counters kept as properties so existing `broker.total_*`
+    # call sites (and += writes) keep working on top of the metrics shim
+    @property
+    def total_published(self) -> int:
+        return self.counters.published
+
+    @total_published.setter
+    def total_published(self, v: int) -> None:
+        self.counters.published = v
+
+    @property
+    def total_acked(self) -> int:
+        return self.counters.acked
+
+    @total_acked.setter
+    def total_acked(self, v: int) -> None:
+        self.counters.acked = v
+
+    @property
+    def total_redelivered(self) -> int:
+        return self.counters.redelivered
+
+    @total_redelivered.setter
+    def total_redelivered(self, v: int) -> None:
+        self.counters.redelivered = v
 
     # ------------------------------------------------------------ publish
     def publish(self, key: str, payload: Any, nbytes: int = 0) -> int:
@@ -73,6 +122,14 @@ class Broker:
         )
         self._available.append(msg)
         self.total_published += 1
+        # the work item's first delivery attempt owns this trace id; the
+        # publish event carries it so a trace links submit -> worker
+        self.tracer.event(
+            "broker.publish",
+            trace_id=trace_id_for(key, 1),
+            key=key,
+            nbytes=nbytes,
+        )
         return msg.msg_id
 
     # -------------------------------------------------------------- lease
@@ -85,12 +142,26 @@ class Broker:
             m.lease_deadline = None
             if m.deliveries >= self.max_deliveries:
                 self.dead_letter.append(m)
+                self.counters.dead_lettered += 1
+                self.tracer.event(
+                    "broker.dead_letter",
+                    trace_id=trace_id_for(m.key, m.deliveries),
+                    key=m.key,
+                    deliveries=m.deliveries,
+                )
             else:
                 # fresh id per delivery = per-delivery ack token: a stale ack
                 # from the crashed owner can never ack the new lease
                 m.msg_id = next(self._ids)
                 self._available.append(m)
                 self.total_redelivered += 1
+                self.tracer.event(
+                    "broker.redeliver",
+                    trace_id=trace_id_for(m.key, m.deliveries + 1),
+                    key=m.key,
+                    deliveries=m.deliveries,
+                    kind="lease_expired",
+                )
 
     def pull(self, worker_id: str, max_messages: int = 1) -> List[Message]:
         """Lease up to ``max_messages``; invisible to others until ack/timeout.
@@ -104,6 +175,15 @@ class Broker:
             msg.lease_owner = worker_id
             msg.lease_deadline = self.clock.now() + self.visibility_timeout
             self._leased[msg.msg_id] = msg
+            self.counters.deliveries += 1
+            self.tracer.event(
+                "broker.lease",
+                trace_id=trace_id_for(msg.key, msg.deliveries),
+                key=msg.key,
+                deliveries=msg.deliveries,
+                worker=worker_id,
+                visibility=self.visibility_timeout,
+            )
             out.append(Message(**vars(msg)))
         return out
 
@@ -126,6 +206,12 @@ class Broker:
             return False  # lease already expired; redelivery will be deduped
         self._acked_keys.add(msg.key)
         self.total_acked += 1
+        self.tracer.event(
+            "broker.ack",
+            trace_id=trace_id_for(msg.key, msg.deliveries),
+            key=msg.key,
+            deliveries=msg.deliveries,
+        )
         return True
 
     def nack(self, msg_id: int) -> None:
@@ -137,10 +223,24 @@ class Broker:
         msg.lease_deadline = None
         if msg.deliveries >= self.max_deliveries:
             self.dead_letter.append(msg)
+            self.counters.dead_lettered += 1
+            self.tracer.event(
+                "broker.dead_letter",
+                trace_id=trace_id_for(msg.key, msg.deliveries),
+                key=msg.key,
+                deliveries=msg.deliveries,
+            )
         else:
             msg.msg_id = next(self._ids)  # fresh ack token (see _expire_leases)
             self._available.append(msg)
             self.total_redelivered += 1
+            self.tracer.event(
+                "broker.redeliver",
+                trace_id=trace_id_for(msg.key, msg.deliveries + 1),
+                key=msg.key,
+                deliveries=msg.deliveries,
+                kind="nack",
+            )
 
     # -------------------------------------------------------------- stats
     def stats(self) -> QueueStats:
@@ -192,4 +292,12 @@ class Broker:
             publish_time=msg.publish_time,
         )
         self._available.append(clone)
+        self.counters.speculative_clones += 1
+        self.tracer.event(
+            "broker.redeliver",
+            trace_id=trace_id_for(msg.key, msg.deliveries + 1),
+            key=msg.key,
+            deliveries=msg.deliveries,
+            kind="speculative",
+        )
         return clone

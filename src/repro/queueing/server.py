@@ -17,6 +17,7 @@ from typing import Dict, List, Optional, Set
 
 from repro.core.pipeline import build_request
 from repro.core.pseudonym import PseudonymService, TrustMode
+from repro.obs.trace import NULL_TRACER
 from repro.queueing.broker import Broker
 from repro.queueing.journal import Journal
 from repro.storage.object_store import StudyStore
@@ -50,10 +51,13 @@ class DeidService:
         result_lake=None,
         pipeline=None,
         catalog=None,
+        tracer=None,
+        registry=None,
     ) -> None:
         self.broker = broker
         self.lake = lake
         self.journal = journal
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         # optional metadata catalog (repro.catalog.StudyCatalog): enables
         # query-then-de-identify via submit_query
         self.catalog = catalog
@@ -78,6 +82,8 @@ class DeidService:
                 journal,
                 validate=self.validate,
                 ruleset_digest=pipeline.ruleset_fingerprint().digest,
+                tracer=self.tracer,
+                registry=registry,
             )
 
     # -------------------------------------------------------------- studies
@@ -120,6 +126,15 @@ class DeidService:
         if study_id not in self._studies:
             raise KeyError(f"research study {study_id!r} not registered")
         pseudo = self._studies[study_id]
+        out: List[WorkflowRecord] = []
+        with self.tracer.span("service.submit", n=len(accessions)):
+            out = self._submit_traced(pseudo, study_id, accessions, mrn_lookup)
+        return out
+
+    def _submit_traced(
+        self, pseudo: PseudonymService, study_id: str,
+        accessions: List[str], mrn_lookup: Dict[str, str],
+    ) -> List[WorkflowRecord]:
         out: List[WorkflowRecord] = []
         for acc in self._dedupe(accessions):
             ok, reason = self.validate(acc)
@@ -168,12 +183,14 @@ class DeidService:
             raise RuntimeError("no result lake configured; use submit()")
         if study_id not in self._studies:
             raise KeyError(f"research study {study_id!r} not registered")
-        ticket = self.planner.submit(
-            self._studies[study_id],
-            self._dedupe(accessions),
-            mrn_lookup,
-            selection_digest=selection_digest,
-        )
+        with self.tracer.span("service.submit_cohort", n=len(accessions)) as sp:
+            ticket = self.planner.submit(
+                self._studies[study_id],
+                self._dedupe(accessions),
+                mrn_lookup,
+                selection_digest=selection_digest,
+            )
+            sp.set(cohort_id=ticket.cohort_id, cold=len(ticket.cold))
         for acc in ticket.hits:
             self.records.append(
                 WorkflowRecord(study_id, acc, RequestState.DONE)
@@ -199,13 +216,15 @@ class DeidService:
         """
         if self.catalog is None:
             raise RuntimeError("no metadata catalog attached; pass catalog= or set .catalog")
-        selection = self.catalog.select(query)
-        ticket = self.submit_cohort(
-            study_id,
-            list(selection.accessions),
-            mrn_lookup,
-            selection_digest=selection.digest,
-        )
+        with self.tracer.span("service.submit_query") as sp:
+            selection = self.catalog.select(query)
+            sp.set(matched=len(selection.accessions))
+            ticket = self.submit_cohort(
+                study_id,
+                list(selection.accessions),
+                mrn_lookup,
+                selection_digest=selection.digest,
+            )
         return selection, ticket
 
     def request_states(self, study_id: str) -> Dict[str, RequestState]:

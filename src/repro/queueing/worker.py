@@ -20,6 +20,8 @@ from typing import Callable, Dict, List, Optional
 
 from repro.core.manifest import Manifest
 from repro.core.pipeline import DeidPipeline, DeidRequest
+from repro.obs.metrics import StatsShim
+from repro.obs.trace import NULL_TRACER, trace_id_for
 from repro.queueing.autoscaler import Autoscaler
 from repro.queueing.broker import Broker, Message
 from repro.queueing.journal import Journal
@@ -78,9 +80,33 @@ class DeidWorker:
     fenced: int = 0             # stale-byte fences: source mutated mid-compute
     zombie_aborts: int = 0      # lease lost mid-compute: aborted without ack
     evicted_stale: int = 0      # superseded study records dropped from the lake
+    tracer: object = None       # repro.obs Tracer (None -> NULL_TRACER)
 
     def process(self, broker: Broker, msg: Message, injector: Optional[FailureInjector] = None) -> float:
-        """Process one message; returns simulated seconds of work."""
+        """Process one message; returns simulated seconds of work.
+
+        The whole delivery runs under a ``worker.process`` root span whose
+        trace id is derived from (key, delivery attempt) — the same id the
+        broker stamped on this delivery's lease event — with child spans for
+        fetch, de-id compute, lake write-back, and delivery. A crash
+        propagates through the span (recorded as ``error=WorkerCrash``), so
+        chaos runs leave an auditable retry chain across attempts.
+        """
+        tracer = self.tracer if self.tracer is not None else NULL_TRACER
+        with tracer.span(
+            "worker.process",
+            trace_id=trace_id_for(msg.key, msg.deliveries),
+            key=msg.key,
+            attempt=msg.deliveries,
+            worker=self.worker_id,
+        ) as span:
+            seconds = self._process_traced(broker, msg, injector, tracer, span)
+            span.set(busy_s=seconds)
+            return seconds
+
+    def _process_traced(
+        self, broker: Broker, msg: Message, injector, tracer, span
+    ) -> float:
         request = DeidRequest(**msg.payload["request"])
         key = msg.key
         accession = msg.payload["accession"]
@@ -92,6 +118,7 @@ class DeidWorker:
                 # duplicate delivery of completed work: ack, drop (exactly-once)
                 broker.ack(msg.msg_id)
                 self.deduped += 1
+                span.set(deduped=True)
                 return 0.0
             # completed for a *previous* source version: the source mutated
             # since — fall through and re-de-identify (incremental re-deid);
@@ -104,20 +131,25 @@ class DeidWorker:
         # pin the source version alongside the read: the study record must
         # bind results to the bytes we actually de-identified, not whatever
         # the source holds after a concurrent re-ingest
-        source_etag = self.source.study_etag(accession)
-        if source_etag is None:
-            # deleted while queued: nack toward the DLQ so the planner fails
-            # subscribers out instead of leaving them waiting on erased bytes
-            broker.nack(msg.msg_id)
-            self.fenced += 1
-            return 0.0
-        study = self.source.get_study(accession)
+        with tracer.span("worker.fetch", accession=accession) as fetch_span:
+            source_etag = self.source.study_etag(accession)
+            if source_etag is None:
+                # deleted while queued: nack toward the DLQ so the planner fails
+                # subscribers out instead of leaving them waiting on erased bytes
+                broker.nack(msg.msg_id)
+                self.fenced += 1
+                fetch_span.set(fenced=True)
+                span.set(fenced=True)
+                return 0.0
+            study = self.source.get_study(accession)
+            fetch_span.set(nbytes=study.nbytes(), instances=len(study.datasets))
         slowdown = injector.slowdown(self.worker_id, msg) if injector else 1.0
         work_seconds = (study.nbytes() / self.throughput) * slowdown
         batched0 = self.pipeline.executor.stats.instances if self.pipeline.executor else 0
         dstats = self.pipeline.scrub.detect_stats
         unknown0, druns0 = dstats.unknown_lookups, dstats.detector_runs
-        result = self.pipeline.run_study(study, request, self.worker_id)
+        with tracer.span("worker.deid", bytes_in=study.nbytes(), busy_s=work_seconds):
+            result = self.pipeline.run_study(study, request, self.worker_id)
         outputs, manifest = result.delivered, result.manifest
         if self.pipeline.executor is not None:
             self.batched_instances += self.pipeline.executor.stats.instances - batched0
@@ -133,6 +165,7 @@ class DeidWorker:
         # ack token, so delivering or journaling here would race the new owner
         if not broker.extend_lease(msg.msg_id, work_seconds + self.heartbeat_grace):
             self.zombie_aborts += 1
+            span.set(kind="zombie_abort")
             return work_seconds
 
         # stale-byte fence: a source mutation that raced this computation must
@@ -141,17 +174,23 @@ class DeidWorker:
         if self.fence_stale_reads and self.source.study_etag(accession) != source_etag:
             broker.nack(msg.msg_id)
             self.fenced += 1
+            span.set(fenced=True)
             return work_seconds
 
         request_id = f"{request.research_study}/{request.anon_accession}"
-        for ds in outputs:
-            self.dest.put_output(request_id, str(ds.get("SOPInstanceUID", "?")), ds)
-        self._record_study(accession, source_etag, request, result)
+        with tracer.span("worker.deliver", datasets=len(outputs)):
+            for ds in outputs:
+                self.dest.put_output(request_id, str(ds.get("SOPInstanceUID", "?")), ds)
+        with tracer.span("worker.writeback", accession=accession) as wb_span:
+            self._record_study(accession, source_etag, request, result)
+            wb_span.set(lake_hits=result.cache_hits, cold=result.cache_misses)
 
         if self.journal.record_done(key, manifest, self.worker_id, source_etag=source_etag):
             self.processed += 1
+            span.set(ok=True)
         else:
             self.deduped += 1  # lost the first-ack race to a speculative clone
+            span.set(deduped=True)
         broker.ack(msg.msg_id)
         return work_seconds
 
@@ -205,6 +244,13 @@ class PoolReport:
     evicted_stale: int = 0   # superseded study records evicted from the lake
 
 
+class PoolCounters(StatsShim):
+    """Pool-level counters as real metrics (``repro_pool_*``)."""
+
+    _SUBSYSTEM = "pool"
+    _FIELDS = ("crashes", "speculative")
+
+
 class WorkerPool:
     """Autoscaled drain loop with straggler re-dispatch."""
 
@@ -217,6 +263,7 @@ class WorkerPool:
         straggler_age: float = 300.0,
         tick_seconds: float = 5.0,
         max_ticks: int = 100_000,
+        registry=None,
     ) -> None:
         self.broker = broker
         self.autoscaler = autoscaler
@@ -227,8 +274,25 @@ class WorkerPool:
         self.max_ticks = max_ticks
         self.workers: List[DeidWorker] = []
         self._all_workers: List[DeidWorker] = []  # retains counters across scale-down
-        self.crashes = 0
-        self.speculative = 0
+        self.counters = PoolCounters(registry)
+
+    # `pool.crashes` / `pool.speculative` keep their attribute surface on
+    # top of the metrics shim (tests and the fleet report read them)
+    @property
+    def crashes(self) -> int:
+        return self.counters.crashes
+
+    @crashes.setter
+    def crashes(self, v: int) -> None:
+        self.counters.crashes = v
+
+    @property
+    def speculative(self) -> int:
+        return self.counters.speculative
+
+    @speculative.setter
+    def speculative(self, v: int) -> None:
+        self.counters.speculative = v
 
     def _resize(self, n: int) -> None:
         while len(self.workers) < n:

@@ -17,10 +17,13 @@ from repro.sim.invariants import (
     InvariantChecker,
     JournalDurability,
     LakeConsistency,
+    MetricsConservation,
     NoFullReingest,
     NoWedgedSubscribers,
     PhiBoundary,
     QueryConsistency,
+    TelemetryPhiBoundary,
+    TraceIntegrity,
     Violation,
     WarmReplayIdentity,
 )
@@ -54,6 +57,7 @@ __all__ = [
     "InvariantChecker",
     "JournalDurability",
     "LakeConsistency",
+    "MetricsConservation",
     "NoFullReingest",
     "NoWedgedSubscribers",
     "PhiBoundary",
@@ -61,6 +65,8 @@ __all__ = [
     "QueryConsistency",
     "QueryMix",
     "ReplayStorm",
+    "TelemetryPhiBoundary",
+    "TraceIntegrity",
     "Violation",
     "WarmReplayIdentity",
 ]

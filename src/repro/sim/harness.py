@@ -32,6 +32,8 @@ from repro.ingest.checkpoint import Checkpoint
 from repro.ingest.feed import PacsFeed, seeded_mutations
 from repro.ingest.pooler import ChangePooler, IngestApplier, PoolerCrash
 from repro.lake.store import ResultLake
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import NULL_TRACER, Tracer
 from repro.queueing.autoscaler import Autoscaler, AutoscalerConfig
 from repro.queueing.broker import Broker
 from repro.queueing.journal import Journal
@@ -84,6 +86,14 @@ class FleetConfig:
     # stale-byte fencing in the workers (False = the freshness invariant's
     # negative control: pre-mutation bytes may be delivered)
     fence_stale_reads: bool = True
+    # observability plane (DESIGN.md §11): deterministic tracing on the sim
+    # clock plus the telemetry negative-control knobs. ``trace=False`` swaps
+    # in the NULL_TRACER (zero clock reads, zero behavior change);
+    # ``telemetry_redact=False`` + ``plant_telemetry_phi=True`` is the
+    # TelemetryPhiBoundary checker's negative control
+    trace: bool = True
+    telemetry_redact: bool = True
+    plant_telemetry_phi: bool = False
 
 
 @dataclass
@@ -92,6 +102,10 @@ class FleetReport:
     log_digest: str
     metrics: Dict[str, float]
     violations: List[Violation]
+    # digest over the finished-span stream (repro.obs.Tracer.digest): the
+    # trace-layer half of the replayability contract. Kept out of ``metrics``
+    # so metric-equality assertions stay about fleet behavior.
+    trace_digest: str = ""
 
     def ok(self) -> bool:
         return not self.violations
@@ -110,12 +124,18 @@ class FleetSim:
         self.chaos = chaos or ChaosSchedule.quiet()
         self.clock = SimClock()
         self.log = EventLog()
+        # --- observability plane: one tracer (sim clock) + one metrics
+        # registry shared by every component, parallel to the event log —
+        # spans never feed the log, so enabling tracing cannot move the
+        # log digest
+        self.registry = MetricsRegistry()
+        self.tracer = Tracer(self.clock) if config.trace else NULL_TRACER
 
         # --- corpus: the identified data lake, with PHI ground truth retained
         self.gen = StudyGenerator(config.seed)
         self.source = StudyStore("lake", key=b"sim-at-rest-key")
         # metadata catalog indexes every ingest (incl. chaos re-ingests)
-        self.catalog = StudyCatalog()
+        self.catalog = StudyCatalog(tracer=self.tracer)
         self.source.attach_catalog(self.catalog)
         self.mrns: Dict[str, str] = {}
         self._versions: List[SyntheticStudy] = []  # every ingest, incl. re-ingests
@@ -149,12 +169,24 @@ class FleetSim:
         for i in range(config.n_studies):
             acc = f"SIM{i:04d}"
             self._ingest(self.gen, acc)
+        if config.plant_telemetry_phi and self._versions:
+            # TelemetryPhiBoundary negative control: a debug span carrying
+            # real PHI under a NON-allowlisted key. With redaction on, the
+            # exporter drops it; with redaction off, the checker must catch it
+            planted = self._versions[0]
+            self.tracer.event(
+                "debug.dump",
+                note=f"patient={planted.patient_name} mrn={planted.mrn}",
+                accession=planted.accession,
+            )
 
         # --- the real control/data plane, wired exactly like production
         self.broker = Broker(
             self.clock,
             visibility_timeout=config.visibility_timeout,
             max_deliveries=config.max_deliveries,
+            tracer=self.tracer,
+            registry=self.registry,
         )
         self.journal = Journal(journal_path)
         # the ingest plane gets its own queue: feed events and de-id work are
@@ -162,20 +194,23 @@ class FleetSim:
         self.ingest_broker: Optional[Broker] = None
         if self.feed is not None:
             self.ingest_broker = Broker(
-                self.clock, visibility_timeout=config.visibility_timeout
+                self.clock, visibility_timeout=config.visibility_timeout,
+                tracer=self.tracer, registry=self.registry,
             )
             self._build_ingest_process()
-        self.lake = ResultLake(max_bytes=config.lake_bytes)
+        self.lake = ResultLake(max_bytes=config.lake_bytes, registry=self.registry)
         self.policy = DetectorPolicy(mode=config.detector_mode)
         self.pipeline = DeidPipeline(
             recompress=config.recompress, lake=self.lake,
             detector_policy=self.policy,
+            tracer=self.tracer, registry=self.registry,
         )
         self.dest = StudyStore("researcher")
         self.service = DeidService(
             self.broker, self.source, self.journal,
             result_lake=self.lake, pipeline=self.pipeline,
             catalog=self.catalog,
+            tracer=self.tracer, registry=self.registry,
         )
         for arr in self.traffic:
             if arr.study_id not in self.service._studies:
@@ -198,6 +233,7 @@ class FleetSim:
             self.injector,
             straggler_age=config.straggler_age,
             tick_seconds=config.tick_seconds,
+            registry=self.registry,
         )
 
         self.tickets: List[Tuple[object, object]] = []  # (arrival, ticket)
@@ -292,8 +328,13 @@ class FleetSim:
             base_backoff=cfg.pooler_base_backoff,
             breaker_threshold=cfg.pooler_breaker_threshold,
             breaker_cooldown=cfg.pooler_breaker_cooldown,
+            tracer=self.tracer,
+            registry=self.registry,
         )
-        self.applier = IngestApplier(self.ingest_broker, self.feed, self.source, ckpt)
+        self.applier = IngestApplier(
+            self.ingest_broker, self.feed, self.source, ckpt,
+            tracer=self.tracer, registry=self.registry,
+        )
 
     def _rebuild_ingest_process(self) -> None:
         """Pooler crash recovery: every in-memory cursor dies with the
@@ -615,6 +656,8 @@ class FleetSim:
                 recompress=self.config.recompress,
                 lake=self.lake,
                 detector_policy=self.policy,
+                tracer=self.tracer,
+                registry=self.registry,
             )
             # planner admissions and new workers move to the edited ruleset
             # atomically; in-flight workers finish under the old one (their
@@ -726,6 +769,7 @@ class FleetSim:
             log_digest=self.log.digest(),
             metrics=metrics,
             violations=violations,
+            trace_digest=self.tracer.digest(),
         )
 
 
@@ -757,6 +801,7 @@ class DeidWorkerProxyFactory:
             wid, self.sim.pipeline, self.sim.source, self.sim.dest,
             self.sim.journal, throughput=self.sim.config.worker_throughput,
             fence_stale_reads=self.sim.config.fence_stale_reads,
+            tracer=self.sim.tracer,
         )
         w._sim = self.sim
         return w

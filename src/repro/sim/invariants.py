@@ -526,6 +526,194 @@ class NoFullReingest(InvariantChecker):
         return out
 
 
+class TraceIntegrity(InvariantChecker):
+    """The trace layer must be structurally sound and complete: no span left
+    open at end of run, every timestamp within [0, final sim time] with
+    ``t1 >= t0``, every ``parent_id`` resolving to an earlier-started span of
+    the *same* trace, and every journal-completed key carrying at least one
+    ``worker.process`` span (a completion that left no trace is untraceable
+    work). Skipped when the run was configured with ``trace=False`` — the
+    NULL_TRACER records nothing by design."""
+
+    name = "trace_integrity"
+
+    def check(self, sim: "FleetSim") -> List[Violation]:
+        tracer = getattr(sim, "tracer", None)
+        if tracer is None or not getattr(tracer, "enabled", False):
+            return []
+        out: List[Violation] = []
+        if tracer.open_count != 0:
+            open_names = [s.name for s in tracer._stack]
+            out.append(
+                self._v(
+                    f"{tracer.open_count} span(s) still open at end of run: "
+                    f"{open_names}"
+                )
+            )
+        now = sim.clock.now()
+        spans = tracer.spans()
+        by_trace: Dict[str, Dict[str, object]] = {}
+        for s in spans:
+            by_trace.setdefault(s.trace_id, {})[s.span_id] = s
+        for s in spans:
+            if s.t1 is None:
+                out.append(self._v(f"{s.span_id} ({s.name}): finished without t1"))
+                continue
+            if not (0.0 <= s.t0 <= s.t1 <= now + 1e-9):
+                out.append(
+                    self._v(
+                        f"{s.span_id} ({s.name}): timestamps [{s.t0}, {s.t1}] "
+                        f"outside the run's clock range [0, {now}]"
+                    )
+                )
+            if s.parent_id is not None:
+                parent = by_trace[s.trace_id].get(s.parent_id)
+                if parent is None:
+                    out.append(
+                        self._v(
+                            f"{s.span_id} ({s.name}): parent {s.parent_id} not "
+                            f"in trace {s.trace_id} (dangling parent)"
+                        )
+                    )
+                elif parent.seq >= s.seq:
+                    out.append(
+                        self._v(
+                            f"{s.span_id} ({s.name}): parent {s.parent_id} "
+                            "started after its child (inverted parentage)"
+                        )
+                    )
+        traced_keys = {
+            s.attrs.get("key") for s in spans if s.name == "worker.process"
+        }
+        untraced = sim.journal.completed_keys() - traced_keys
+        if untraced:
+            out.append(
+                self._v(
+                    "journal-completed keys with no worker.process span: "
+                    f"{sorted(untraced)}"
+                )
+            )
+        return out
+
+
+class TelemetryPhiBoundary(InvariantChecker):
+    """PHI must never cross the telemetry exporters: every span/metric export
+    surface (JSONL spans, JSONL metrics, Chrome trace), rendered through the
+    run's configured redaction, must be free of any MRN or patient name of
+    any source version ever ingested. This is the *export* analogue of
+    :class:`PhiBoundary` — the trace may internally reference study keys (the
+    fleet's own identifiers), but identified-patient tokens in exported bytes
+    are a violation. With ``telemetry_redact=False`` and planted PHI this
+    checker must fire (its negative control)."""
+
+    name = "telemetry_phi_boundary"
+
+    def check(self, sim: "FleetSim") -> List[Violation]:
+        tracer = getattr(sim, "tracer", None)
+        if tracer is None:
+            return []
+        import json
+
+        from repro.obs.export import (
+            Redactor,
+            export_metrics_jsonl,
+            export_spans_jsonl,
+            to_chrome_trace,
+        )
+
+        redactor = Redactor(enabled=getattr(sim.config, "telemetry_redact", True))
+        spans = tracer.spans()
+        exported = export_spans_jsonl(spans, redactor)
+        registry = getattr(sim, "registry", None)
+        if registry is not None:
+            exported += export_metrics_jsonl(registry.snapshot(), redactor)
+        exported += json.dumps(to_chrome_trace(spans, redactor), sort_keys=True)
+        out: List[Violation] = []
+        for token, what in PhiBoundary()._forbidden(sim).items():
+            text = token.decode()
+            if text and text in exported:
+                out.append(
+                    self._v(f"exported telemetry contains {what} ({text!r})")
+                )
+        return out
+
+
+class MetricsConservation(InvariantChecker):
+    """Flow counters must balance exactly — work is neither minted nor lost
+    between subsystems:
+
+    * planner admission: every admitted accession lands in exactly one bin
+      (``accessions == lake_hits + journal_hits + coalesced + published +
+      rejected``), and every publish reaches exactly one terminal state
+      (``published == resolved + dead_lettered + still-in-flight``);
+    * broker copy conservation (both queues): every message copy entering a
+      broker (``published + speculative_clones``) is acked, dead-lettered, or
+      still outstanding;
+    * delivery accounting: every serve-queue delivery the broker handed out
+      was terminally handled by a worker (processed / deduped / fenced /
+      zombie-aborted) or died in a crash;
+    * registry aggregation: the shared registry's summed series must agree
+      with the per-instance counters it aggregates.
+    """
+
+    name = "metrics_conservation"
+
+    def _balance(self, what: str, lhs: int, rhs: int, detail: str) -> List[Violation]:
+        if lhs != rhs:
+            return [self._v(f"{what}: {lhs} != {rhs} ({detail})")]
+        return []
+
+    def check(self, sim: "FleetSim") -> List[Violation]:
+        out: List[Violation] = []
+        ps = sim.service.planner.stats
+        out += self._balance(
+            "planner admission",
+            ps.accessions,
+            ps.lake_hits + ps.journal_hits + ps.coalesced + ps.published + ps.rejected,
+            "accessions vs lake_hits+journal_hits+coalesced+published+rejected",
+        )
+        out += self._balance(
+            "planner in-flight lifecycle",
+            ps.published,
+            ps.resolved + ps.dead_lettered + len(sim.service.planner._inflight),
+            "published vs resolved+dead_lettered+in_flight",
+        )
+        brokers = [("serve broker", sim.broker)]
+        if getattr(sim, "ingest_broker", None) is not None:
+            brokers.append(("ingest broker", sim.ingest_broker))
+        for label, broker in brokers:
+            c, st = broker.counters, broker.stats()
+            out += self._balance(
+                f"{label} copy conservation",
+                c.published + c.speculative_clones,
+                c.acked + c.dead_lettered + st.available + st.leased,
+                "published+speculative vs acked+dead_lettered+outstanding",
+            )
+        handled = (
+            sum(
+                w.processed + w.deduped + w.fenced + w.zombie_aborts
+                for w in sim.pool._all_workers
+            )
+            + sim.pool.crashes
+        )
+        out += self._balance(
+            "serve delivery accounting",
+            sim.broker.counters.deliveries,
+            handled,
+            "broker deliveries vs worker processed+deduped+fenced+zombie+crashes",
+        )
+        registry = getattr(sim, "registry", None)
+        if registry is not None:
+            want = sum(b.counters.published for _, b in brokers)
+            out += self._balance(
+                "registry aggregation",
+                registry.value("repro_broker_published"),
+                want,
+                "summed repro_broker_published vs per-broker counters",
+            )
+        return out
+
+
 DEFAULT_CHECKERS = (
     ExactlyOnceDelivery(),
     PhiBoundary(),
@@ -538,4 +726,7 @@ DEFAULT_CHECKERS = (
     CheckpointMonotonicity(),
     Freshness(),
     NoFullReingest(),
+    TraceIntegrity(),
+    TelemetryPhiBoundary(),
+    MetricsConservation(),
 )

@@ -1,0 +1,336 @@
+"""Observability plane units (DESIGN.md §11): deterministic tracer, typed
+metrics + shims, the PHI redaction contract, and the Clock protocol every
+clock-consuming layer is held to."""
+import hashlib
+import json
+import logging
+
+import pytest
+
+from repro.obs import (
+    NULL_TRACER,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    NullTracer,
+    Redactor,
+    StatsShim,
+    Tracer,
+    export_metrics_jsonl,
+    export_spans_jsonl,
+    to_chrome_trace,
+    trace_id_for,
+)
+from repro.obs.export import ALLOWED_ATTR_KEYS, REDACTED
+from repro.utils.logging import KvFormatter, get_logger, kv
+from repro.utils.timing import Clock, SimClock, Timer, WallClock
+
+
+# ------------------------------------------------------------------- tracer
+class TestTracer:
+    def _scripted(self):
+        clock = SimClock()
+        tracer = Tracer(clock)
+        with tracer.span("service.submit", n=3):
+            clock.advance(1.5)
+            with tracer.span("planner.partition", cohort_id=1) as inner:
+                clock.advance(0.25)
+                inner.set(cold=2)
+        tracer.event("broker.publish", trace_id=trace_id_for("IRB/A", 1), key="IRB/A")
+        return tracer
+
+    def test_digest_is_bit_identical_across_runs(self):
+        assert self._scripted().digest() == self._scripted().digest()
+
+    def test_digest_moves_with_any_change(self):
+        base = self._scripted()
+        other = self._scripted()
+        other.event("extra.event")
+        assert base.digest() != other.digest()
+
+    def test_ids_are_deterministic_not_random(self):
+        tracer = self._scripted()
+        assert [s.span_id for s in tracer.spans()] == ["s00000002", "s00000001", "s00000003"]
+        assert trace_id_for("IRB/A", 1) == trace_id_for("IRB/A", 1)
+        assert trace_id_for("IRB/A", 1) != trace_id_for("IRB/A", 2)
+        assert trace_id_for("IRB/A") == hashlib.sha256(b"trace|IRB/A|1").hexdigest()[:16]
+
+    def test_stack_parenting_and_trace_inheritance(self):
+        tracer = self._scripted()
+        root = tracer.spans("service.submit")[0]
+        child = tracer.spans("planner.partition")[0]
+        assert root.parent_id is None
+        assert child.parent_id == root.span_id
+        assert child.trace_id == root.trace_id  # inherited
+        assert child.t0 == 1.5 and child.t1 == 1.75
+        assert root.t0 == 0.0 and root.t1 == 1.75
+
+    def test_explicit_trace_id_breaks_parent_linkage(self):
+        clock = SimClock()
+        tracer = Tracer(clock)
+        with tracer.span("outer"):
+            with tracer.span("inner", trace_id=trace_id_for("K", 2)) as h:
+                pass
+        inner = tracer.spans("inner")[0]
+        # different trace: no cross-trace parent pointer
+        assert inner.parent_id is None
+        assert inner.trace_id == trace_id_for("K", 2)
+
+    def test_exception_recorded_and_propagated(self):
+        tracer = Tracer(SimClock())
+        with pytest.raises(ValueError):
+            with tracer.span("doomed"):
+                raise ValueError("boom")
+        span = tracer.spans("doomed")[0]
+        assert span.attrs["error"] == "ValueError"
+        assert tracer.open_count == 0
+
+    def test_event_is_zero_duration(self):
+        tracer = self._scripted()
+        ev = tracer.spans("broker.publish")[0]
+        assert ev.duration == 0.0 and ev.t0 == ev.t1
+
+    def test_null_tracer_is_inert(self):
+        handle = NULL_TRACER.span("anything", key="x")
+        with handle as h:
+            h.set(n=1)
+        assert NULL_TRACER.spans() == []
+        assert NULL_TRACER.open_count == 0
+        assert NULL_TRACER.digest() == hashlib.sha256(b"").hexdigest()
+        assert isinstance(NULL_TRACER, NullTracer)
+        # never touches a clock (it has none to touch)
+        assert NULL_TRACER.clock is None
+
+
+# ------------------------------------------------------------------ metrics
+class TestMetrics:
+    def test_name_convention_is_enforced(self):
+        with pytest.raises(ValueError):
+            Counter("not_namespaced")
+        with pytest.raises(ValueError):
+            Counter("repro_Upper_bad")
+
+    def test_counter_labels_and_value(self):
+        c = Counter("repro_test_hits")
+        c.inc()
+        c.inc(2, modality="CT")
+        c.inc(1, modality="MR")
+        assert c.value == 1
+        assert c.series() == {"": 1, '{modality="CT"}': 2, '{modality="MR"}': 1}
+
+    def test_gauge_set_inc_dec(self):
+        g = Gauge("repro_test_depth")
+        g.set(5)
+        g.inc(2)
+        g.dec()
+        assert g.value == 6
+
+    def test_histogram_buckets_cumulative_in_snapshot(self):
+        reg = MetricsRegistry()
+        h = Histogram("repro_test_latency", registry=reg, buckets=(0.1, 1.0))
+        for v in (0.05, 0.5, 0.5, 5.0):
+            h.observe(v)
+        snap = reg.snapshot()
+        assert snap["repro_test_latency_count"] == 4
+        assert snap["repro_test_latency_sum"] == pytest.approx(6.05)
+        assert snap['repro_test_latency_bucket{le="0.1"}'] == 1
+        assert snap['repro_test_latency_bucket{le="1.0"}'] == 3
+        assert snap['repro_test_latency_bucket{le="+Inf"}'] == 4
+
+    def test_registry_sums_across_family_instances(self):
+        """Prometheus multiprocess model: many components own the same
+        family; the registry aggregates while each instance stays exact."""
+        reg = MetricsRegistry()
+        a = Counter("repro_test_runs", registry=reg)
+        b = Counter("repro_test_runs", registry=reg)
+        a.inc(3)
+        b.inc(4)
+        assert a.value == 3 and b.value == 4
+        assert reg.value("repro_test_runs") == 7
+        assert reg.snapshot()["repro_test_runs"] == 7
+
+    def test_snapshot_is_sorted_and_deterministic(self):
+        reg = MetricsRegistry()
+        Counter("repro_test_b", registry=reg).inc()
+        Counter("repro_test_a", registry=reg).inc()
+        keys = list(reg.snapshot())
+        assert keys == sorted(keys)
+
+
+class _DemoStats(StatsShim):
+    _SUBSYSTEM = "demo"
+    _FIELDS = ("hits", "misses")
+
+
+class TestStatsShim:
+    def test_attribute_surface_routes_to_counters(self):
+        s = _DemoStats()
+        s.hits += 3
+        s.misses = 2
+        assert (s.hits, s.misses) == (3, 2)
+        assert isinstance(s.hits, int)
+        assert s.as_dict() == {"hits": 3, "misses": 2}
+        assert "hits=3" in repr(s)
+
+    def test_shared_registry_aggregation(self):
+        reg = MetricsRegistry()
+        s1, s2 = _DemoStats(reg), _DemoStats(reg)
+        s1.hits += 1
+        s2.hits += 5
+        assert reg.value("repro_demo_hits") == 6
+        assert s1.hits == 1  # per-instance reads stay exact
+
+    def test_standalone_shim_gets_private_registry(self):
+        s = _DemoStats()
+        assert s.registry.value("repro_demo_hits") == 0
+        s.hits += 1
+        assert s.registry.value("repro_demo_hits") == 1
+
+    def test_unknown_field_raises(self):
+        with pytest.raises(AttributeError):
+            _DemoStats().nope
+
+
+# ---------------------------------------------------------------- redaction
+class TestRedactor:
+    def test_non_allowlisted_keys_are_dropped(self):
+        red = Redactor()
+        out = red.attrs({"key": "IRB/A", "note": "patient=DOE^JOHN"})
+        assert out == {"key": "IRB/A"}  # 'note' dropped, key AND value
+
+    def test_free_text_values_blocked_even_on_allowed_keys(self):
+        red = Redactor()
+        assert red.safe_value("DOE^JOHN") == REDACTED
+        assert red.safe_value("two words") == REDACTED
+        assert red.safe_value("x" * 65) == REDACTED
+        assert red.safe_value("IRB-T/SIM0001#3") == "IRB-T/SIM0001#3"
+        assert red.safe_value(17) == 17
+        assert red.safe_value(None) is None
+        assert red.safe_value(["ok", "BAD VALUE"]) == ["ok", REDACTED]
+
+    def test_disabled_passthrough_exists_for_negative_control(self):
+        red = Redactor(enabled=False)
+        attrs = {"note": "patient=DOE^JOHN"}
+        assert red.attrs(attrs) == attrs
+
+    def test_every_allowed_key_is_a_code_literal(self):
+        assert all(k.isidentifier() for k in ALLOWED_ATTR_KEYS)
+
+
+class TestExport:
+    def _traced(self):
+        clock = SimClock()
+        tracer = Tracer(clock)
+        with tracer.span("worker.process", trace_id=trace_id_for("IRB/A", 1),
+                         key="IRB/A", note="patient=DOE^JOHN") as sp:
+            clock.advance(2.0)
+            sp.set(ok=True)
+        return tracer
+
+    def test_spans_jsonl_is_redacted_and_parseable(self):
+        tracer = self._traced()
+        text = export_spans_jsonl(tracer.spans(), Redactor())
+        assert "DOE^JOHN" not in text
+        (rec,) = [json.loads(line) for line in text.splitlines()]
+        assert rec["name"] == "worker.process"
+        assert rec["attrs"] == {"key": "IRB/A", "ok": True}
+
+    def test_metrics_jsonl_redacts_label_values(self):
+        reg = MetricsRegistry()
+        c = Counter("repro_test_scans", registry=reg)
+        c.inc(1, device="GE MEDICAL^SYS")
+        text = export_metrics_jsonl(reg.snapshot(), Redactor())
+        (rec,) = [json.loads(line) for line in text.splitlines()]
+        assert rec["metric"] == "repro_test_scans"
+        assert rec["labels"]["device"] == REDACTED
+        assert rec["value"] == 1
+
+    def test_chrome_trace_shape(self):
+        tracer = self._traced()
+        doc = to_chrome_trace(tracer.spans(), Redactor())
+        assert doc["displayTimeUnit"] == "ms"
+        slices = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+        assert slices and slices[0]["dur"] == pytest.approx(2e6)
+        assert "note" not in slices[0]["args"]
+        assert any(e["ph"] == "M" for e in doc["traceEvents"])  # thread names
+
+
+# ----------------------------------------------------------- clock protocol
+class TestClockProtocol:
+    """Satellite: every clock-consuming layer accepts both SimClock and
+    WallClock through the structural Clock protocol."""
+
+    def test_both_clocks_satisfy_protocol(self):
+        assert isinstance(SimClock(), Clock)
+        assert isinstance(WallClock(), Clock)
+
+    @pytest.mark.parametrize("make_clock", [SimClock, WallClock])
+    def test_broker_and_autoscaler_accept_either_clock(self, make_clock):
+        from repro.queueing import Autoscaler, AutoscalerConfig, Broker
+
+        clock = make_clock()
+        broker = Broker(clock, visibility_timeout=60.0)
+        broker.publish(key="IRB/A", payload={"accession": "A"}, nbytes=10)
+        scaler = Autoscaler(broker, AutoscalerConfig(), clock)
+        assert scaler.tick() >= 1
+        (msg,) = broker.pull("w0", max_messages=1)
+        broker.ack(msg.msg_id)
+        assert broker.empty()
+
+    @pytest.mark.parametrize("make_clock", [SimClock, WallClock])
+    def test_tracer_accepts_either_clock(self, make_clock):
+        tracer = Tracer(make_clock())
+        with tracer.span("x"):
+            pass
+        (span,) = tracer.spans()
+        assert span.t1 >= span.t0
+
+    def test_timer_is_reentrant(self):
+        clock = SimClock()
+        t = Timer(clock)
+        with t:
+            clock.advance(5.0)
+            with t:
+                clock.advance(1.0)
+            assert t.seconds == 1.0  # inner region, not a clobbered outer
+            clock.advance(2.0)
+        assert t.seconds == 8.0  # outer region survived the nesting
+
+    def test_timer_wallclock_default_still_works(self):
+        with Timer() as t:
+            pass
+        assert t.seconds >= 0.0
+
+
+# ------------------------------------------------------------------ logging
+class TestLoggingShim:
+    def test_configuration_is_idempotent(self):
+        get_logger("obs.test")
+        root = logging.getLogger("repro")
+        marked = [h for h in root.handlers if getattr(h, "_repro_kv_handler", False)]
+        get_logger("obs.test2")
+        get_logger("obs.test3")
+        marked_after = [
+            h for h in root.handlers if getattr(h, "_repro_kv_handler", False)
+        ]
+        assert len(marked) == len(marked_after) == 1
+
+    def test_level_rereads_env_instead_of_latching(self, monkeypatch):
+        monkeypatch.setenv("REPRO_LOG", "DEBUG")
+        get_logger("obs.lvl")
+        assert logging.getLogger("repro").level == logging.DEBUG
+        monkeypatch.setenv("REPRO_LOG", "WARNING")
+        get_logger("obs.lvl")  # same process, new level applied
+        assert logging.getLogger("repro").level == logging.WARNING
+
+    def test_kv_formatter_appends_sorted_pairs(self):
+        fmt = KvFormatter("%(message)s")
+        record = logging.LogRecord(
+            "repro.t", logging.INFO, __file__, 1, "served", None, None
+        )
+        record.kv = kv(cohort=4, accession="SIM0001")["kv"]
+        assert fmt.format(record) == "served accession=SIM0001 cohort=4"
+
+    def test_kv_helper_shape(self):
+        assert kv(a=1) == {"kv": {"a": 1}}

@@ -28,6 +28,7 @@ from repro.sim import (
     Freshness,
     JournalDurability,
     LakeConsistency,
+    MetricsConservation,
     NoFullReingest,
     NoWedgedSubscribers,
     PhiBoundary,
@@ -35,6 +36,8 @@ from repro.sim import (
     QueryConsistency,
     QueryMix,
     ReplayStorm,
+    TelemetryPhiBoundary,
+    TraceIntegrity,
     WarmReplayIdentity,
 )
 
@@ -606,3 +609,177 @@ class TestUnknownDeviceDetection:
         _, r2 = self._run(tmp_path, "ud_rep_b", "registry_first", seed=11)
         assert r1.log_digest == r2.log_digest
         assert r1.metrics == r2.metrics
+
+
+# ------------------------------------------------- observability (DESIGN §11)
+class TestTraceDeterminism:
+    """The trace layer rides the same replayability contract as the event
+    log: same seed -> bit-identical trace digest, and disabling tracing must
+    change NOTHING about fleet behavior."""
+
+    def _chaos_sim(self, tmp_path, name, seed=9, **cfg_kw):
+        corpus = [f"SIM{i:04d}" for i in range(5)]
+        traffic = BurstyTraffic(
+            n_bursts=2, cohorts_per_burst=2, cohort_size=3
+        ).schedule(corpus, seed=seed)
+        chaos = ChaosSchedule.seeded(seed, horizon=400.0, corpus=corpus)
+        return _tiny(tmp_path, name, seed=seed, n_studies=5,
+                     traffic=traffic, chaos=chaos, **cfg_kw)
+
+    def test_same_seed_same_trace_digest(self, tmp_path):
+        r1 = self._chaos_sim(tmp_path, "tr_a").run()
+        r2 = self._chaos_sim(tmp_path, "tr_b").run()
+        assert r1.trace_digest == r2.trace_digest
+        assert r1.ok() and r2.ok()
+
+    def test_different_seed_different_trace_digest(self, tmp_path):
+        r1 = self._chaos_sim(tmp_path, "tr_s1", seed=3).run()
+        r2 = self._chaos_sim(tmp_path, "tr_s2", seed=4).run()
+        assert r1.trace_digest != r2.trace_digest
+
+    def test_trace_disabled_is_zero_behavior_change(self, tmp_path):
+        r_on = self._chaos_sim(tmp_path, "tr_on", trace=True).run()
+        r_off = self._chaos_sim(tmp_path, "tr_off", trace=False).run()
+        # identical fleet behavior, bit for bit
+        assert r_on.log_digest == r_off.log_digest
+        assert r_on.metrics == r_off.metrics
+        assert r_off.ok()
+        # ...but the disabled tracer records nothing (digest of zero spans)
+        import hashlib
+        assert r_off.trace_digest == hashlib.sha256(b"").hexdigest()
+        assert r_on.trace_digest != r_off.trace_digest
+
+    def test_chaos_crash_leaves_auditable_retry_chain(self, tmp_path):
+        from repro.obs.trace import trace_id_for
+
+        chaos = ChaosSchedule([
+            ChaosEvent(0.0, "crash_keys", {"accessions": ["SIM0001"]}),
+        ])
+        sim = _tiny(tmp_path, "tr_retry", chaos=chaos)
+        report = sim.run()
+        assert report.ok(), [v.detail for v in report.violations]
+        key = "IRB-T/SIM0001"
+        attempts = [s for s in sim.tracer.spans("worker.process")
+                    if s.attrs.get("key") == key]
+        assert len(attempts) >= 2
+        by_attempt = {s.attrs["attempt"]: s for s in attempts}
+        # attempt 1 crashed and the span recorded it; a later attempt finished
+        assert by_attempt[1].attrs.get("error") == "WorkerCrash"
+        assert any(s.attrs.get("ok") for s in attempts)
+        # each attempt roots its own derived trace id, matching the broker's
+        # lease events, and the redeliver event points at the NEXT attempt
+        for s in attempts:
+            assert s.trace_id == trace_id_for(key, s.attrs["attempt"])
+        redelivers = [s for s in sim.tracer.spans("broker.redeliver")
+                      if s.attrs.get("key") == key]
+        assert any(s.trace_id == trace_id_for(key, 2) for s in redelivers)
+        # child spans parent correctly under their attempt's root
+        ok_attempt = next(s for s in attempts if s.attrs.get("ok"))
+        children = [s for s in sim.tracer.spans()
+                    if s.parent_id == ok_attempt.span_id]
+        names = {s.name for s in children}
+        assert {"worker.fetch", "worker.deid", "worker.deliver"} <= names
+        assert all(s.trace_id == ok_attempt.trace_id for s in children)
+
+    def test_trace_integrity_catches_open_and_dangling_spans(self, tmp_path):
+        from repro.obs.trace import Span
+
+        sim = _tiny(tmp_path, "neg_trace")
+        assert sim.run().ok()
+        # a span never closed...
+        sim.tracer.span("left.open")
+        # ...and a finished span whose parent does not exist in its trace
+        sim.tracer.finished.append(Span(
+            trace_id="rootdeadbeef", span_id="s99999999",
+            parent_id="s88888888", name="orphan", t0=1.0, t1=2.0, seq=99999999,
+        ))
+        violations = TraceIntegrity().check(sim)
+        assert any("still open" in v.detail for v in violations)
+        assert any("dangling parent" in v.detail for v in violations)
+
+    def test_trace_integrity_catches_untraced_completion(self, tmp_path):
+        sim = _tiny(tmp_path, "neg_trace2")
+        assert sim.run().ok()
+        # forge a worker.process span's key away: the journal completion for
+        # that key now has no trace
+        span = next(s for s in sim.tracer.spans("worker.process")
+                    if s.attrs.get("ok"))
+        span.attrs["key"] = "IRB-T/FORGED"
+        assert any(
+            "no worker.process span" in v.detail
+            for v in TraceIntegrity().check(sim)
+        )
+
+
+class TestTelemetryPhiBoundary:
+    def test_redaction_on_passes_with_planted_phi(self, tmp_path):
+        report = _tiny(
+            tmp_path, "phi_red_on", plant_telemetry_phi=True
+        ).run()
+        assert report.ok(), [v.detail for v in report.violations]
+
+    def test_negative_control_redaction_off_fails(self, tmp_path):
+        report = _tiny(
+            tmp_path, "phi_red_off",
+            plant_telemetry_phi=True, telemetry_redact=False,
+        ).run()
+        tel = [v for v in report.violations
+               if v.checker == "telemetry_phi_boundary"]
+        assert tel and any(
+            "MRN" in v.detail or "patient name" in v.detail for v in tel
+        )
+
+    def test_exported_spans_carry_no_free_text_even_unredacted_keys(self, tmp_path):
+        """Every attribute the instrumentation emits under redaction must
+        survive as an allowlisted key with an identifier-safe value — the
+        exporter never has to fall back to ``[redacted]`` on a healthy run."""
+        from repro.obs.export import REDACTED, Redactor
+        import json as _json
+
+        sim = _tiny(tmp_path, "phi_clean")
+        assert sim.run().ok()
+        red = Redactor()
+        for s in sim.tracer.spans():
+            for k, v in red.attrs(s.attrs).items():
+                assert v != REDACTED, (s.name, k, s.attrs[k])
+
+
+class TestMetricsConservation:
+    def test_chaos_run_balances(self, tmp_path):
+        corpus = [f"SIM{i:04d}" for i in range(5)]
+        traffic = BurstyTraffic(
+            n_bursts=2, cohorts_per_burst=2, cohort_size=3
+        ).schedule(corpus, seed=7)
+        chaos = ChaosSchedule.seeded(7, horizon=400.0, corpus=corpus)
+        sim = _tiny(tmp_path, "cons_chaos", seed=7, n_studies=5,
+                    traffic=traffic, chaos=chaos, feed_mutations=8)
+        report = sim.run()
+        assert report.ok(), [v.detail for v in report.violations]
+        assert not MetricsConservation().check(sim)
+
+    def test_negative_control_minted_broker_copy(self, tmp_path):
+        sim = _tiny(tmp_path, "neg_cons1")
+        assert sim.run().ok()
+        sim.broker.counters.published += 1  # a copy that never existed
+        assert any(
+            "copy conservation" in v.detail
+            for v in MetricsConservation().check(sim)
+        )
+
+    def test_negative_control_lost_planner_admission(self, tmp_path):
+        sim = _tiny(tmp_path, "neg_cons2")
+        assert sim.run().ok()
+        sim.service.planner.stats.accessions += 1  # admission with no bin
+        assert any(
+            "planner admission" in v.detail
+            for v in MetricsConservation().check(sim)
+        )
+
+    def test_negative_control_unhandled_delivery(self, tmp_path):
+        sim = _tiny(tmp_path, "neg_cons3")
+        assert sim.run().ok()
+        sim.pool._all_workers[0].deduped += 1  # handling with no delivery
+        assert any(
+            "delivery accounting" in v.detail
+            for v in MetricsConservation().check(sim)
+        )
