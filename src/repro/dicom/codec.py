@@ -8,15 +8,21 @@ Huffman entropy coding. We implement the same two-phase structure:
   oracle for the Pallas ``kernels/jls`` TPU kernel (prediction is pointwise on
   shifted planes, a perfect VPU workload);
 * **entropy coding** — Golomb-Rice with per-image parameter + escape codes.
-  Entropy coding is sequential bit-packing with no TPU analogue (see
-  DESIGN.md §3); it stays on the host, exactly like the paper keeps it on CPU.
+  The coder is split into two phases (DESIGN.md §12): a **plan** phase
+  (:func:`rice_plan`) that derives the zigzag magnitudes, the Rice parameter
+  ``k``, per-symbol code lengths, and their prefix-sum bit offsets — all
+  vectorizable, and computable on the accelerator by the ``kernels/jls``
+  entropy pre-pass — and a **pack** phase (:func:`rice_pack`) that splices
+  the variable-length codes into the final bitstream with word-level
+  scatter-OR writes. Only the pack splice is inherently host work.
 
 Round-trips are exact (lossless) — asserted by unit + property tests.
 """
 from __future__ import annotations
 
 import struct
-from typing import Tuple
+from dataclasses import dataclass
+from typing import Optional, Tuple
 
 import numpy as np
 
@@ -75,6 +81,52 @@ def residuals(img: np.ndarray, sv: int = 1) -> np.ndarray:
     return r.astype(np.int32)
 
 
+def residuals_batch(imgs: np.ndarray, sv: int = 1) -> np.ndarray:
+    """Batched :func:`residuals` over a uniform (N, H, W) stack.
+
+    Bit-identical to calling :func:`residuals` per plane (property-tested) —
+    the predictor is pointwise over shifted planes, so batching just moves
+    the shifts one axis over. Used by the batched executor's host path so a
+    chunk pays one vectorized pass instead of N small ones.
+    """
+    if imgs.ndim != 3:
+        raise ValueError("residuals_batch expects an (N, H, W) stack")
+    bits = imgs.dtype.itemsize * 8
+    x = imgs.astype(np.int64)
+    N, H, W = x.shape
+    zc = np.zeros((N, H, 1), np.int64)
+    zr = np.zeros((N, 1, W), np.int64)
+    ra = np.concatenate([zc, x[:, :, :-1]], axis=2)   # left
+    rb = np.concatenate([zr, x[:, :-1, :]], axis=1)   # above
+    rc = np.concatenate([zr, ra[:, :-1, :]], axis=1)  # above-left
+
+    if sv == 1:
+        pred = ra
+    elif sv == 2:
+        pred = rb
+    elif sv == 3:
+        pred = rc
+    elif sv == 4:
+        pred = ra + rb - rc
+    elif sv == 5:
+        pred = ra + ((rb - rc) >> 1)
+    elif sv == 6:
+        pred = rb + ((ra - rc) >> 1)
+    elif sv == 7:
+        pred = (ra + rb) >> 1
+    else:
+        raise ValueError(f"selection value must be 1..7, got {sv}")
+
+    pred[:, 0, 1:] = ra[:, 0, 1:]
+    pred[:, 1:, 0] = rb[:, 1:, 0]
+    pred[:, 0, 0] = 1 << (bits - 1)
+
+    mask = (1 << bits) - 1
+    r = (x - pred) & mask
+    r = np.where(r >= (1 << (bits - 1)), r - (1 << bits), r)
+    return r.astype(np.int32)
+
+
 def reconstruct(res: np.ndarray, sv: int, bits: int) -> np.ndarray:
     """Invert :func:`residuals`. sv 1/2 use vectorized cumsum; others loop."""
     mask = (1 << bits) - 1
@@ -121,72 +173,255 @@ def _unzigzag(u: np.ndarray) -> np.ndarray:
     return (u >> 1) ^ -(u & 1)
 
 
-def _rice_k(u: np.ndarray) -> int:
-    mean = float(u.mean()) if u.size else 0.0
+def _rice_k_from_sum(total: int, size: int) -> int:
+    """Rice parameter from the exact integer sum of the zigzag magnitudes.
+
+    The exact-sum form lets the device entropy pre-pass hand back per-row
+    integer sums and still land on the same ``k`` as the host (bit-identity
+    across the two plan paths is what keeps batched == serial).
+    """
+    mean = total / size if size else 0.0
     k = 0
     while (1 << k) < mean + 1 and k < 30:
         k += 1
     return k
 
 
-def rice_encode(res: np.ndarray) -> Tuple[bytes, int]:
-    """Vectorized Golomb-Rice encoder. Returns (payload, k)."""
+def _rice_k(u: np.ndarray) -> int:
+    return _rice_k_from_sum(int(u.sum(dtype=np.uint64)), u.size)
+
+
+@dataclass
+class RicePlan:
+    """Phase-1 output of the Golomb-Rice coder: everything except the splice.
+
+    ``u`` are the zigzag magnitudes, ``lens`` the per-symbol code lengths,
+    ``offs`` their exclusive prefix-sum bit offsets (len n+1). ``rem`` is the
+    optional pre-extracted k-bit remainder word per symbol — the device
+    entropy pre-pass hands it back so the host pack never touches ``u`` for
+    non-escape symbols.
+    """
+
+    k: int
+    u: np.ndarray
+    q: np.ndarray
+    esc: np.ndarray
+    lens: np.ndarray
+    offs: np.ndarray
+    rem: Optional[np.ndarray] = None
+
+    @property
+    def total_bits(self) -> int:
+        return int(self.offs[-1])
+
+
+def rice_plan(res: np.ndarray) -> RicePlan:
+    """Host plan phase: zigzag, k, quotients, code lengths, bit offsets."""
     u = _zigzag(res.ravel())
     k = _rice_k(u)
-    q = (u >> k).astype(np.int64)
-    rem = (u & ((1 << k) - 1)).astype(np.uint64)
+    return _plan_from_u(u, k)
+
+
+def _plan_from_u(u: np.ndarray, k: int) -> RicePlan:
+    q = (u >> np.uint64(k)).astype(np.int64)
     esc = q > _QMAX
     # bit lengths: unary(q)+stop + k remainder; escape: QMAX+1 ones + stop + 64 raw
     lens = np.where(esc, _QMAX + 2 + 64, q + 1 + k)
-    offs = np.concatenate([[0], np.cumsum(lens)])
-    total = int(offs[-1])
-    bits = np.zeros(total, np.uint8)
+    offs = np.empty(lens.size + 1, np.int64)
+    offs[0] = 0
+    np.cumsum(lens, out=offs[1:])
+    return RicePlan(k=k, u=u, q=q, esc=esc, lens=lens, offs=offs)
 
-    # unary ones via range-marking + cumsum (vectorized run fill)
-    delta = np.zeros(total + 1, np.int32)
-    q_eff = np.where(esc, _QMAX + 1, q)
-    nz = q_eff > 0
-    np.add.at(delta, offs[:-1][nz], 1)
-    np.add.at(delta, (offs[:-1] + q_eff)[nz], -1)
-    bits[np.cumsum(delta[:-1]) > 0] = 1
 
-    # remainder bits (k small): one vectorized pass per bit position
-    if k and (~esc).any():
-        base = (offs[:-1] + q + 1)[~esc]
-        rne = rem[~esc]
-        for j in range(k):
-            bits[base + j] = (rne >> np.uint64(k - 1 - j)) & np.uint64(1)
-    # escapes: rare; raw 64-bit value after the capped unary + stop
-    for idx in np.flatnonzero(esc):
-        base = int(offs[idx]) + _QMAX + 2
-        val = int(u[idx])
-        for j in range(64):
-            bits[base + j] = (val >> (63 - j)) & 1
-    return np.packbits(bits).tobytes(), k
+def rice_plan_from_prepass(
+    u: np.ndarray, k: int, lens: np.ndarray, rem: Optional[np.ndarray] = None
+) -> RicePlan:
+    """Plan from the device entropy pre-pass (``kernels/jls`` length kernel):
+    the device already computed zigzag magnitudes, per-symbol code lengths,
+    and remainder words; the host only prefix-sums the lengths. Bit-identical
+    to :func:`rice_plan` on the same residuals (parity-tested)."""
+    u = u.ravel().astype(np.uint64)
+    q = (u >> np.uint64(k)).astype(np.int64)
+    esc = q > _QMAX
+    lens = lens.ravel().astype(np.int64)
+    offs = np.empty(lens.size + 1, np.int64)
+    offs[0] = 0
+    np.cumsum(lens, out=offs[1:])
+    return RicePlan(
+        k=k, u=u, q=q, esc=esc, lens=lens, offs=offs,
+        rem=None if rem is None else rem.ravel().astype(np.uint64),
+    )
+
+
+def _scatter_field(
+    words: np.ndarray, pos: np.ndarray, val: np.ndarray, nbits: np.ndarray
+) -> None:
+    """OR variable-width bit fields into an MSB-first uint64 word stream.
+
+    ``val`` (uint64) is written so its bit ``nbits-1`` lands at stream bit
+    position ``pos``. Fields are <= 64 bits, so each spans at most two words;
+    fields never overlap, so scatter-add == scatter-or (``np.add.at`` takes
+    the fast unbuffered path).
+    """
+    idx = (pos >> 6).astype(np.int64)
+    sh = 64 - (pos & 63) - nbits  # left shift into the first word (may be <0)
+    lo = sh < 0
+    first = np.where(
+        lo,
+        val >> (-sh).clip(min=0).astype(np.uint64),
+        val << sh.clip(min=0).astype(np.uint64),
+    )
+    np.add.at(words, idx, first)
+    if lo.any():
+        # low -sh bits spill left-aligned into the next word; the uint64
+        # left shift drops the already-written high bits for free
+        np.add.at(words, idx[lo] + 1, val[lo] << (64 + sh[lo]).astype(np.uint64))
+
+
+def rice_pack(plan: RicePlan) -> bytes:
+    """Pack phase: splice the planned codes into the final byte stream.
+
+    Word-level construction — two vectorized scatter passes (one per field
+    kind) over uint64 words instead of materializing one byte per *bit* —
+    byte-identical to the legacy bit-array packer (property-tested).
+    """
+    total = plan.total_bits
+    words = np.zeros((total + 63) // 64 + 1, np.uint64)
+    offs = plan.offs[:-1]
+    k = plan.k
+    ne = ~plan.esc
+    if ne.any():
+        # non-escape: unary(q) ones + stop + k remainder is one contiguous
+        # field of q+1+k <= QMAX+1+k bits: ((2^q - 1) << (k+1)) | rem
+        q = plan.q[ne].astype(np.uint64)
+        rem = (
+            plan.rem[ne]
+            if plan.rem is not None
+            else plan.u[ne] & np.uint64((1 << k) - 1)
+        )
+        val = (((np.uint64(1) << q) - np.uint64(1)) << np.uint64(k + 1)) | rem
+        _scatter_field(words, offs[ne], val, plan.lens[ne])
+    if plan.esc.any():
+        eoffs = offs[plan.esc]
+        ones = np.full(eoffs.size, ((1 << (_QMAX + 1)) - 1) << 1, np.uint64)
+        _scatter_field(
+            words, eoffs, ones, np.full(eoffs.size, _QMAX + 2, np.int64)
+        )
+        _scatter_field(
+            words,
+            eoffs + _QMAX + 2,
+            plan.u[plan.esc],
+            np.full(eoffs.size, 64, np.int64),
+        )
+    return words.astype(">u8").tobytes()[: (total + 7) // 8]
+
+
+def rice_encode(res: np.ndarray) -> Tuple[bytes, int]:
+    """Golomb-Rice encoder (plan + pack). Returns (payload, k)."""
+    plan = rice_plan(res)
+    return rice_pack(plan), plan.k
 
 
 def rice_decode(payload: bytes, k: int, n: int) -> np.ndarray:
+    """Vectorized Golomb-Rice decoder.
+
+    Fast path assumes no escape codes: with a fixed k-bit field after every
+    unary terminator, "index of the next terminator zero" is a function of
+    the current one alone (``nxt``), so the parse is a pointer chase with an
+    O(1) body plus fully vectorized remainder extraction. The first escape
+    symbol always surfaces as a decoded quotient of QMAX+1 (the parse is
+    exact up to that point), which falls back to the sequential decoder.
+    """
     bits = np.unpackbits(np.frombuffer(payload, np.uint8))
+    if n == 0:
+        return np.empty(0, np.int64)
     zeros = np.flatnonzero(bits == 0)
+    Z = zeros.size
+    # successor map in terminator-index space: given terminator z, the next
+    # terminator is the first zero at/after zeros[z]+1+k; Z is a sticky
+    # "ran off the stream" sentinel so gathers never go out of bounds
+    nxt = np.empty(Z + 1, np.int64)
+    np.searchsorted(zeros, zeros + (1 + k), side="left", sorter=None).astype(
+        np.int64
+    ).clip(max=Z, out=nxt[:Z])
+    nxt[Z] = Z
+    t = _chase(nxt, Z, n)
+    if t is None or t[-1] >= Z:
+        return _rice_decode_sequential(bits, zeros, k, n)
+    zpos = zeros[t]
+    starts = np.empty(n, np.int64)
+    starts[0] = 0
+    starts[1:] = zpos[:-1] + 1 + k
+    q = zpos - starts
+    if (q > _QMAX).any() or (q < 0).any():  # first escape decodes as QMAX+1
+        return _rice_decode_sequential(bits, zeros, k, n)
+    rem = np.zeros(n, np.uint64)
+    for j in range(k):  # k vectorized passes, not n*k scalar reads
+        rem = (rem << np.uint64(1)) | bits[zpos + 1 + j].astype(np.uint64)
+    return _unzigzag((q.astype(np.uint64) << np.uint64(k)) | rem)
+
+
+_CHASE_STRIDE = 8
+
+
+def _chase(nxt: np.ndarray, Z: int, n: int) -> Optional[np.ndarray]:
+    """First n elements of the orbit 0, nxt[0], nxt[nxt[0]], ...
+
+    The orbit is inherently sequential, but composing the successor map with
+    itself (``g8 = nxt^8``) cuts the Python-level chase to n/8 iterations;
+    the skipped intermediates are recovered with 7 vectorized gathers.
+    Returns None when the orbit hits the sentinel Z early (invalid parse).
+    """
+    if n < 4 * _CHASE_STRIDE:
+        out = np.empty(n, np.int64)
+        cur = 0
+        for i in range(n):
+            out[i] = cur
+            cur = nxt[cur]
+        return None if out[-1] >= Z else out
+    g2 = nxt[nxt]
+    g4 = g2[g2]
+    g8 = g4[g4]
+    heads = np.empty(n // _CHASE_STRIDE, np.int64)
+    cur = 0
+    for i in range(heads.size):
+        heads[i] = cur
+        cur = g8[cur]
+    if heads[-1] >= Z:
+        return None
+    t = np.empty((heads.size + 1) * _CHASE_STRIDE, np.int64)
+    cols = t[: heads.size * _CHASE_STRIDE].reshape(heads.size, _CHASE_STRIDE)
+    cols[:, 0] = heads
+    for j in range(1, _CHASE_STRIDE):
+        cols[:, j] = nxt[cols[:, j - 1]]
+    for i in range(heads.size * _CHASE_STRIDE, n):  # tail, < STRIDE steps
+        t[i] = cur
+        cur = nxt[cur]
+    return t[:n]
+
+
+def _rice_decode_sequential(
+    bits: np.ndarray, zeros: np.ndarray, k: int, n: int
+) -> np.ndarray:
+    """Escape-capable sequential parse (list-backed bit reads, O(log Z)
+    terminator lookups) — only streams containing escape codes land here."""
     out = np.empty(n, np.uint64)
+    bl = bits.tolist()
     p = 0
-    zi = 0
     for i in range(n):
-        # find first zero at/after p (the unary terminator)
-        zi = int(np.searchsorted(zeros, p))
-        zpos = int(zeros[zi])
+        zpos = int(zeros[np.searchsorted(zeros, p)])  # the unary terminator
         q = zpos - p
         p = zpos + 1
         if q == _QMAX + 1:  # escape: raw 64-bit
             val = 0
             for j in range(64):
-                val = (val << 1) | int(bits[p + j])
+                val = (val << 1) | bl[p + j]
             p += 64
             out[i] = val
         else:
             rem = 0
             for j in range(k):
-                rem = (rem << 1) | int(bits[p + j])
+                rem = (rem << 1) | bl[p + j]
             p += k
             out[i] = (q << k) | rem
     return _unzigzag(out)

@@ -43,6 +43,8 @@ ALLOWED_ATTR_KEYS = frozenset({
     "shape", "dtype", "bucket", "path", "interpret", "padded",
     # timing facts
     "busy_s", "t_lease", "visibility",
+    # device/host pipeline boundary timing (DESIGN.md §12)
+    "queue_s", "wait_s",
     # outcome flags
     "ok", "deduped", "fenced", "crashed", "mode",
 })

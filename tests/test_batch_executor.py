@@ -200,6 +200,52 @@ class TestPipelineBatchedEqualsSerial:
         assert pipe.executor.stats.instances == 0
 
 
+class TestBugfixSweep:
+    def test_pow2_cap_rounds_down_to_power_of_two(self):
+        from repro.core.batch import _pow2_at_least, _pow2_floor
+
+        # regression: min(p, 24) used to return 24 — not a power of two —
+        # silently growing the closed jit-cache shape set
+        assert _pow2_at_least(20, 24) == 16
+        assert _pow2_at_least(20, 32) == 32
+        assert _pow2_at_least(5, 24) == 8
+        assert _pow2_floor(24) == 16 and _pow2_floor(32) == 32
+
+    def test_non_pow2_max_batch_normalized_and_shapes_stay_closed(self, rng):
+        ex = BatchedDeidExecutor(max_batch=24, use_kernel=True)
+        assert ex.max_batch == 16
+        items = [((rng.random((16, 32)) * 255).astype(np.uint8), []) for _ in range(20)]
+        ex.run(items, recompress=False)
+        assert all(bin(s[0]).count("1") == 1 for s in ex.stats.padded_shapes)
+
+    def test_max_batch_must_be_positive(self):
+        with pytest.raises(ValueError):
+            BatchedDeidExecutor(max_batch=0)
+
+    def test_stats_buckets_counts_distinct_keys_across_runs(self, rng):
+        ex = BatchedDeidExecutor(use_kernel=False)
+        items = [((rng.random((24, 24)) * 255).astype(np.uint8), []) for _ in range(3)]
+        ex.run(items)
+        ex.run(items)  # same bucket key again
+        assert ex.stats.buckets == 1          # distinct keys, not re-counted
+        assert ex.stats.dispatch_groups == 2  # per-run tally still available
+        other = [((rng.random((48, 24)) * 255).astype(np.uint8), [])]
+        ex.run(other)
+        assert ex.stats.buckets == 2
+        assert ex.stats.dispatch_groups == 3
+
+    def test_detect_rejects_non_finite_threshold(self, rng):
+        ex = BatchedDeidExecutor(use_kernel=False)
+        px = (rng.random((32, 128)) * 255).astype(np.uint8)
+        for bad in (float("nan"), float("inf"), float("-inf")):
+            with pytest.raises(ValueError, match="finite"):
+                ex.detect_row_hits([(px, bad)])
+        # a NaN would have put each instance in a private bucket; equal
+        # finite thresholds share one dispatch
+        ex.detect_row_hits([(px, 40.0), (px.copy(), 40.0)])
+        assert ex.stats.detect_dispatches == 1
+
+
 class TestWorkerBatchedPath:
     def test_worker_reports_batched_instances(self, tmp_path, gen):
         clock = SimClock()
