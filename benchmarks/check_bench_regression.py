@@ -1,0 +1,82 @@
+"""CI gate: fail the build when a freshly measured observability benchmark
+regresses against the committed baseline.
+
+Compares headline numbers from fresh ``BENCH_obs.json`` / ``BENCH_slo.json``
+(written into a scratch dir by the CI job) against the checked-in copies at
+the repo root. Each gated metric declares a direction: ``lower`` metrics
+(costs) may not exceed baseline × (1 + tol); ``higher`` metrics
+(throughputs) may not fall below baseline × (1 − tol). The default
+tolerance is deliberately generous (50%) because shared CI runners swing
+wall-clock numbers hard — the gate exists to catch order-of-magnitude
+regressions (an accidentally quadratic fold, a span-cost blowup), not 5%
+drift. Override with ``BENCH_REGRESSION_TOLERANCE=0.2`` etc.
+
+Exit codes follow ``check_fused_gate.py``: 0 pass, 1 regression,
+2 missing/malformed inputs.
+
+    python benchmarks/check_bench_regression.py <fresh_dir>
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+# (file, metric, direction) — direction is what "good" looks like
+GATED = (
+    ("BENCH_obs.json", "overhead_pct", "lower"),
+    ("BENCH_obs.json", "span_cost_us", "lower"),
+    ("BENCH_slo.json", "us_per_observation", "lower"),
+    ("BENCH_slo.json", "fold_spans_per_s", "higher"),
+)
+
+
+def _load(path: Path) -> dict | None:
+    try:
+        return json.loads(path.read_text())
+    except (OSError, ValueError):
+        return None
+
+
+def main(argv: list[str] | None = None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    if len(argv) != 1:
+        print("bench-gate: usage: check_bench_regression.py <fresh_dir>")
+        return 2
+    fresh_dir = Path(argv[0])
+    tol = float(os.environ.get("BENCH_REGRESSION_TOLERANCE", "0.5"))
+
+    failures = 0
+    for fname, metric, direction in GATED:
+        base_doc = _load(REPO_ROOT / fname)
+        fresh_doc = _load(fresh_dir / fname)
+        if base_doc is None or fresh_doc is None:
+            missing = fname if base_doc is None else f"{fresh_dir / fname}"
+            print(f"bench-gate: FAIL — cannot read {missing}")
+            return 2
+        if metric not in base_doc or metric not in fresh_doc:
+            print(f"bench-gate: FAIL — {fname} missing metric {metric!r}")
+            return 2
+        base, fresh = float(base_doc[metric]), float(fresh_doc[metric])
+        if direction == "lower":
+            ok = fresh <= base * (1.0 + tol)
+        else:
+            ok = fresh >= base * (1.0 - tol)
+        mark = "ok" if ok else "FAIL"
+        failures += 0 if ok else 1
+        print(f"bench-gate: {fname}:{metric} fresh={fresh:.4g} "
+              f"baseline={base:.4g} ({direction} is better, tol {tol:.0%}) {mark}")
+    if failures:
+        print(f"bench-gate: FAIL — {failures} metric(s) regressed beyond "
+              "tolerance; rerun locally or raise BENCH_REGRESSION_TOLERANCE "
+              "if the runner is noisy")
+        return 1
+    print("bench-gate: PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -17,6 +17,7 @@ def main() -> None:
         kernelbench,
         obsbench,
         roofline,
+        slobench,
         table1_throughput,
         table2_rules,
     )
@@ -30,6 +31,7 @@ def main() -> None:
         ("fleetbench", fleetbench.main),
         ("ingestbench", ingestbench.main),
         ("obsbench", obsbench.main),
+        ("slobench", slobench.main),
         ("autoscale", autoscale.main),
         ("kernelbench", kernelbench.main),
         ("roofline", roofline.main),

@@ -1,0 +1,165 @@
+"""SLO engine + critical-path profiler cost model (DESIGN.md §13).
+
+Two questions, one file:
+
+1. **Sensitivity** — how long after a regression starts does the multi-window
+   burn-rate alert fire? Measured in *simulated* seconds on a deterministic
+   observation stream (1 obs/s, bad fraction ``m`` injected from t=600 via a
+   Weyl-style hash pattern, evaluated every second), so the number is
+   bit-stable across machines: it characterizes the alerting policy
+   (sim-scaled windows from ``default_burn_rules``), not the host CPU.
+   Detection delay must shrink monotonically as the regression magnitude
+   grows — the defining property of multi-window burn alerting.
+
+2. **Cost** — wall-clock throughput of the two hot loops: observe+evaluate
+   on the engine (µs/observation) and span folding on the profiler
+   (spans/s over a synthetic cold-serve span stream). These are the numbers
+   ``check_bench_regression.py`` gates, with generous tolerance for noisy
+   CI runners.
+
+Writes ``BENCH_slo.json``; prints the harness CSV lines.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+from repro.obs import CriticalPathProfiler, SloEngine, SloSpec, Tracer, default_burn_rules, trace_id_for
+from repro.utils.timing import SimClock
+
+REG_T = 600.0           # regression onset (simulated seconds)
+HORIZON = 7200.0        # give the slow (ticket) window room to fire
+# injected bad fractions; with objective 0.9 the burn is m/0.1, so the
+# smallest magnitude must clear the slow-rule threshold 2.0 (m > 0.2) to
+# be detectable at all — 0.25 is the faintest catchable regression here
+MAGNITUDES = (0.25, 0.4, 0.6, 1.0)
+N_OBS_COST = 50_000
+N_SERVES_FOLD = 2_000
+
+
+def _bad(i: int, magnitude: float) -> bool:
+    """Deterministic 'is observation i bad' pattern with density ≈ magnitude
+    (Knuth multiplicative hash -> uniform in [0, 1))."""
+    return (i * 2654435761 % 1000) / 1000.0 < magnitude
+
+
+def _engine() -> SloEngine:
+    return SloEngine([SloSpec(
+        "cold_serve", objective=0.9, threshold=60.0, kind="latency",
+        rules=default_burn_rules(1.0 / 60.0),
+    )])
+
+
+def detection_delays() -> dict[str, float]:
+    """Simulated seconds from regression onset to the first page for each
+    injected bad fraction; -1 when the horizon expires without an alert."""
+    out: dict[str, float] = {}
+    for m in MAGNITUDES:
+        eng = _engine()
+        fired_at = -1.0
+        i = 0
+        t = 0.0
+        while t < HORIZON:
+            bad = t >= REG_T and _bad(i, m)
+            eng.observe("cold_serve", t=t, value=90.0 if bad else 1.0)
+            for a in eng.evaluate(t):
+                if a.action == "fire" and fired_at < 0:
+                    fired_at = a.t - REG_T
+            if fired_at >= 0:
+                break
+            i += 1
+            t += 1.0
+        out[f"{m:g}"] = fired_at
+    return out
+
+
+def observe_cost_us() -> float:
+    """Wall µs per observe()+amortized evaluate() (one evaluate per 30 obs,
+    the fleet sim's tick cadence)."""
+    eng = _engine()
+    t0 = time.perf_counter()
+    for i in range(N_OBS_COST):
+        eng.observe("cold_serve", t=float(i), value=90.0 if _bad(i, 0.05) else 1.0)
+        if i % 30 == 0:
+            eng.evaluate(float(i))
+    return (time.perf_counter() - t0) / N_OBS_COST * 1e6
+
+
+def _synthetic_serves(n: int) -> list:
+    """A span stream of n complete cold serves (publish->lease->process
+    with fetch/deid/deliver children->ack) on a SimClock."""
+    clock = SimClock()
+    tracer = Tracer(clock)
+    for i in range(n):
+        key = f"IRB-B/S{i:05d}"
+        tid = trace_id_for(key, 1)
+        tracer.event("broker.publish", trace_id=tid, key=key, attempt=1)
+        clock.advance(0.5)
+        tracer.event("broker.lease", trace_id=tid, key=key)
+        with tracer.span("worker.process", trace_id=tid, key=key) as proc:
+            with tracer.span("worker.fetch", accession=key) as f:
+                f.set(nbytes=1 << 20, instances=4, modality="CT")
+            with tracer.span("worker.deid", busy_s=0.25):
+                pass
+            with tracer.span("worker.deliver", datasets=4):
+                pass
+            proc.set(ok=True, busy_s=0.25)
+        tracer.event("broker.ack", trace_id=tid, key=key)
+        clock.advance(0.1)
+    return tracer.spans()
+
+
+def fold_throughput() -> tuple[float, int]:
+    spans = _synthetic_serves(N_SERVES_FOLD)
+    prof = CriticalPathProfiler()
+    t0 = time.perf_counter()
+    folded = prof.fold(spans)
+    wall = time.perf_counter() - t0
+    assert folded == N_SERVES_FOLD, f"folded {folded} of {N_SERVES_FOLD}"
+    return len(spans) / wall, len(spans)
+
+
+def run() -> dict:
+    delays = detection_delays()
+    # policy sanity: bigger regressions must be caught at least as fast,
+    # and every magnitude must be caught at all
+    vals = [delays[f"{m:g}"] for m in MAGNITUDES]
+    assert all(v >= 0 for v in vals), f"undetected regression: {delays}"
+    assert all(a >= b for a, b in zip(vals, vals[1:])), (
+        f"detection delay not monotone in magnitude: {delays}"
+    )
+    us_obs = observe_cost_us()
+    spans_per_s, n_spans = fold_throughput()
+    return {
+        "detection_delay_s": delays,
+        "us_per_observation": us_obs,
+        "fold_spans_per_s": spans_per_s,
+        "fold_n_spans": n_spans,
+    }
+
+
+def main(json_path: str | None = "BENCH_slo.json") -> list[str]:
+    r = run()
+    delays = ";".join(f"m{k}={v:.0f}s" for k, v in r["detection_delay_s"].items())
+    lines = [
+        f"slo_observe,{r['us_per_observation']:.3f},evaluate_amortized_per_30",
+        f"slo_detect,0,{delays}",
+        f"slo_fold,{1e6 / r['fold_spans_per_s']:.3f},"
+        f"spans_per_s={r['fold_spans_per_s']:.0f}",
+    ]
+    if json_path:
+        payload = {
+            "source": "benchmarks/slobench.py",
+            "regression_onset_s": REG_T,
+            "horizon_s": HORIZON,
+            "window_scale": 1.0 / 60.0,
+            **r,
+        }
+        Path(json_path).write_text(json.dumps(payload, indent=2) + "\n")
+    return lines
+
+
+if __name__ == "__main__":
+    for line in main():
+        print(line)

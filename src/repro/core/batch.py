@@ -39,13 +39,14 @@ import math
 import os
 from collections import defaultdict, deque
 from concurrent.futures import ThreadPoolExecutor
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
 from repro.dicom import codec
 from repro.dicom.devices import Rect
+from repro.obs.metrics import Gauge, StatsShim
 from repro.obs.trace import NULL_TRACER
 
 _CODEC_DTYPES = ("uint8", "uint16")
@@ -87,15 +88,62 @@ class BatchOutput:
     payload: Optional[bytes] = None
 
 
-@dataclass
-class ExecutorStats:
-    instances: int = 0        # instances that went through a batched dispatch
-    dispatches: int = 0       # device calls issued
-    dispatch_groups: int = 0  # (run, bucket) groups — counts repeats per run
-    bucket_keys: Set[tuple] = field(default_factory=set)  # distinct keys ever
-    padded_shapes: Set[tuple] = field(default_factory=set)  # jit-cache keys
-    detect_instances: int = 0  # instances scanned by the text-band detector
-    detect_dispatches: int = 0  # detector device calls issued
+class _GaugeSet(set):
+    """Set whose cardinality mirrors into a gauge on every mutation — keeps
+    the historical ``stats.bucket_keys``/``padded_shapes`` set surface (adds,
+    membership, iteration) while the count lives in the metrics plane."""
+
+    def __init__(self, gauge: Gauge):
+        super().__init__()
+        self._gauge = gauge
+
+    def _sync(self) -> None:
+        self._gauge.set(len(self))
+
+    def add(self, item) -> None:
+        super().add(item)
+        self._sync()
+
+    def update(self, *others) -> None:
+        super().update(*others)
+        self._sync()
+
+    def discard(self, item) -> None:
+        super().discard(item)
+        self._sync()
+
+    def clear(self) -> None:
+        super().clear()
+        self._sync()
+
+
+class ExecutorStats(StatsShim):
+    """Dispatch accounting for :class:`BatchedDeidExecutor`, backed by the
+    metrics registry (the last ad-hoc stats dataclass to migrate).
+
+    Counter fields keep their exact historical meaning; ``bucket_keys`` and
+    ``padded_shapes`` remain real sets (distinct-key semantics) whose sizes
+    are exported as gauges. ``MetricsConservation`` cross-checks the
+    registry's ``repro_executor_instances`` total against the worker pool's
+    independently kept per-worker dispatch deltas.
+    """
+
+    _SUBSYSTEM = "executor"
+    _FIELDS = (
+        "instances",         # instances that went through a batched dispatch
+        "dispatches",        # device calls issued
+        "dispatch_groups",   # (run, bucket) groups — counts repeats per run
+        "detect_instances",  # instances scanned by the text-band detector
+        "detect_dispatches", # detector device calls issued
+    )
+
+    def __init__(self, registry=None) -> None:
+        super().__init__(registry)
+        # distinct keys ever / jit-cache keys
+        self.bucket_keys: Set[tuple] = _GaugeSet(
+            Gauge("repro_executor_bucket_keys", registry=self.registry))
+        self.padded_shapes: Set[tuple] = _GaugeSet(
+            Gauge("repro_executor_padded_shapes", registry=self.registry))
 
     @property
     def buckets(self) -> int:
@@ -151,6 +199,7 @@ class BatchedDeidExecutor:
         host_workers: Optional[int] = None,
         pipeline_depth: int = 2,
         device_entropy: Optional[bool] = None,
+        registry=None,
     ) -> None:
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
@@ -164,7 +213,7 @@ class BatchedDeidExecutor:
         self.host_workers = host_workers
         self.pipeline_depth = pipeline_depth
         self.device_entropy = device_entropy
-        self.stats = ExecutorStats()
+        self.stats = ExecutorStats(registry)
         # per-dispatch profiling spans (kernel.dispatch / kernel.entropy_code
         # / kernel.detect_dispatch) — the roofline measurement substrate
         self.tracer = tracer if tracer is not None else NULL_TRACER

@@ -110,7 +110,8 @@ class DeidPipeline:
         # shape-bucketed batch dispatch over each study's instances; the
         # per-instance loop survives as process_study_serial (fallback/oracle)
         self.executor: Optional[BatchedDeidExecutor] = (
-            BatchedDeidExecutor(tracer=self.tracer) if batched else None
+            BatchedDeidExecutor(tracer=self.tracer, registry=registry)
+            if batched else None
         )
         self.script_shas = {
             "filter": self.filter.sha,

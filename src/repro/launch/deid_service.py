@@ -15,6 +15,14 @@ import argparse
 from repro.core import DeidPipeline, TrustMode
 from repro.dicom.generator import StudyGenerator
 from repro.kernels.scrub import ops as scrub_ops
+from repro.obs import (
+    HealthController,
+    SloEngine,
+    SloSpec,
+    Tracer,
+    default_burn_rules,
+    derive_serve_observations,
+)
 from repro.queueing import Autoscaler, AutoscalerConfig, Broker, DeidWorker, FailureInjector, Journal, WorkerPool
 from repro.queueing.server import DeidService
 from repro.storage.object_store import StudyStore
@@ -41,9 +49,10 @@ def main(argv=None) -> dict:
         mrns[s.accession] = s.mrn
 
     clock = SimClock()
-    broker = Broker(clock, visibility_timeout=120)
+    tracer = Tracer(clock)
+    broker = Broker(clock, visibility_timeout=120, tracer=tracer)
     journal = Journal(args.journal)
-    service = DeidService(broker, lake, journal)
+    service = DeidService(broker, lake, journal, tracer=tracer)
     service.register_study("IRB-SRV", TrustMode.POST_IRB)
     service.submit("IRB-SRV", list(mrns), mrns)
 
@@ -53,12 +62,27 @@ def main(argv=None) -> dict:
     pool = WorkerPool(
         broker,
         Autoscaler(broker, AutoscalerConfig(delivery_window=args.window_min * 60), clock),
-        lambda wid: DeidWorker(wid, pipeline, lake, dest, journal),
+        lambda wid: DeidWorker(wid, pipeline, lake, dest, journal, tracer=tracer),
         injector,
     )
     report = pool.drain()
     manifest = journal.merged_manifest("IRB-SRV")
     total = lake.store.total_bytes()
+
+    # SLO/health surface (DESIGN.md §13): the launcher has no per-delivery
+    # hook, so cold-serve latencies are re-derived from the span stream —
+    # the same reconstruction the fleet sim's SloConformance cross-checks —
+    # then evaluated once at drain time.
+    engine = SloEngine([SloSpec(
+        "cold_serve", objective=0.9, threshold=args.window_min * 60,
+        kind="latency", rules=default_burn_rules(1.0 / 60.0),
+    )])
+    for t, _key, latency in derive_serve_observations(tracer.spans()):
+        engine.observe("cold_serve", t=t, value=latency)
+    engine.evaluate(clock.now())
+    service.attach_health(HealthController(engine))
+    health = service.health_report()
+
     out = {
         "studies": report.processed,
         "instances": manifest.counts(),
@@ -67,11 +91,13 @@ def main(argv=None) -> dict:
         "throughput": total / max(clock.now(), 1e-9),
         "cost_usd": report.cost_usd,
         "crashes": report.crashes,
+        "health": health.to_dict(),
     }
     print(
         f"{report.processed} studies | {human_bytes(total)} | {out['minutes']:.1f} min "
         f"| {human_bytes(out['throughput'])}/s | ${out['cost_usd']:.2f} | counts {out['instances']}"
     )
+    print(f"health: {health.summary()}")
     return out
 
 

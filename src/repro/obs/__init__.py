@@ -14,6 +14,18 @@ Three layers, all clock-injected and fully deterministic under a SimClock:
 - :mod:`repro.obs.export` — allowlist :class:`Redactor` plus JSONL and
   Chrome-trace exporters; *every* attribute and label crosses the redactor
   before leaving the process, making exported telemetry provably PHI-free.
+
+On top of those sit the consumers (DESIGN.md §13):
+
+- :mod:`repro.obs.slo` — declarative :class:`SloSpec` objectives evaluated
+  incrementally with multi-window burn-rate alerting; the full alert
+  sequence replays from the engine's own observation log.
+- :mod:`repro.obs.profile` — :class:`CriticalPathProfiler`, folding finished
+  spans into a deterministic per-(temperature, modality, stage) self-time
+  profile with PHI-safe folded/Chrome exports.
+- :mod:`repro.obs.health` — :class:`HealthController`, turning SLO state
+  into operator :class:`HealthReport` snapshots and a burn-rate pressure
+  signal the autoscaler consumes.
 """
 from repro.obs.metrics import Counter, Gauge, Histogram, MetricsRegistry, StatsShim
 from repro.obs.trace import NULL_TRACER, NullTracer, Span, Tracer, trace_id_for
@@ -23,6 +35,16 @@ from repro.obs.export import (
     export_spans_jsonl,
     to_chrome_trace,
 )
+from repro.obs.slo import (
+    AlertEvent,
+    BurnRule,
+    SloEngine,
+    SloSpec,
+    default_burn_rules,
+    derive_serve_observations,
+)
+from repro.obs.profile import CriticalPathProfiler
+from repro.obs.health import HealthController, HealthReport
 
 __all__ = [
     "Counter",
@@ -39,4 +61,13 @@ __all__ = [
     "export_metrics_jsonl",
     "export_spans_jsonl",
     "to_chrome_trace",
+    "AlertEvent",
+    "BurnRule",
+    "SloEngine",
+    "SloSpec",
+    "default_burn_rules",
+    "derive_serve_observations",
+    "CriticalPathProfiler",
+    "HealthController",
+    "HealthReport",
 ]

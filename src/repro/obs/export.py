@@ -47,6 +47,8 @@ ALLOWED_ATTR_KEYS = frozenset({
     "queue_s", "wait_s",
     # outcome flags
     "ok", "deduped", "fenced", "crashed", "mode",
+    # SLO / critical-path profile plane (DESIGN.md §13)
+    "modality", "slo", "rule", "action", "severity", "burn_long", "burn_short",
 })
 
 _SAFE_VALUE_RE = re.compile(r"^[A-Za-z0-9_./:#@\-]{1,64}$")

@@ -129,7 +129,8 @@ class Histogram(_Metric):
         key = self._key(labels)
         state = self._series.get(key)
         if state is None:
-            state = {"counts": [0] * len(self.buckets), "sum": 0.0, "count": 0}
+            state = {"counts": [0] * len(self.buckets), "sum": 0.0, "count": 0,
+                     "min": value, "max": value}
             self._series[key] = state
         for i, bound in enumerate(self.buckets):
             if value <= bound:
@@ -137,10 +138,62 @@ class Histogram(_Metric):
                 break
         state["sum"] += value
         state["count"] += 1
+        state["min"] = min(state["min"], value)
+        state["max"] = max(state["max"], value)
 
     def series(self) -> Dict[str, dict]:
+        # min/max are quantile-estimation internals; the exported series
+        # surface (and therefore registry snapshots/digests) stays exactly
+        # counts/sum/count.
         return {k: {"counts": list(v["counts"]), "sum": v["sum"], "count": v["count"]}
                 for k, v in self._series.items()}
+
+    def quantile(self, q: float, **labels) -> Optional[float]:
+        """Estimate the q-quantile (q in [0, 1]) for one series.
+
+        Rank-based with linear interpolation inside the containing bucket,
+        clamped to the observed min/max — so the error is at most the width
+        of that bucket, the open top bucket degrades to the observed max
+        rather than infinity, and a series whose observations all share one
+        value returns that value exactly. None when the series is empty.
+        """
+        if not (0.0 <= q <= 1.0):
+            raise ValueError(f"quantile q must be in [0, 1], got {q}")
+        state = self._series.get(self._key(labels))
+        if state is None or state["count"] == 0:
+            return None
+        return self._quantile_of(state, q)
+
+    def _quantile_of(self, state: dict, q: float) -> float:
+        rank = q * state["count"]
+        cum = 0
+        prev = float("-inf")
+        for bound, n in zip(self.buckets, state["counts"]):
+            if n and cum + n >= rank:
+                lo = max(prev, state["min"])
+                hi = min(bound, state["max"])
+                frac = min(1.0, max(0.0, (rank - cum) / n))
+                return lo + (hi - lo) * frac
+            cum += n
+            prev = bound
+        return state["max"]
+
+    def snapshot(self) -> Dict[str, dict]:
+        """Per-series summary with estimated quantiles:
+        ``{count, sum, min, max, p50, p95, p99}`` (quantiles carry the
+        ±bucket-width error documented on :meth:`quantile`)."""
+        out: Dict[str, dict] = {}
+        for key, st in self._series.items():
+            out[key] = {
+                "count": st["count"],
+                "sum": st["sum"],
+                "min": st["min"],
+                "max": st["max"],
+                "p50": self._quantile_of(st, 0.50),
+                "p95": self._quantile_of(st, 0.95),
+                "p99": self._quantile_of(st, 0.99),
+            }
+        return out
 
 
 class MetricsRegistry:

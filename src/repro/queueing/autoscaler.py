@@ -44,6 +44,12 @@ class Autoscaler:
         self.config = config
         self.clock = clock or broker.clock
         self.current = 0
+        # optional burn-rate pressure signal (DESIGN.md §13): a zero-arg
+        # callable returning a multiplier >= 1.0 (e.g. HealthController
+        # .pressure). While > 1, the backlog-derived target is multiplied up
+        # so a burning latency SLO buys capacity that queue depth alone
+        # would not request. None = pure backlog scaling (the default).
+        self.pressure_fn = None
         self.events: List[ScaleEvent] = []
         self._window_start: Optional[float] = None
         self._last_scale_down: float = -math.inf
@@ -73,11 +79,20 @@ class Autoscaler:
 
         stats = self.broker.stats()
         target = self.target_for(stats.backlog_bytes)
+        reason = "scale-up"
+        if stats.outstanding > 0 and self.pressure_fn is not None:
+            pressure = self.pressure_fn()
+            if pressure > 1.0:
+                boosted = min(self.config.max_instances,
+                              math.ceil(max(target, 1) * pressure))
+                if boosted > target:
+                    target = boosted
+                    reason = "burn-scale-up"
         if stats.outstanding == 0:
             target = self.config.min_instances  # paper: delete when queue empty
             self._window_start = None
         if target > self.current:
-            self.events.append(ScaleEvent(now, self.current, target, stats.backlog_bytes, "scale-up"))
+            self.events.append(ScaleEvent(now, self.current, target, stats.backlog_bytes, reason))
             self.current = target
         elif target < self.current:
             if now - self._last_scale_down >= self.config.scale_down_cooldown or target == 0:

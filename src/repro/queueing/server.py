@@ -68,6 +68,9 @@ class DeidService:
         # planner's ruleset digest must match the worker pipeline's, so both
         # are wired from the same DeidPipeline instance.
         self.planner = None
+        # optional health controller (repro.obs.health): health_report()
+        # snapshots SLO states / burn / budgets for operators
+        self.health = None
         if result_lake is not None:
             if pipeline is None:
                 raise ValueError(
@@ -85,6 +88,17 @@ class DeidService:
                 tracer=self.tracer,
                 registry=registry,
             )
+
+    # --------------------------------------------------------------- health
+    def attach_health(self, controller) -> None:
+        """Attach a :class:`repro.obs.health.HealthController`; after this,
+        :meth:`health_report` snapshots it at the broker clock's now."""
+        self.health = controller
+
+    def health_report(self):
+        if self.health is None:
+            raise RuntimeError("no health controller attached; call attach_health()")
+        return self.health.snapshot(self.broker.clock.now())
 
     # -------------------------------------------------------------- studies
     def register_study(

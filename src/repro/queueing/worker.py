@@ -142,7 +142,8 @@ class DeidWorker:
                 span.set(fenced=True)
                 return 0.0
             study = self.source.get_study(accession)
-            fetch_span.set(nbytes=study.nbytes(), instances=len(study.datasets))
+            fetch_span.set(nbytes=study.nbytes(), instances=len(study.datasets),
+                           modality=str(getattr(study, "modality", None) or "NA"))
         slowdown = injector.slowdown(self.worker_id, msg) if injector else 1.0
         work_seconds = (study.nbytes() / self.throughput) * slowdown
         batched0 = self.pipeline.executor.stats.instances if self.pipeline.executor else 0

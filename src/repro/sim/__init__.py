@@ -22,6 +22,7 @@ from repro.sim.invariants import (
     NoWedgedSubscribers,
     PhiBoundary,
     QueryConsistency,
+    SloConformance,
     TelemetryPhiBoundary,
     TraceIntegrity,
     Violation,
@@ -65,6 +66,7 @@ __all__ = [
     "QueryConsistency",
     "QueryMix",
     "ReplayStorm",
+    "SloConformance",
     "TelemetryPhiBoundary",
     "TraceIntegrity",
     "Violation",

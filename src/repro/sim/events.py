@@ -81,14 +81,19 @@ class EventLog:
         rec.update({k: _canonical(v) for k, v in detail.items()})
         self.records.append(rec)
 
-    def to_jsonl(self) -> str:
-        return "\n".join(json.dumps(r, sort_keys=True) for r in self.records)
+    def to_jsonl(self, exclude_kinds: Tuple[str, ...] = ()) -> str:
+        recs = self.records
+        if exclude_kinds:
+            recs = [r for r in recs if r["kind"] not in exclude_kinds]
+        return "\n".join(json.dumps(r, sort_keys=True) for r in recs)
 
-    def digest(self) -> str:
+    def digest(self, exclude_kinds: Tuple[str, ...] = ()) -> str:
         """SHA-256 over the canonical JSONL serialization. Two runs with the
         same seed must produce the same digest — the conformance suite's
-        bit-replayability check compares exactly this."""
-        return hashlib.sha256(self.to_jsonl().encode()).hexdigest()
+        bit-replayability check compares exactly this. ``exclude_kinds``
+        filters record kinds out first, for comparisons across configs that
+        only differ by a known-additive record stream (e.g. ``slo_alert``)."""
+        return hashlib.sha256(self.to_jsonl(exclude_kinds).encode()).hexdigest()
 
     def by_kind(self, kind: str) -> List[Dict[str, Any]]:
         return [r for r in self.records if r["kind"] == kind]

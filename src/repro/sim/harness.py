@@ -12,13 +12,13 @@ metrics — the conformance suite enforces this, and it is what makes a chaos
 failure from CI replayable on a laptop from one integer.
 
 Event kinds in the log: ``ingest``, ``cohort``, ``query``, ``tick``,
-``chaos``, ``chaos_restore``, ``cohort_done``, ``drain_done``, and — when the
-change feed is enabled — ``feed_commit``, ``feed_poll``, ``feed_restore``,
-``feed_drained``.
+``chaos``, ``chaos_restore``, ``cohort_done``, ``drain_done``, ``slo_alert``
+(when the SLO engine is on), and — when the change feed is enabled —
+``feed_commit``, ``feed_poll``, ``feed_restore``, ``feed_drained``.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 from repro.catalog import CohortSelection, StudyCatalog
@@ -32,7 +32,10 @@ from repro.ingest.checkpoint import Checkpoint
 from repro.ingest.feed import PacsFeed, seeded_mutations
 from repro.ingest.pooler import ChangePooler, IngestApplier, PoolerCrash
 from repro.lake.store import ResultLake
+from repro.obs.health import HealthController
 from repro.obs.metrics import MetricsRegistry
+from repro.obs.profile import CriticalPathProfiler
+from repro.obs.slo import SloEngine, SloSpec, default_burn_rules
 from repro.obs.trace import NULL_TRACER, Tracer
 from repro.queueing.autoscaler import Autoscaler, AutoscalerConfig
 from repro.queueing.broker import Broker
@@ -94,6 +97,18 @@ class FleetConfig:
     trace: bool = True
     telemetry_redact: bool = True
     plant_telemetry_phi: bool = False
+    # streaming SLO engine + burn-rate alerting (DESIGN.md §13). ``slo=False``
+    # removes the engine entirely (zero behavior change: same log minus
+    # ``slo_alert`` records, same metrics). ``slo_autoscale`` opts the
+    # autoscaler into the burn-rate pressure signal — the one SLO feature
+    # that deliberately DOES change fleet behavior, so it defaults off.
+    # Burn windows are the production 5m/1h + 6h/3d pairs scaled by
+    # ``slo_window_scale`` to fit a ~600 s sim horizon.
+    slo: bool = True
+    slo_autoscale: bool = False
+    slo_window_scale: float = 1.0 / 60.0
+    slo_cold_threshold: float = 60.0     # cold-serve latency objective (s)
+    slo_freshness_lag: float = 32.0      # ingest lag objective (feed events)
 
 
 @dataclass
@@ -106,6 +121,10 @@ class FleetReport:
     # trace-layer half of the replayability contract. Kept out of ``metrics``
     # so metric-equality assertions stay about fleet behavior.
     trace_digest: str = ""
+    # SLO plane summary (states, alert counts, budgets, alert/profile
+    # digests) — also kept out of ``metrics``: turning the SLO engine on
+    # must not move any metric-equality assertion.
+    slo: Dict[str, object] = field(default_factory=dict)
 
     def ok(self) -> bool:
         return not self.violations
@@ -130,6 +149,42 @@ class FleetSim:
         # log digest
         self.registry = MetricsRegistry()
         self.tracer = Tracer(self.clock) if config.trace else NULL_TRACER
+        # --- SLO plane (DESIGN.md §13): engine + critical-path profiler +
+        # health controller. Observations are fed from the same hooks that
+        # write the event log, so the alert stream is a pure function of the
+        # run; evaluation happens on pool ticks and once at drain.
+        self.slo_engine: Optional[SloEngine] = None
+        self.profiler: Optional[CriticalPathProfiler] = None
+        self.health: Optional[HealthController] = None
+        self._slo_cold_spec: Optional[SloSpec] = None
+        self._slo_last_dlq = 0
+        self._slo_last_ack = 0
+        if config.slo:
+            s = config.slo_window_scale
+            rules = default_burn_rules(s)
+            budget_window = 86400.0 * s
+            self._slo_cold_spec = SloSpec(
+                "cold_serve", objective=0.9, threshold=config.slo_cold_threshold,
+                kind="latency", rules=rules, budget_window=budget_window,
+            )
+            specs = [
+                SloSpec("warm_hit", objective=0.99, threshold=1.0,
+                        kind="latency", rules=rules, budget_window=budget_window),
+                SloSpec("cohort_e2e", objective=0.9,
+                        threshold=config.delivery_window, kind="latency",
+                        rules=rules, budget_window=budget_window),
+                SloSpec("dlq_rate", objective=0.95, kind="rate",
+                        rules=rules, budget_window=budget_window),
+            ]
+            if config.feed_mutations > 0:
+                specs.append(SloSpec(
+                    "ingest_freshness", objective=0.9,
+                    threshold=config.slo_freshness_lag, unit="events",
+                    kind="freshness", rules=rules, budget_window=budget_window,
+                ))
+            self.slo_engine = SloEngine(specs, registry=self.registry)
+            self.profiler = CriticalPathProfiler()
+            self.health = HealthController(self.slo_engine, self.profiler)
 
         # --- corpus: the identified data lake, with PHI ground truth retained
         self.gen = StudyGenerator(config.seed)
@@ -235,6 +290,11 @@ class FleetSim:
             tick_seconds=config.tick_seconds,
             registry=self.registry,
         )
+        if self.health is not None:
+            self.service.attach_health(self.health)
+            if config.slo_autoscale:
+                # closed loop: burning latency SLOs boost the scale-up target
+                self.pool.autoscaler.pressure_fn = self.health.pressure
 
         self.tickets: List[Tuple[object, object]] = []  # (arrival, ticket)
         # (arrival, serve-time selection, serve-time accession->etag map) per
@@ -304,6 +364,49 @@ class FleetSim:
                 "etag": etag,
             }
         )
+
+    # ------------------------------------------------------------- SLO plane
+    def _slo_observe(self, name: str, value: float) -> None:
+        if self.slo_engine is not None:
+            self.slo_engine.observe(name, t=self.clock.now(), value=value)
+
+    def _slo_delivery(self, msg) -> None:
+        """Cold-serve latency observation for one processed delivery:
+        now − first publish time (``Message.publish_time`` survives
+        redelivery and speculative cloning), bucketed per modality. This is
+        the same quantity ``derive_serve_observations`` reconstructs from
+        the span stream — SloConformance asserts the two streams are equal."""
+        if self.slo_engine is None:
+            return
+        study = self._etag_study.get(self.journal.etag_for(msg.key))
+        modality = getattr(study, "modality", None) or "NA"
+        spec = self.slo_engine.ensure(
+            replace(self._slo_cold_spec, name=f"cold_serve_{modality}")
+        )
+        self.slo_engine.observe(
+            spec.name, t=self.clock.now(),
+            value=self.clock.now() - msg.publish_time,
+        )
+
+    def _slo_evaluate(self) -> None:
+        """Feed the per-tick DLQ/ack deltas, run the burn-rate state machine,
+        and append any fire/resolve transitions to the event log."""
+        if self.slo_engine is None:
+            return
+        now = self.clock.now()
+        dlq = len(self.broker.dead_letter)
+        acked = self.broker.total_acked
+        d_bad, d_good = dlq - self._slo_last_dlq, acked - self._slo_last_ack
+        self._slo_last_dlq, self._slo_last_ack = dlq, acked
+        if d_bad or d_good:
+            self.slo_engine.observe_counts("dlq_rate", t=now, good=d_good, bad=d_bad)
+        for ev in self.slo_engine.evaluate(now):
+            self.log.append(
+                now, "slo_alert",
+                slo=ev.slo, rule=ev.rule, action=ev.action,
+                severity=ev.severity,
+                burn_long=ev.burn_long, burn_short=ev.burn_short,
+            )
 
     def _account_rows(self, accession: str, rows: int) -> None:
         """Maintain the exact catalog row budget this mutation is allowed to
@@ -390,6 +493,12 @@ class FleetSim:
         applied = self.applier.drain()
         self._absorb_applied(applied)
         self.log.append(now, "feed_poll", applied=len(applied), **status)
+        # ingest freshness = how far the durable checkpoint trails the PACS
+        # head, in feed events, sampled at every poll
+        self._slo_observe(
+            "ingest_freshness",
+            float(self.feed.last_seq - self.pooler.checkpoint.floor()),
+        )
         if eq is not None and not self.broker.empty():
             self._schedule_tick(eq, now)
 
@@ -515,6 +624,7 @@ class FleetSim:
             self._drain_feed()
         self.pool.finish()
         self._resolve_and_log_done()
+        self._slo_evaluate()  # final burn evaluation at drain time
         self.log.append(
             self.clock.now(), "drain_done",
             processed=sum(w.processed for w in self.pool._all_workers),
@@ -537,6 +647,8 @@ class FleetSim:
             self._hit_etag[(ticket.cohort_id, acc)] = etag
             # a warm hit is a researcher-visible delivery at admission time
             self._log_delivery(f"{arr.study_id}/{acc}", acc, etag)
+            # ... served synchronously from the lake: zero queueing latency
+            self._slo_observe("warm_hit", 0.0)
         self._cohort_arrival_t[ticket.cohort_id] = self.clock.now()
         if ticket.done():
             self._cohort_done_t[ticket.cohort_id] = self.clock.now()
@@ -596,6 +708,7 @@ class FleetSim:
             dead_lettered=stats.dead_lettered,
             backlog_bytes=stats.backlog_bytes,
         )
+        self._slo_evaluate()
         if not self.broker.empty():
             self._schedule_tick(
                 eq, self.clock.now() + max(busy, self.config.tick_seconds)
@@ -674,13 +787,14 @@ class FleetSim:
         for _, ticket in self.tickets:
             if ticket.done() and ticket.cohort_id not in self._cohort_done_t:
                 self._cohort_done_t[ticket.cohort_id] = self.clock.now()
+                latency = self.clock.now() - self._cohort_arrival_t[ticket.cohort_id]
                 self.log.append(
                     self.clock.now(), "cohort_done",
                     cohort_id=ticket.cohort_id,
-                    latency=self.clock.now()
-                    - self._cohort_arrival_t[ticket.cohort_id],
+                    latency=latency,
                     failed=len(ticket.failed),
                 )
+                self._slo_observe("cohort_e2e", latency)
 
     # ----------------------------------------------------------------- report
     def _report(self, checkers) -> FleetReport:
@@ -761,6 +875,26 @@ class FleetSim:
                     else 0.0,
                 }
             )
+        slo_summary: Dict[str, object] = {}
+        if self.slo_engine is not None:
+            eng = self.slo_engine
+            now = self.clock.now()
+            # fold whatever the tracer saw (empty under trace=False — the
+            # profile then reports zero traces, deterministically)
+            self.profiler.fold(self.tracer.spans())
+            fired = sum(1 for a in eng.alerts if a.action == "fire")
+            slo_summary = {
+                "alerts_fired": fired,
+                "alerts_resolved": len(eng.alerts) - fired,
+                "states": eng.states(),
+                "budget_remaining": {
+                    name: round(eng.budget_remaining(name, now), 6)
+                    for name in eng.specs
+                },
+                "alert_digest": eng.digest(),
+                "profile_digest": self.profiler.digest(),
+                "traces_folded": self.profiler.traces_folded,
+            }
         violations: List[Violation] = []
         for checker in checkers:
             violations.extend(checker.check(self))
@@ -770,6 +904,7 @@ class FleetSim:
             metrics=metrics,
             violations=violations,
             trace_digest=self.tracer.digest(),
+            slo=slo_summary,
         )
 
 
@@ -785,6 +920,7 @@ class _LoggingWorker(DeidWorker):
             self._sim._log_delivery(
                 msg.key, msg.payload["accession"], self.journal.etag_for(msg.key)
             )
+            self._sim._slo_delivery(msg)
         return spent
 
 

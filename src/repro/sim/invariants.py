@@ -711,6 +711,80 @@ class MetricsConservation(InvariantChecker):
                 want,
                 "summed repro_broker_published vs per-broker counters",
             )
+            # executor batch accounting: the executor-side instance counter
+            # (now registry-backed via ExecutorStats/StatsShim) against the
+            # worker pool's independently kept per-run dispatch deltas —
+            # every batched instance must have been driven by some worker
+            want = sum(w.batched_instances for w in sim.pool._all_workers)
+            out += self._balance(
+                "executor batch accounting",
+                registry.value("repro_executor_instances"),
+                want,
+                "summed repro_executor_instances vs worker batched deltas",
+            )
+        return out
+
+
+class SloConformance(InvariantChecker):
+    """The SLO plane's outputs must be recomputable from their inputs
+    (DESIGN.md §13):
+
+    * **replay equality** — rebuilding a fresh engine from the recorded
+      observation log + evaluation times must reproduce the alert sequence
+      bit-for-bit (alerts are a pure function of the run, with no hidden
+      state);
+    * **log conformance** — the ``slo_alert`` records in the event log match
+      the engine's alert list one-to-one, in order;
+    * **trace cross-check** — when tracing is on, the engine's cold-serve
+      observation stream must equal the latencies independently re-derived
+      from the span stream (``derive_serve_observations``): every latency
+      alert is recomputable from the trace digest's underlying spans.
+
+    With the engine disabled the only requirement is that no ``slo_alert``
+    records exist.
+    """
+
+    name = "slo_conformance"
+
+    def check(self, sim: "FleetSim") -> List[Violation]:
+        logged = sim.log.by_kind("slo_alert")
+        eng = getattr(sim, "slo_engine", None)
+        if eng is None:
+            if logged:
+                return [self._v(f"{len(logged)} slo_alert records with no engine")]
+            return []
+        out: List[Violation] = []
+        replayed = eng.replay()
+        if replayed.alerts != eng.alerts:
+            out.append(self._v(
+                f"alert replay mismatch: {len(replayed.alerts)} replayed vs "
+                f"{len(eng.alerts)} recorded"
+            ))
+        want = [(round(a.t, 9), a.slo, a.rule, a.action) for a in eng.alerts]
+        got = [(r["t"], r["slo"], r["rule"], r["action"]) for r in logged]
+        if want != got:
+            out.append(self._v(
+                f"event-log alerts diverge from engine: {len(got)} logged vs "
+                f"{len(want)} recorded"
+            ))
+        tracer = getattr(sim, "tracer", None)
+        if tracer is not None and getattr(tracer, "enabled", False):
+            from repro.obs.slo import derive_serve_observations
+
+            derived = sorted(
+                (round(t, 9), round(v, 9))
+                for t, _key, v in derive_serve_observations(tracer.spans())
+            )
+            observed = sorted(
+                (round(rec["t"], 9), round(rec["value"], 9))
+                for rec in eng.obs_log
+                if rec["slo"].startswith("cold_serve") and rec["value"] is not None
+            )
+            if derived != observed:
+                out.append(self._v(
+                    f"cold-serve observations diverge from the span stream: "
+                    f"{len(observed)} observed vs {len(derived)} derived"
+                ))
         return out
 
 
@@ -729,4 +803,5 @@ DEFAULT_CHECKERS = (
     TraceIntegrity(),
     TelemetryPhiBoundary(),
     MetricsConservation(),
+    SloConformance(),
 )

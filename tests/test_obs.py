@@ -217,6 +217,43 @@ class TestRedactor:
     def test_every_allowed_key_is_a_code_literal(self):
         assert all(k.isidentifier() for k in ALLOWED_ATTR_KEYS)
 
+    def test_length_boundary_is_exactly_64(self):
+        red = Redactor()
+        assert red.safe_value("x" * 64) == "x" * 64
+        assert red.safe_value("x" * 65) == REDACTED
+
+    def test_unicode_and_control_chars_redacted(self):
+        red = Redactor()
+        assert red.safe_value("pâtient") == REDACTED
+        assert red.safe_value("名前") == REDACTED
+        assert red.safe_value("a\x00b") == REDACTED
+        assert red.safe_value("a\nb") == REDACTED
+        assert red.safe_value("a\tb") == REDACTED
+        assert red.safe_value("") == REDACTED  # empty fails the 1-char floor
+
+    def test_nested_list_values_recurse(self):
+        red = Redactor()
+        out = red.safe_value([["ok", "DOE^JOHN"], ("also_ok",)])
+        assert out == [["ok", REDACTED], ["also_ok"]]
+        # dict-valued attrs are opaque: redact wholesale, never key-by-key
+        assert red.safe_value({"PatientName": "DOE^JOHN"}) == REDACTED
+
+    def test_slo_profile_plane_keys_allowlisted(self):
+        red = Redactor()
+        attrs = {
+            "modality": "CT", "slo": "cold_serve_CT", "rule": 0,
+            "action": "fire", "severity": "page",
+            "burn_long": 6.25, "burn_short": 7.5,
+        }
+        assert red.attrs(attrs) == attrs
+
+    def test_slo_plane_keys_still_redact_planted_phi_values(self):
+        red = Redactor()
+        out = red.attrs({"modality": "DOE^JOHN", "slo": "x" * 65,
+                         "action": "patient left AMA"})
+        assert out == {"modality": REDACTED, "slo": REDACTED,
+                       "action": REDACTED}
+
 
 class TestExport:
     def _traced(self):
