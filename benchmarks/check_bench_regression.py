@@ -2,8 +2,8 @@
 regresses against the committed baseline.
 
 Compares headline numbers from fresh ``BENCH_obs.json`` / ``BENCH_slo.json``
-(written into a scratch dir by the CI job) against the checked-in copies at
-the repo root. Each gated metric declares a direction: ``lower`` metrics
+/ ``BENCH_audit.json`` (written into a scratch dir by the CI job) against
+the checked-in copies at the repo root. Each gated metric declares a direction: ``lower`` metrics
 (costs) may not exceed baseline × (1 + tol); ``higher`` metrics
 (throughputs) may not fall below baseline × (1 − tol). The default
 tolerance is deliberately generous (50%) because shared CI runners swing
@@ -14,7 +14,10 @@ drift. Override with ``BENCH_REGRESSION_TOLERANCE=0.2`` etc.
 Exit codes follow ``check_fused_gate.py``: 0 pass, 1 regression,
 2 missing/malformed inputs.
 
-    python benchmarks/check_bench_regression.py <fresh_dir>
+    python benchmarks/check_bench_regression.py <fresh_dir> [file ...]
+
+Extra arguments restrict the gate to those BENCH files (each CI job gates
+only what it freshly measured); with none, every gated file must be present.
 """
 from __future__ import annotations
 
@@ -31,6 +34,9 @@ GATED = (
     ("BENCH_obs.json", "span_cost_us", "lower"),
     ("BENCH_slo.json", "us_per_observation", "lower"),
     ("BENCH_slo.json", "fold_spans_per_s", "higher"),
+    ("BENCH_audit.json", "overhead_pct", "lower"),
+    ("BENCH_audit.json", "append_per_s", "higher"),
+    ("BENCH_audit.json", "verify_per_s", "higher"),
 )
 
 
@@ -43,14 +49,20 @@ def _load(path: Path) -> dict | None:
 
 def main(argv: list[str] | None = None) -> int:
     argv = sys.argv[1:] if argv is None else argv
-    if len(argv) != 1:
-        print("bench-gate: usage: check_bench_regression.py <fresh_dir>")
+    if not argv:
+        print("bench-gate: usage: check_bench_regression.py <fresh_dir> [file ...]")
         return 2
     fresh_dir = Path(argv[0])
+    only = set(argv[1:])
+    unknown = only - {fname for fname, _, _ in GATED}
+    if unknown:
+        print(f"bench-gate: FAIL — no gated metrics for {sorted(unknown)}")
+        return 2
+    gated = [g for g in GATED if not only or g[0] in only]
     tol = float(os.environ.get("BENCH_REGRESSION_TOLERANCE", "0.5"))
 
     failures = 0
-    for fname, metric, direction in GATED:
+    for fname, metric, direction in gated:
         base_doc = _load(REPO_ROOT / fname)
         fresh_doc = _load(fresh_dir / fname)
         if base_doc is None or fresh_doc is None:

@@ -8,6 +8,7 @@ import traceback
 
 def main() -> None:
     from benchmarks import (
+        auditbench,
         autoscale,
         catalogbench,
         cohortbench,
@@ -31,6 +32,7 @@ def main() -> None:
         ("fleetbench", fleetbench.main),
         ("ingestbench", ingestbench.main),
         ("obsbench", obsbench.main),
+        ("auditbench", auditbench.main),
         ("slobench", slobench.main),
         ("autoscale", autoscale.main),
         ("kernelbench", kernelbench.main),

@@ -12,6 +12,7 @@ import argparse
 import json
 from pathlib import Path
 
+from repro.audit import AuditLedger, DisclosureReport
 from repro.core import DeidPipeline, TrustMode
 from repro.detect import DetectorPolicy
 from repro.dicom.generator import StudyGenerator
@@ -48,6 +49,11 @@ def main() -> None:
                          "health loop scales the pool up — then the same "
                          "seed with the signal off shows the slower "
                          "recovery (DESIGN.md §13)")
+    ap.add_argument("--audit", action="store_true",
+                    help="thread the tamper-evident audit ledger through the "
+                         "run, then verify the hash chain, print the "
+                         "accounting-of-disclosures report, and show the "
+                         "tamper control failing verify (DESIGN.md §14)")
     args = ap.parse_args()
 
     # ---------------------------------------------------------------- ingest
@@ -66,20 +72,25 @@ def main() -> None:
     # ---------------------------------------------------------------- submit
     clock = SimClock()
     tracer = Tracer(clock) if args.trace else NULL_TRACER
-    broker = Broker(clock, visibility_timeout=120, tracer=tracer)
     # fresh deployment: a journal left by a previous example run would replay
     # its completions and mark this run's submissions DONE at admission
     Path(args.journal).unlink(missing_ok=True)
+    ledger = None
+    if args.audit:
+        ledger_path = Path(f"{args.journal}.audit")
+        ledger_path.unlink(missing_ok=True)
+        ledger = AuditLedger(ledger_path, clock=clock)
+    broker = Broker(clock, visibility_timeout=120, tracer=tracer, ledger=ledger)
     journal = Journal(args.journal)
-    result_lake = ResultLake(max_bytes=1 << 30)  # de-id result cache (§6)
+    result_lake = ResultLake(max_bytes=1 << 30, ledger=ledger)  # de-id cache (§6)
     policy = DetectorPolicy()  # registry-first burned-in-text fallback (§9)
     pipeline = DeidPipeline(
         blank_fn=scrub_ops.blank_fn, lake=result_lake, detector_policy=policy,
-        tracer=tracer,
+        tracer=tracer, ledger=ledger,
     )
     service = DeidService(
         broker, lake, journal, result_lake=result_lake, pipeline=pipeline,
-        tracer=tracer,
+        tracer=tracer, ledger=ledger,
     )
     service.register_study("IRB-70007", TrustMode.POST_IRB)
     service.mark_ineligible("ACC00003")  # research opt-out
@@ -95,7 +106,8 @@ def main() -> None:
     injector = FailureInjector(crash_rate=0.08, straggler_rate=0.05, slow_factor=30.0)
 
     def make_worker(wid: str) -> DeidWorker:
-        return DeidWorker(wid, pipeline, lake, dest, journal, tracer=tracer)
+        return DeidWorker(wid, pipeline, lake, dest, journal, tracer=tracer,
+                          ledger=ledger)
 
     pool = WorkerPool(
         broker,
@@ -219,14 +231,19 @@ def main() -> None:
     # the very same cohort that just served warm now serves cold.
     edited = DeidPipeline(
         blank_fn=scrub_ops.blank_fn, lake=result_lake,
-        detector_policy=DetectorPolicy(row_frac=0.05),
+        detector_policy=DetectorPolicy(row_frac=0.05), ledger=ledger,
     )
-    broker2 = Broker(clock, visibility_timeout=120)
+    if ledger is not None:
+        ledger.append("policy_edit", action="redeploy",
+                      ruleset=edited.ruleset_fingerprint().digest,
+                      detector_sha=edited.scrub.policy.fingerprint_identity)
+    broker2 = Broker(clock, visibility_timeout=120, ledger=ledger)
     journal2_path = args.journal + ".edited"
     Path(journal2_path).unlink(missing_ok=True)
     journal2 = Journal(journal2_path)
     service2 = DeidService(
-        broker2, lake, journal2, result_lake=result_lake, pipeline=edited
+        broker2, lake, journal2, result_lake=result_lake, pipeline=edited,
+        ledger=ledger,
     )
     service2.register_study("IRB-70007", TrustMode.POST_IRB)
     recold = service2.submit_cohort("IRB-70007", unknown_cohort, mrns)
@@ -237,7 +254,8 @@ def main() -> None:
     pool5 = WorkerPool(
         broker2,
         Autoscaler(broker2, AutoscalerConfig(delivery_window=1800), clock),
-        lambda wid: DeidWorker(wid, edited, lake, dest, journal2),
+        lambda wid: DeidWorker(wid, edited, lake, dest, journal2,
+                               ledger=ledger),
     )
     pool5.drain()
     service2.planner.resolve()
@@ -260,7 +278,7 @@ def main() -> None:
     mworkers = []
 
     def make_edited_worker(wid: str) -> DeidWorker:
-        w = DeidWorker(wid, edited, lake, dest, journal2)
+        w = DeidWorker(wid, edited, lake, dest, journal2, ledger=ledger)
         mworkers.append(w)
         return w
 
@@ -385,6 +403,37 @@ def main() -> None:
         print("burn signal bought "
               f"{results['off'].metrics['sim_minutes'] - results['on'].metrics['sim_minutes']:.2f} "
               "sim-min of recovery time on the same seed")
+
+    # --------------------- audit: verify chain + disclosures (§14)
+    # Everything above rode the hash-chained ledger: every fetch, deid run,
+    # lake byte in/out, delivery, and the policy redeploy. Verify the chain,
+    # fold it into the accounting-of-disclosures report, then show the
+    # tamper control: one flipped byte and verify() names the damaged line.
+    if args.audit:
+        ledger.flush()
+        problems = ledger.verify()
+        assert problems == [], problems
+        kinds = ", ".join(f"{k}×{v}" for k, v in sorted(ledger.kind_counts().items()))
+        print(f"\n=== tamper-evident audit ledger (DESIGN.md §14) ===")
+        print(f"chain:        {len(ledger)} records verify clean ({kinds})")
+        print(f"              head {ledger.head()[:16]}, digest {ledger.digest()[:16]}")
+        print(DisclosureReport.from_ledger(ledger).summary())
+        # the tamper control, on a scratch copy of the ledger file
+        import shutil
+        tampered_path = Path(f"{args.journal}.audit.tampered")
+        shutil.copy(ledger.path, tampered_path)
+        raw = bytearray(tampered_path.read_bytes())
+        flip_at = len(raw) // 2
+        raw[flip_at] = raw[flip_at] ^ 0x01
+        tampered_path.write_bytes(bytes(raw))
+        tampered = AuditLedger(tampered_path)
+        tamper_problems = tampered.verify()
+        tampered.close()
+        tampered_path.unlink()
+        assert tamper_problems, "one flipped byte must fail verification"
+        print(f"tamper check: flipped 1 byte mid-file -> verify() fails: "
+              f"{tamper_problems[0]}")
+        ledger.close()
 
 
 if __name__ == "__main__":

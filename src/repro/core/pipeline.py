@@ -10,6 +10,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import TYPE_CHECKING, Dict, List, Optional, Sequence, Tuple
 
+from repro.audit.ledger import NULL_LEDGER
+from repro.audit.records import DEID_EXECUTE
 from repro.core.anonymize import AnonymizerStage
 from repro.core.batch import BatchedDeidExecutor
 from repro.core.filter import FilterStage
@@ -91,6 +93,7 @@ class DeidPipeline:
         detector_policy=None,
         tracer=None,
         registry=None,
+        ledger=None,
     ) -> None:
         self.filter = FilterStage(filter_script or default_scripts.DEFAULT_FILTER_SCRIPT)
         self.anonymizer = AnonymizerStage(
@@ -102,11 +105,14 @@ class DeidPipeline:
             recompress=recompress,
             policy=detector_policy,
             registry=registry,
+            ledger=ledger,
             **scrub_kwargs,
         )
         # deterministic tracing (repro.obs): run_study opens per-study spans;
         # the executor emits per-dispatch kernel profiling spans under them
         self.tracer = tracer if tracer is not None else NULL_TRACER
+        # audit ledger (repro.audit): one deid_execute record per run_study
+        self.ledger = ledger if ledger is not None else NULL_LEDGER
         # shape-bucketed batch dispatch over each study's instances; the
         # per-instance loop survives as process_study_serial (fallback/oracle)
         self.executor: Optional[BatchedDeidExecutor] = (
@@ -326,6 +332,15 @@ class DeidPipeline:
             manifest.add(entry)
             if out is not None:
                 result.delivered.append(out)
+        self.ledger.append(
+            DEID_EXECUTE,
+            accession=request.accession,
+            project=request.research_study,
+            instances=len(study.datasets),
+            lake_hits=result.cache_hits,
+            cold=result.cache_misses,
+            ruleset=self.ruleset_fingerprint().digest,
+        )
         return result
 
     def process_study(

@@ -19,6 +19,8 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.audit.ledger import NULL_LEDGER
+from repro.audit.records import DETECTOR_DECISION
 from repro.core.rules import parse_scrub_script, script_sha
 from repro.detect.policy import DetectorPolicy
 from repro.detect.regions import detect_bands_for, merge_rects, policy_thresh
@@ -64,6 +66,7 @@ class ScrubStage:
         sv: int = 1,
         policy: Optional[DetectorPolicy] = None,
         registry=None,
+        ledger=None,
     ) -> None:
         self.script_text = script_text
         self.rules = parse_scrub_script(script_text)
@@ -74,6 +77,7 @@ class ScrubStage:
         # burned-in pixel-PHI detector policy (DESIGN.md §9); None and
         # mode="off" are both the legacy registry-only behavior
         self.policy = policy
+        self.ledger = ledger if ledger is not None else NULL_LEDGER
         # registry: optional shared MetricsRegistry so fleet-level snapshots
         # see repro_detect_* totals across every pipeline
         self.detect_stats = DetectStats(registry)
@@ -181,6 +185,17 @@ class ScrubStage:
                 self.detect_stats.detected += 1
                 self.detect_stats.bands += len(bands)
             combined.extend(drects)
+            # each detector run is a PHI decision: which pixels get blanked,
+            # under which versioned policy — auditable per instance
+            self.ledger.append(
+                DETECTOR_DECISION,
+                modality=report.modality,
+                device=report.device,
+                registry_hit=registry_hit,
+                detected=bool(bands),
+                bands=len(bands),
+                detector_sha=policy.digest,
+            )
         # registry + detector unions routinely overlap: normalize so the
         # fused kernel never double-blanks a tile (blanked set unchanged)
         applied = merge_rects(combined)

@@ -19,10 +19,11 @@ as ``repro.queueing.journal``.
 """
 from __future__ import annotations
 
-import json
 import os
 from pathlib import Path
-from typing import Dict, List, Optional, Set
+from typing import Dict, List, Set
+
+from repro.utils.wal import append_jsonl, replay_jsonl
 
 
 class Checkpoint:
@@ -36,6 +37,7 @@ class Checkpoint:
         self.applied_seq: Dict[str, int] = {}        # accession -> max applied seq
         self.double_applied: List[int] = []          # seqs with >1 op record
         self.torn_tail = 0
+        self.corrupt_lines = 0  # malformed non-final lines skipped at replay
         self._floor = 0
         if self.path.exists():
             self._replay()
@@ -63,34 +65,12 @@ class Checkpoint:
                 self.applied_seq[acc] = max(self.applied_seq.get(acc, 0), seq)
 
     def _replay(self) -> None:
-        with open(self.path, "rb") as fh:
-            raw = fh.read()
-        body, sep, tail = raw.rpartition(b"\n")
-        for line in body.split(b"\n") if sep else []:
-            stripped = line.strip()
-            if not stripped:
-                continue
-            try:
-                rec = json.loads(stripped)
-            except json.JSONDecodeError:
-                continue
-            if isinstance(rec, dict):
-                self._absorb(rec)
-        if tail.strip():
-            try:
-                rec = json.loads(tail)
-                if not isinstance(rec, dict):
-                    raise ValueError("not a record")
-            except ValueError:
-                # torn tail from a crash mid-append: recover all fully-written
-                # records, truncate the fragment so appends stay line-aligned
-                self.torn_tail += 1
-                with open(self.path, "r+b") as fh:
-                    fh.truncate(len(raw) - len(tail))
-            else:
-                self._absorb(rec)
-                with open(self.path, "ab") as fh:
-                    fh.write(b"\n")
+        # Torn-tail repair + corrupt-line tolerance via the shared WAL helper.
+        replay = replay_jsonl(self.path)
+        self.torn_tail += replay.torn_tail
+        self.corrupt_lines += replay.corrupt_lines
+        for rec in replay.records:
+            self._absorb(rec)
         self._refloor()
 
     def _refloor(self) -> None:
@@ -105,9 +85,7 @@ class Checkpoint:
         return self._floor
 
     def _append(self, rec: dict) -> None:
-        self._fh.write(json.dumps(rec) + "\n")
-        self._fh.flush()
-        os.fsync(self._fh.fileno())
+        append_jsonl(self._fh, rec)
 
     def mark_seen(self, seq: int) -> None:
         if seq in self.seen:

@@ -27,6 +27,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
 
+from repro.audit.ledger import NULL_LEDGER
+from repro.audit.records import INGEST_APPLY
 from repro.ingest.checkpoint import Checkpoint
 from repro.ingest.feed import ChangeEvent, FeedOutage, PacsFeed
 from repro.obs.metrics import StatsShim
@@ -219,6 +221,7 @@ class IngestApplier:
         worker_id: str = "ingest-applier",
         tracer=None,
         registry=None,
+        ledger=None,
     ) -> None:
         self.broker = broker
         self.feed = feed
@@ -226,7 +229,20 @@ class IngestApplier:
         self.checkpoint = checkpoint
         self.worker_id = worker_id
         self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.ledger = ledger if ledger is not None else NULL_LEDGER
         self.stats = ApplierStats(registry)
+
+    def _outcome(
+        self, seq: int, acc: str, etag: str, op: str, outcome: str, rows: int = 0
+    ) -> None:
+        """Checkpoint the terminal outcome AND audit it: every source
+        mutation that reached a decision (applied / dup / stale) is a
+        PHI-relevant change to what later deliveries will disclose."""
+        self.checkpoint.mark_outcome(seq, acc, etag, op, outcome, rows=rows)
+        self.ledger.append(
+            INGEST_APPLY, feed_seq=seq, accession=acc, etag=etag, op=op,
+            outcome=outcome, rows=rows,
+        )
 
     def _apply_one(self, payload: Dict[str, Any]) -> Optional[AppliedOp]:
         ckpt = self.checkpoint
@@ -242,12 +258,12 @@ class IngestApplier:
         if seq < ckpt.applied_seq.get(acc, 0):
             # out-of-order: a newer event for this accession already landed —
             # applying the older one would regress the lake (freshness fence)
-            ckpt.mark_outcome(seq, acc, etag, kind, "stale")
+            self._outcome(seq, acc, etag, kind, "stale")
             self.stats.stale_skipped += 1
             return None
         if kind == "delete":
             self.store.delete_study(acc)
-            ckpt.mark_outcome(seq, acc, "", "delete", "applied")
+            self._outcome(seq, acc, "", "delete", "applied")
             self.stats.applied += 1
             self.stats.deletes += 1
             return AppliedOp(seq, "delete", acc, "")
@@ -255,20 +271,20 @@ class IngestApplier:
         if fetched is None:
             # created/updated then deleted before we applied: the delete
             # event is (or will be) in the sequence — skip, don't resurrect
-            ckpt.mark_outcome(seq, acc, etag, kind, "stale")
+            self._outcome(seq, acc, etag, kind, "stale")
             self.stats.stale_skipped += 1
             return None
         study, current_etag = fetched
         if ckpt.applied_etag.get(acc) == current_etag:
             # effect-idempotent redelivery: these exact bytes already landed
-            ckpt.mark_outcome(seq, acc, current_etag, kind, "dup")
+            self._outcome(seq, acc, current_etag, kind, "dup")
             self.stats.effect_deduped += 1
             return None
         rows = len(study.datasets)
         # apply current bytes (not the event's snapshot): a burst of updates
         # collapses to one put + dups, and the lake never lags the last ack
         self.store.put_study(acc, study)
-        ckpt.mark_outcome(seq, acc, current_etag, kind, "applied", rows=rows)
+        self._outcome(seq, acc, current_etag, kind, "applied", rows=rows)
         self.stats.applied += 1
         return AppliedOp(seq, "put", acc, current_etag, study=study, rows=rows)
 

@@ -25,6 +25,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Set, Tuple
 
+from repro.audit.ledger import NULL_LEDGER
+from repro.audit.records import DELIVERY, PROVENANCE
 from repro.core.manifest import Manifest
 from repro.core.pipeline import DeidRequest, build_request
 from repro.core.pseudonym import PseudonymService
@@ -113,6 +115,7 @@ class CohortPlanner:
         ruleset_digest: str = "",
         tracer=None,
         registry=None,
+        ledger=None,
     ) -> None:
         self.result_lake = result_lake
         self.source = source
@@ -123,6 +126,7 @@ class CohortPlanner:
         # DeidService wires both sides from the same DeidPipeline
         self.ruleset_digest = ruleset_digest
         self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.ledger = ledger if ledger is not None else NULL_LEDGER
         self.stats = PlannerStats(registry)
         self._inflight: Dict[str, _InFlight] = {}
         self._cohorts = 0
@@ -169,6 +173,16 @@ class CohortPlanner:
         mrn_lookup: Dict[str, str],
         ticket: CohortTicket,
     ) -> None:
+        with self.ledger.batch():  # one fsync per cohort admission
+            self._partition_batched(pseudo, accessions, mrn_lookup, ticket)
+
+    def _partition_batched(
+        self,
+        pseudo: PseudonymService,
+        accessions: List[str],
+        mrn_lookup: Dict[str, str],
+        ticket: CohortTicket,
+    ) -> None:
         for acc in accessions:
             self.stats.accessions += 1
             if self.validate is not None:
@@ -191,6 +205,7 @@ class CohortPlanner:
                 ticket.hits.append(acc)
                 ticket.outputs[acc], ticket.manifests[acc] = warm
                 self.stats.lake_hits += 1
+                self._record_hit(key, acc, request, temp="warm", instances=len(warm[0]))
                 continue
             done = self.journal.manifest_for(key)
             if done is not None and not self._journal_stale(key, acc):
@@ -199,6 +214,7 @@ class CohortPlanner:
                 ticket.hits.append(acc)
                 ticket.manifests[acc] = done
                 self.stats.journal_hits += 1
+                self._record_hit(key, acc, request, temp="journal", instances=0)
                 continue
             if done is not None:
                 # journal-done but the source mutated since: the recorded
@@ -305,6 +321,39 @@ class CohortPlanner:
         return wedged
 
     # ------------------------------------------------------------- internals
+    def _record_hit(
+        self, key: str, accession: str, request: DeidRequest, temp: str, instances: int
+    ) -> None:
+        """Delivery + provenance records for a warm/journal-hit admission.
+        Warm hits disclose lake bytes (each underlying read already emitted a
+        ``lake_hit`` record); journal hits replay only the manifest. The etag
+        recorded is the *current* source etag — the freshness check that
+        admitted the hit proved it matches the completed version."""
+        etag = self.source.study_etag(accession)
+        skey = (
+            study_key(accession, etag, self.ruleset_digest, request_salt(request))
+            if temp == "warm" and etag is not None else ""
+        )
+        self.ledger.append(
+            DELIVERY, key=key, accession=accession, etag=etag, temp=temp, worker="planner"
+        )
+        self.ledger.append(
+            PROVENANCE,
+            key=key,
+            project=request.research_study,
+            accession=accession,
+            lake_key=skey,
+            etag=etag,
+            ruleset=self.ruleset_digest,
+            detector_sha="",
+            kernel_path="lake" if temp == "warm" else "journal",
+            batched=0,
+            trace_id="",
+            temp=temp,
+            instances=instances,
+            nbytes=0,
+        )
+
     def _journal_stale(self, key: str, accession: str) -> bool:
         """True when the journal's completion for ``key`` was computed from a
         source version that has since mutated (etag drift). Legacy records

@@ -15,6 +15,8 @@ from __future__ import annotations
 from collections import OrderedDict
 from typing import Dict, List, Optional
 
+from repro.audit.ledger import NULL_LEDGER
+from repro.audit.records import LAKE_EVICT, LAKE_HIT, LAKE_WRITE
 from repro.obs.metrics import MetricsRegistry, StatsShim
 
 
@@ -87,10 +89,12 @@ class ResultLake:
         max_bytes: int = 256 * 1024 * 1024,
         backend: Optional[LakeBackend] = None,
         registry: Optional[MetricsRegistry] = None,
+        ledger=None,
     ) -> None:
         self.max_bytes = max_bytes
         self.backend = backend or InMemoryBackend()
         self.stats = LakeStats(registry)
+        self.ledger = ledger if ledger is not None else NULL_LEDGER
         self._lru: "OrderedDict[str, int]" = OrderedDict()  # key -> nbytes
         self._stored_bytes = 0
 
@@ -101,12 +105,14 @@ class ResultLake:
             return None
         data = self.backend.get_bytes(key)
         if data is None:  # backend lost the blob (e.g. external pruning)
-            self._drop(key)
+            self._drop(key, reason="lost")
             self.stats.misses += 1
             return None
         self._lru.move_to_end(key)
         self.stats.hits += 1
         self.stats.bytes_out += len(data)
+        # every byte served out of the lake is a disclosure: account for it
+        self.ledger.append(LAKE_HIT, lake_key=key, nbytes=len(data))
         return data
 
     def contains(self, key: str) -> bool:
@@ -128,18 +134,21 @@ class ResultLake:
         self._stored_bytes += len(data)
         self.stats.puts += 1
         self.stats.bytes_in += len(data)
+        self.ledger.append(LAKE_WRITE, lake_key=key, nbytes=len(data))
         while self._stored_bytes > self.max_bytes:
             self._evict_one()
         return True
 
     def delete(self, key: str) -> None:
-        self._drop(key)
+        self._drop(key, reason="invalidate")
 
     # -------------------------------------------------------------- internals
-    def _drop(self, key: str) -> None:
+    def _drop(self, key: str, reason: str = "invalidate") -> None:
         if key in self._lru:
-            self._stored_bytes -= self._lru.pop(key)
+            nbytes = self._lru.pop(key)
+            self._stored_bytes -= nbytes
             self.backend.delete(key)
+            self.ledger.append(LAKE_EVICT, lake_key=key, nbytes=nbytes, reason=reason)
 
     def _evict_one(self) -> None:
         key, nbytes = self._lru.popitem(last=False)
@@ -147,6 +156,7 @@ class ResultLake:
         self.backend.delete(key)
         self.stats.evictions += 1
         self.stats.evicted_bytes += nbytes
+        self.ledger.append(LAKE_EVICT, lake_key=key, nbytes=nbytes, reason="lru")
 
     # ------------------------------------------------------------------ misc
     def stored_bytes(self) -> int:

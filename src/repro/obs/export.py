@@ -49,6 +49,16 @@ ALLOWED_ATTR_KEYS = frozenset({
     "ok", "deduped", "fenced", "crashed", "mode",
     # SLO / critical-path profile plane (DESIGN.md §13)
     "modality", "slo", "rule", "action", "severity", "burn_long", "burn_short",
+    # audit / provenance plane (DESIGN.md §14). These mirror the ledger's
+    # payload fields: lineage handles are digests/ids (hex, charset-safe),
+    # never free text, but they still cross the value rule like everything.
+    "project", "etag", "lake_key", "ruleset", "detector_sha", "kernel_path",
+    "batched", "trace_id", "temp", "reason", "device", "registry_hit",
+    "detected", "op", "outcome", "channel", "records", "accessions", "journal",
+    "feed_seq",
+    "rulesets", "first_t", "last_t", "deid_executions", "lake_writes",
+    "lake_evictions", "lake_bytes_in", "lake_bytes_out", "dead_lettered",
+    "ledger_records", "ledger_digest",
 })
 
 _SAFE_VALUE_RE = re.compile(r"^[A-Za-z0-9_./:#@\-]{1,64}$")
@@ -80,17 +90,26 @@ class Redactor:
         return {k: self.safe_value(v) for k, v in attrs.items() if k in self.allowed_keys}
 
 
-def export_spans_jsonl(spans: Iterable[Span], redactor: Redactor) -> str:
+def _audit_export(ledger, channel: str, records: int) -> None:
+    """Telemetry leaving the system boundary is itself a PHI-relevant action:
+    record it in the audit ledger when the caller passes one (DESIGN.md §14).
+    ``ledger=None`` keeps exporters pure functions, as before."""
+    if ledger is not None and getattr(ledger, "enabled", False):
+        ledger.append("telemetry_export", channel=channel, records=records)
+
+
+def export_spans_jsonl(spans: Iterable[Span], redactor: Redactor, ledger=None) -> str:
     """One canonical JSON object per line, attrs redacted. '' if no spans."""
     lines: List[str] = []
     for s in spans:
         d = s.to_dict()
         d["attrs"] = redactor.attrs(d["attrs"])
         lines.append(json.dumps(_canonical(d), sort_keys=True, separators=(",", ":")))
+    _audit_export(ledger, "spans_jsonl", len(lines))
     return "\n".join(lines) + ("\n" if lines else "")
 
 
-def export_metrics_jsonl(snapshot: Dict[str, float], redactor: Redactor) -> str:
+def export_metrics_jsonl(snapshot: Dict[str, float], redactor: Redactor, ledger=None) -> str:
     """Flat registry snapshot as JSONL; label *values* are redacted too.
 
     Series keys look like ``repro_lake_hits{modality="CT"}``; the name part
@@ -105,6 +124,7 @@ def export_metrics_jsonl(snapshot: Dict[str, float], redactor: Redactor) -> str:
         lines.append(json.dumps(
             _canonical({"metric": name, "labels": safe_labels, "value": snapshot[key]}),
             sort_keys=True, separators=(",", ":")))
+    _audit_export(ledger, "metrics_jsonl", len(lines))
     return "\n".join(lines) + ("\n" if lines else "")
 
 
@@ -119,7 +139,7 @@ def _split_series_key(key: str) -> tuple:
     return name, labels
 
 
-def to_chrome_trace(spans: Iterable[Span], redactor: Redactor) -> Dict[str, object]:
+def to_chrome_trace(spans: Iterable[Span], redactor: Redactor, ledger=None) -> Dict[str, object]:
     """Chrome trace-event JSON (``chrome://tracing`` / Perfetto loadable).
 
     Each trace id becomes a ``tid`` so one work item's spans stack on one
@@ -146,4 +166,5 @@ def to_chrome_trace(spans: Iterable[Span], redactor: Redactor) -> Dict[str, obje
          "args": {"name": f"trace {trace_id}"}}
         for trace_id, tid in tids.items()
     ]
+    _audit_export(ledger, "chrome_trace", len(events))
     return {"traceEvents": thread_names + events, "displayTimeUnit": "ms"}

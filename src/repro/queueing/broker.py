@@ -16,6 +16,8 @@ import itertools
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
 
+from repro.audit.ledger import NULL_LEDGER
+from repro.audit.records import DEAD_LETTER as AUDIT_DEAD_LETTER
 from repro.obs.metrics import StatsShim
 from repro.obs.trace import NULL_TRACER, trace_id_for
 from repro.utils.timing import SimClock
@@ -73,11 +75,13 @@ class Broker:
         max_deliveries: int = 5,
         tracer=None,
         registry=None,
+        ledger=None,
     ) -> None:
         self.clock = clock or SimClock()
         self.visibility_timeout = visibility_timeout
         self.max_deliveries = max_deliveries
         self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.ledger = ledger if ledger is not None else NULL_LEDGER
         self.counters = BrokerCounters(registry)
         self._ids = itertools.count(1)
         self._available: List[Message] = []
@@ -148,6 +152,9 @@ class Broker:
                     trace_id=trace_id_for(m.key, m.deliveries),
                     key=m.key,
                     deliveries=m.deliveries,
+                )
+                self.ledger.append(
+                    AUDIT_DEAD_LETTER, key=m.key, deliveries=m.deliveries, reason="lease_expired"
                 )
             else:
                 # fresh id per delivery = per-delivery ack token: a stale ack
@@ -229,6 +236,9 @@ class Broker:
                 trace_id=trace_id_for(msg.key, msg.deliveries),
                 key=msg.key,
                 deliveries=msg.deliveries,
+            )
+            self.ledger.append(
+                AUDIT_DEAD_LETTER, key=msg.key, deliveries=msg.deliveries, reason="nack"
             )
         else:
             msg.msg_id = next(self._ids)  # fresh ack token (see _expire_leases)

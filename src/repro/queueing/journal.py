@@ -16,6 +16,7 @@ from pathlib import Path
 from typing import Dict, Iterator, Optional
 
 from repro.core.manifest import Manifest
+from repro.utils.wal import append_jsonl, replay_jsonl
 
 
 class Journal:
@@ -39,42 +40,13 @@ class Journal:
         self._completed[rec["key"]] = rec
 
     def _replay(self) -> None:
-        # Byte-level replay so a torn tail (crash mid-append) can be
-        # *repaired*, not just skipped: appending after a partial final line
-        # would concatenate the next record onto the garbage and corrupt both.
-        with open(self.path, "rb") as fh:
-            raw = fh.read()
-        body, sep, tail = raw.rpartition(b"\n")
-        for line in body.split(b"\n") if sep else []:
-            stripped = line.strip()
-            if not stripped:
-                continue
-            try:
-                rec = json.loads(stripped)
-                if not isinstance(rec, dict):
-                    raise ValueError("not a record")
-            except ValueError:
-                # a malformed line that is NOT the tail was fully written and
-                # then damaged — tolerated (skip) but surfaced via the counter
-                self.corrupt_lines += 1
-                continue
+        # Torn-tail repair + corrupt-line tolerance live in the shared WAL
+        # helper (repro.utils.wal); the journal keeps only its absorb logic.
+        replay = replay_jsonl(self.path)
+        self.torn_tail += replay.torn_tail
+        self.corrupt_lines += replay.corrupt_lines
+        for rec in replay.records:
             self._absorb(rec)
-        if tail.strip():
-            try:
-                rec = json.loads(tail)
-                if not isinstance(rec, dict):
-                    raise ValueError("not a record")
-            except ValueError:
-                # torn tail: the crash interrupted the final append. Recover
-                # every fully-written record and truncate the fragment away.
-                self.torn_tail += 1
-                with open(self.path, "r+b") as fh:
-                    fh.truncate(len(raw) - len(tail))
-            else:
-                # complete record, missing only its newline: finish the line
-                self._absorb(rec)
-                with open(self.path, "ab") as fh:
-                    fh.write(b"\n")
 
     # ------------------------------------------------------------------ api
     def is_done(self, key: str) -> bool:
@@ -106,9 +78,7 @@ class Journal:
             "manifest": json.loads(manifest.to_json()),
         }
         self._completed[key] = rec
-        self._fh.write(json.dumps(rec) + "\n")
-        self._fh.flush()
-        os.fsync(self._fh.fileno())
+        append_jsonl(self._fh, rec)
         return True
 
     def etag_for(self, key: str) -> Optional[str]:

@@ -53,11 +53,15 @@ class DeidService:
         catalog=None,
         tracer=None,
         registry=None,
+        ledger=None,
     ) -> None:
         self.broker = broker
         self.lake = lake
         self.journal = journal
         self.tracer = tracer if tracer is not None else NULL_TRACER
+        # audit ledger (repro.audit): handed to the planner so warm/journal
+        # admissions account their deliveries; workers get it via the pool
+        self.ledger = ledger
         # optional metadata catalog (repro.catalog.StudyCatalog): enables
         # query-then-de-identify via submit_query
         self.catalog = catalog
@@ -87,6 +91,7 @@ class DeidService:
                 ruleset_digest=pipeline.ruleset_fingerprint().digest,
                 tracer=self.tracer,
                 registry=registry,
+                ledger=ledger,
             )
 
     # --------------------------------------------------------------- health

@@ -18,6 +18,8 @@ import hashlib
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
 
+from repro.audit.ledger import NULL_LEDGER
+from repro.audit.records import DELIVERY, PROVENANCE, SOURCE_FETCH
 from repro.core.manifest import Manifest
 from repro.core.pipeline import DeidPipeline, DeidRequest
 from repro.obs.metrics import StatsShim
@@ -81,6 +83,10 @@ class DeidWorker:
     zombie_aborts: int = 0      # lease lost mid-compute: aborted without ack
     evicted_stale: int = 0      # superseded study records dropped from the lake
     tracer: object = None       # repro.obs Tracer (None -> NULL_TRACER)
+    ledger: object = None       # repro.audit AuditLedger (None -> NULL_LEDGER)
+    # negative-control knob for the AuditCompleteness checker: suppress the
+    # delivery/provenance records a completion is supposed to produce
+    audit_emit_provenance: bool = True
 
     def process(self, broker: Broker, msg: Message, injector: Optional[FailureInjector] = None) -> float:
         """Process one message; returns simulated seconds of work.
@@ -144,6 +150,18 @@ class DeidWorker:
             study = self.source.get_study(accession)
             fetch_span.set(nbytes=study.nbytes(), instances=len(study.datasets),
                            modality=str(getattr(study, "modality", None) or "NA"))
+        # the fetch itself is a PHI access (identified bytes left the source),
+        # auditable even when a later fence discards this attempt's work
+        ledger = self.ledger if self.ledger is not None else NULL_LEDGER
+        ledger.append(
+            SOURCE_FETCH,
+            key=key,
+            accession=accession,
+            etag=source_etag,
+            worker=self.worker_id,
+            attempt=msg.deliveries,
+            nbytes=study.nbytes(),
+        )
         slowdown = injector.slowdown(self.worker_id, msg) if injector else 1.0
         work_seconds = (study.nbytes() / self.throughput) * slowdown
         batched0 = self.pipeline.executor.stats.instances if self.pipeline.executor else 0
@@ -152,8 +170,11 @@ class DeidWorker:
         with tracer.span("worker.deid", bytes_in=study.nbytes(), busy_s=work_seconds):
             result = self.pipeline.run_study(study, request, self.worker_id)
         outputs, manifest = result.delivered, result.manifest
+        batched_delta = 0
         if self.pipeline.executor is not None:
-            self.batched_instances += self.pipeline.executor.stats.instances - batched0
+            batched_delta = self.pipeline.executor.stats.instances - batched0
+            self.batched_instances += batched_delta
+        self._batched_delta = batched_delta  # provenance: batch-bucket fact
         # unknown-device lookups are a surfaced worker metric, never a silent
         # pass-through (the shared scrub stage counts; workers take deltas)
         self.unknown_devices += dstats.unknown_lookups - unknown0
@@ -189,11 +210,56 @@ class DeidWorker:
         if self.journal.record_done(key, manifest, self.worker_id, source_etag=source_etag):
             self.processed += 1
             span.set(ok=True)
+            if self.audit_emit_provenance:
+                self._record_provenance(
+                    ledger, key, accession, source_etag, request, result, msg, study
+                )
         else:
             self.deduped += 1  # lost the first-ack race to a speculative clone
             span.set(deduped=True)
         broker.ack(msg.msg_id)
         return work_seconds
+
+    def _record_provenance(
+        self, ledger, key, accession, source_etag, request, result, msg, study
+    ) -> None:
+        """One delivery + one provenance record per journal-accepted
+        completion: the lineage chain ``lake key → source etag → ruleset
+        fingerprint → detector sha → kernel path → trace id`` that makes a
+        delivered instance reconstructible from the ledger alone."""
+        from repro.lake.fingerprint import request_salt, study_key
+
+        digest = self.pipeline.ruleset_fingerprint().digest
+        policy = self.pipeline.scrub.policy
+        skey = (
+            study_key(accession, source_etag, digest, request_salt(request))
+            if source_etag is not None else ""
+        )
+        with ledger.batch():  # the pair group-commits on one fsync
+            ledger.append(
+                DELIVERY,
+                key=key,
+                accession=accession,
+                etag=source_etag,
+                temp="cold",
+                worker=self.worker_id,
+            )
+            ledger.append(
+                PROVENANCE,
+                key=key,
+                project=request.research_study,
+                accession=accession,
+                lake_key=skey,
+                etag=source_etag,
+                ruleset=digest,
+                detector_sha=getattr(policy, "fingerprint_identity", "") if policy else "",
+                kernel_path="batched" if self.pipeline.executor is not None else "serial",
+                batched=getattr(self, "_batched_delta", 0),
+                trace_id=trace_id_for(msg.key, msg.deliveries),
+                temp="cold",
+                instances=len(study.datasets),
+                nbytes=study.nbytes(),
+            )
 
     def _record_study(self, accession: str, etag, request, result) -> None:
         """Write the study-level completion record to the result lake so the

@@ -10,6 +10,7 @@ from repro.sim.events import Event, EventLog, EventQueue, HashRng
 from repro.sim.harness import FleetConfig, FleetReport, FleetSim
 from repro.sim.invariants import (
     DEFAULT_CHECKERS,
+    AuditCompleteness,
     AutoscalerAccounting,
     CheckpointMonotonicity,
     ExactlyOnceDelivery,
@@ -38,6 +39,7 @@ from repro.sim.traffic import (
 )
 
 __all__ = [
+    "AuditCompleteness",
     "AutoscalerAccounting",
     "BurstyTraffic",
     "ChaosEvent",

@@ -21,6 +21,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field, replace
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
+from repro.audit.ledger import NULL_LEDGER, AuditLedger
+from repro.audit.records import POLICY_EDIT
 from repro.catalog import CohortSelection, StudyCatalog
 from repro.catalog.columns import rows_from_study
 from repro.core.pipeline import DeidPipeline
@@ -109,6 +111,14 @@ class FleetConfig:
     slo_window_scale: float = 1.0 / 60.0
     slo_cold_threshold: float = 60.0     # cold-serve latency objective (s)
     slo_freshness_lag: float = 32.0      # ingest lag objective (feed events)
+    # tamper-evident audit ledger (DESIGN.md §14). ``audit=False`` swaps in
+    # NULL_LEDGER (provably zero behavior change: same event-log digest,
+    # metrics, and trace digest). ``audit_drop_provenance=True`` is the
+    # AuditCompleteness checker's negative control: completions stop emitting
+    # their delivery/provenance records, so the ledger↔journal cross-check
+    # must fire.
+    audit: bool = True
+    audit_drop_provenance: bool = False
 
 
 @dataclass
@@ -125,6 +135,9 @@ class FleetReport:
     # digests) — also kept out of ``metrics``: turning the SLO engine on
     # must not move any metric-equality assertion.
     slo: Dict[str, object] = field(default_factory=dict)
+    # audit-ledger summary (chain digest, record counts by kind) — same
+    # isolation rule: the ledger must not move metrics or either digest.
+    audit: Dict[str, object] = field(default_factory=dict)
 
     def ok(self) -> bool:
         return not self.violations
@@ -149,6 +162,14 @@ class FleetSim:
         # log digest
         self.registry = MetricsRegistry()
         self.tracer = Tracer(self.clock) if config.trace else NULL_TRACER
+        # --- audit plane (DESIGN.md §14): one hash-chained ledger shared by
+        # every PHI-touching component. Parallel to the event log like the
+        # tracer: appends never feed the log or metrics, so enabling the
+        # ledger cannot move either digest.
+        self.ledger = (
+            AuditLedger(f"{journal_path}.audit", clock=self.clock)
+            if config.audit else NULL_LEDGER
+        )
         # --- SLO plane (DESIGN.md §13): engine + critical-path profiler +
         # health controller. Observations are fed from the same hooks that
         # write the event log, so the alert stream is a pure function of the
@@ -242,6 +263,7 @@ class FleetSim:
             max_deliveries=config.max_deliveries,
             tracer=self.tracer,
             registry=self.registry,
+            ledger=self.ledger,
         )
         self.journal = Journal(journal_path)
         # the ingest plane gets its own queue: feed events and de-id work are
@@ -253,19 +275,29 @@ class FleetSim:
                 tracer=self.tracer, registry=self.registry,
             )
             self._build_ingest_process()
-        self.lake = ResultLake(max_bytes=config.lake_bytes, registry=self.registry)
+        self.lake = ResultLake(
+            max_bytes=config.lake_bytes, registry=self.registry, ledger=self.ledger
+        )
         self.policy = DetectorPolicy(mode=config.detector_mode)
         self.pipeline = DeidPipeline(
             recompress=config.recompress, lake=self.lake,
             detector_policy=self.policy,
-            tracer=self.tracer, registry=self.registry,
+            tracer=self.tracer, registry=self.registry, ledger=self.ledger,
+        )
+        # genesis policy record: the ruleset/detector identity this fleet
+        # deployed with — every later edit chains after it
+        self.ledger.append(
+            POLICY_EDIT,
+            action="deploy",
+            ruleset=self.pipeline.ruleset_fingerprint().digest,
+            detector_sha=self.policy.fingerprint_identity,
         )
         self.dest = StudyStore("researcher")
         self.service = DeidService(
             self.broker, self.source, self.journal,
             result_lake=self.lake, pipeline=self.pipeline,
             catalog=self.catalog,
-            tracer=self.tracer, registry=self.registry,
+            tracer=self.tracer, registry=self.registry, ledger=self.ledger,
         )
         for arr in self.traffic:
             if arr.study_id not in self.service._studies:
@@ -436,7 +468,7 @@ class FleetSim:
         )
         self.applier = IngestApplier(
             self.ingest_broker, self.feed, self.source, ckpt,
-            tracer=self.tracer, registry=self.registry,
+            tracer=self.tracer, registry=self.registry, ledger=self.ledger,
         )
 
     def _rebuild_ingest_process(self) -> None:
@@ -771,6 +803,7 @@ class FleetSim:
                 detector_policy=self.policy,
                 tracer=self.tracer,
                 registry=self.registry,
+                ledger=self.ledger,
             )
             # planner admissions and new workers move to the edited ruleset
             # atomically; in-flight workers finish under the old one (their
@@ -778,6 +811,10 @@ class FleetSim:
             digest = self.pipeline.ruleset_fingerprint().digest
             self._pipelines[digest] = self.pipeline
             self.service.planner.ruleset_digest = digest
+            self.ledger.append(
+                POLICY_EDIT, action="edit", ruleset=digest,
+                detector_sha=self.policy.fingerprint_identity,
+            )
         self.log.append(now, "chaos", chaos_kind=ce.kind, **ce.payload)
         if not self.broker.empty():
             self._schedule_tick(eq, now)
@@ -895,6 +932,19 @@ class FleetSim:
                 "profile_digest": self.profiler.digest(),
                 "traces_folded": self.profiler.traces_folded,
             }
+        # snapshot the ledger BEFORE the checkers run: several checkers
+        # re-materialize lake entries / replay pipelines, which appends more
+        # (legitimate) records — the reported digest is the digest of the
+        # *run*, identical across same-seed replays regardless of checker set
+        audit_summary: Dict[str, object] = {"enabled": bool(self.ledger.enabled)}
+        if self.ledger.enabled:
+            self.ledger.flush()
+            audit_summary.update(
+                digest=self.ledger.digest(),
+                records=len(self.ledger),
+                head=self.ledger.head(),
+                by_kind=self.ledger.kind_counts(),
+            )
         violations: List[Violation] = []
         for checker in checkers:
             violations.extend(checker.check(self))
@@ -905,6 +955,7 @@ class FleetSim:
             violations=violations,
             trace_digest=self.tracer.digest(),
             slo=slo_summary,
+            audit=audit_summary,
         )
 
 
@@ -938,6 +989,8 @@ class DeidWorkerProxyFactory:
             self.sim.journal, throughput=self.sim.config.worker_throughput,
             fence_stale_reads=self.sim.config.fence_stale_reads,
             tracer=self.sim.tracer,
+            ledger=self.sim.ledger,
+            audit_emit_provenance=not self.sim.config.audit_drop_provenance,
         )
         w._sim = self.sim
         return w

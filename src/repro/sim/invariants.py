@@ -788,6 +788,188 @@ class SloConformance(InvariantChecker):
         return out
 
 
+class AuditCompleteness(InvariantChecker):
+    """The audit ledger must be a tamper-evident, *complete* account of the
+    run, cross-checked against every other source of truth:
+
+    1. **chain** — ``verify()`` recomputes the hash chain from disk bytes:
+       any mutation, insertion, or reordering is a violation;
+    2. **durability** — a fresh replay of the ledger file reproduces the
+       live digest (nothing unflushed, nothing lost to a torn tail);
+    3. **journal** — every journal-completed key has exactly one cold
+       provenance record whose source etag matches the journal's, under a
+       ruleset this fleet actually deployed; the total cold-provenance count
+       equals the pool's processed count (this is the truncation bound:
+       chopping the ledger's tail breaks the equality);
+    4. **traces** — every cold provenance trace id resolves to a
+       ``worker.process`` span (skipped under ``trace=False``);
+    5. **event log** — the (key, etag) multiset of delivery records equals
+       the sim's researcher-visible delivery ledger;
+    6. **lake bytes** — every byte served out of / written into the lake has
+       a ledger record: summed ``lake_hit``/``lake_write`` sizes equal the
+       lake's own counters, and ``lru`` evictions match the eviction count;
+    7. **DLQ** — dead-letter records match the broker's DLQ exactly;
+    8. **ingest** — ``(feed_seq, outcome)`` of ingest records equals the
+       durable checkpoint's outcome map (survives pooler crash rebuilds).
+
+    Skipped when the run was configured with ``audit=False`` — NULL_LEDGER
+    records nothing by design. Negative controls: ``audit_drop_provenance``
+    (clauses 3+5), a mid-file byte flip (clause 1), and test-side counter /
+    DLQ tampering (clauses 6+7)."""
+
+    name = "audit_completeness"
+
+    def check(self, sim: "FleetSim") -> List[Violation]:
+        ledger = getattr(sim, "ledger", None)
+        if ledger is None or not getattr(ledger, "enabled", False):
+            return []
+        from collections import Counter
+
+        from repro.audit.ledger import AuditLedger
+        from repro.audit.records import (
+            DEAD_LETTER,
+            DELIVERY,
+            INGEST_APPLY,
+            LAKE_EVICT,
+            LAKE_HIT,
+            LAKE_WRITE,
+            PROVENANCE,
+        )
+
+        out: List[Violation] = []
+        # 1. hash chain intact on disk
+        for problem in ledger.verify():
+            out.append(self._v(f"chain: {problem}"))
+        # 2. durable replay reproduces the live chain
+        replayed = AuditLedger(ledger.path)
+        try:
+            if replayed.digest() != ledger.digest():
+                out.append(
+                    self._v(
+                        f"durability: replayed digest {replayed.digest()[:12]} != "
+                        f"live {ledger.digest()[:12]}"
+                    )
+                )
+        finally:
+            replayed.close()
+        # 3. ledger <-> journal: every completion left exactly one matching
+        # cold provenance record, and nothing was chopped off the tail
+        provs = ledger.records(PROVENANCE)
+        cold = [p for p in provs if p.get("temp") == "cold"]
+        by_key_etag = Counter((p.get("key"), p.get("etag")) for p in cold)
+        deployed = set(sim._pipelines)
+        for key in sorted(sim.journal.completed_keys()):
+            etag = sim.journal.etag_for(key)
+            n = by_key_etag.get((key, etag), 0)
+            if n != 1:
+                out.append(
+                    self._v(
+                        f"journal: completed {key} (etag {str(etag)[:12]}) has "
+                        f"{n} cold provenance record(s), want exactly 1"
+                    )
+                )
+        for p in cold:
+            if p.get("ruleset") not in deployed:
+                out.append(
+                    self._v(
+                        f"journal: provenance for {p.get('key')} names ruleset "
+                        f"{str(p.get('ruleset'))[:12]} this fleet never deployed"
+                    )
+                )
+        processed = sum(w.processed for w in sim.pool._all_workers)
+        if len(cold) != processed:
+            out.append(
+                self._v(
+                    f"journal: {len(cold)} cold provenance records != "
+                    f"{processed} processed completions (ledger truncated?)"
+                )
+            )
+        # 4. ledger <-> trace spans
+        tracer = getattr(sim, "tracer", None)
+        if tracer is not None and getattr(tracer, "enabled", False):
+            roots = {
+                s.trace_id for s in tracer.spans() if s.name == "worker.process"
+            }
+            for p in cold:
+                if p.get("trace_id") not in roots:
+                    out.append(
+                        self._v(
+                            f"traces: provenance for {p.get('key')} trace id "
+                            f"{p.get('trace_id')} has no worker.process span"
+                        )
+                    )
+        # 5. ledger <-> event log: delivery multisets agree
+        led = Counter(
+            (r.get("key"), r.get("etag")) for r in ledger.records(DELIVERY)
+        )
+        logged = Counter((d["key"], d["etag"]) for d in sim.delivery_log)
+        if led != logged:
+            missing = logged - led
+            extra = led - logged
+            out.append(
+                self._v(
+                    "event log: delivery multiset mismatch "
+                    f"(unledgered={sorted(missing, key=str)} "
+                    f"phantom={sorted(extra, key=str)})"
+                )
+            )
+        # 6. every lake byte in/out/evicted is accounted
+        hit_bytes = sum(r.get("nbytes", 0) for r in ledger.records(LAKE_HIT))
+        write_bytes = sum(r.get("nbytes", 0) for r in ledger.records(LAKE_WRITE))
+        lru_evicts = sum(
+            1 for r in ledger.records(LAKE_EVICT) if r.get("reason") == "lru"
+        )
+        if hit_bytes != sim.lake.stats.bytes_out:
+            out.append(
+                self._v(
+                    f"lake: ledgered hit bytes {hit_bytes} != "
+                    f"bytes_out {sim.lake.stats.bytes_out}"
+                )
+            )
+        if write_bytes != sim.lake.stats.bytes_in:
+            out.append(
+                self._v(
+                    f"lake: ledgered write bytes {write_bytes} != "
+                    f"bytes_in {sim.lake.stats.bytes_in}"
+                )
+            )
+        if lru_evicts != sim.lake.stats.evictions:
+            out.append(
+                self._v(
+                    f"lake: {lru_evicts} ledgered lru evictions != "
+                    f"{sim.lake.stats.evictions} counted"
+                )
+            )
+        # 7. dead-letter records mirror the broker's DLQ
+        led_dlq = sorted(r.get("key") for r in ledger.records(DEAD_LETTER))
+        broker_dlq = sorted(m.key for m in sim.broker.dead_letter)
+        if led_dlq != broker_dlq:
+            out.append(
+                self._v(
+                    f"dlq: ledgered {led_dlq} != broker {broker_dlq}"
+                )
+            )
+        # 8. ingest outcomes mirror the durable checkpoint
+        if sim.feed is not None and sim.applier is not None:
+            led_ops = Counter(
+                (r.get("feed_seq"), r.get("outcome"))
+                for r in ledger.records(INGEST_APPLY)
+            )
+            ckpt_ops = Counter(
+                (seq, rec.get("outcome"))
+                for seq, rec in sim.applier.checkpoint.outcomes.items()
+            )
+            if led_ops != ckpt_ops:
+                out.append(
+                    self._v(
+                        "ingest: ledgered outcomes disagree with checkpoint "
+                        f"(missing={sorted(ckpt_ops - led_ops)} "
+                        f"extra={sorted(led_ops - ckpt_ops)})"
+                    )
+                )
+        return out
+
+
 DEFAULT_CHECKERS = (
     ExactlyOnceDelivery(),
     PhiBoundary(),
@@ -804,4 +986,5 @@ DEFAULT_CHECKERS = (
     TelemetryPhiBoundary(),
     MetricsConservation(),
     SloConformance(),
+    AuditCompleteness(),
 )

@@ -15,6 +15,7 @@ import pytest
 from repro.catalog import Eq, Range
 from repro.core.pipeline import build_request
 from repro.sim import (
+    AuditCompleteness,
     AutoscalerAccounting,
     BurstyTraffic,
     ChaosEvent,
@@ -783,3 +784,164 @@ class TestMetricsConservation:
             "delivery accounting" in v.detail
             for v in MetricsConservation().check(sim)
         )
+
+
+# ------------------------------------------ tamper-evident audit (DESIGN §14)
+class TestAuditLedgerSim:
+    """The audit ledger rides the replayability contract (same seed ->
+    bit-identical chain digest), proves itself complete against journal /
+    traces / event log / lake counters on full-chaos runs, and NULL_LEDGER
+    changes nothing about fleet behavior. Plus one negative control per
+    AuditCompleteness clause family, including the tamper control."""
+
+    def _chaos_sim(self, tmp_path, name, seed=9, **cfg_kw):
+        corpus = [f"SIM{i:04d}" for i in range(5)]
+        traffic = BurstyTraffic(
+            n_bursts=2, cohorts_per_burst=2, cohort_size=3
+        ).schedule(corpus, seed=seed)
+        chaos = ChaosSchedule.seeded(seed, horizon=400.0, corpus=corpus)
+        return _tiny(tmp_path, name, seed=seed, n_studies=5,
+                     traffic=traffic, chaos=chaos, **cfg_kw)
+
+    def test_audit_completeness_green_under_chaos(self, tmp_path):
+        sim = self._chaos_sim(tmp_path, "aud_chaos")
+        report = sim.run()
+        assert report.ok(), [v.detail for v in report.violations]
+        assert report.audit["enabled"]
+        assert report.audit["records"] > 0
+        assert report.audit["by_kind"]["provenance"] >= 1
+        assert report.audit["by_kind"]["delivery"] >= 1
+        assert sim.ledger.verify() == []
+        assert not AuditCompleteness().check(sim)
+
+    def test_same_seed_same_audit_digest(self, tmp_path):
+        r1 = self._chaos_sim(tmp_path, "aud_rep_a").run()
+        r2 = self._chaos_sim(tmp_path, "aud_rep_b").run()
+        assert r1.audit["digest"] == r2.audit["digest"]
+        assert r1.audit["head"] == r2.audit["head"]
+        assert r1.audit["by_kind"] == r2.audit["by_kind"]
+
+    def test_different_seed_different_audit_digest(self, tmp_path):
+        r1 = self._chaos_sim(tmp_path, "aud_s1", seed=3).run()
+        r2 = self._chaos_sim(tmp_path, "aud_s2", seed=4).run()
+        assert r1.audit["digest"] != r2.audit["digest"]
+
+    def test_audit_disabled_is_zero_behavior_change(self, tmp_path):
+        r_on = self._chaos_sim(tmp_path, "aud_on", audit=True).run()
+        r_off = self._chaos_sim(tmp_path, "aud_off", audit=False).run()
+        # identical fleet behavior, bit for bit — NULL_LEDGER is inert
+        assert r_on.log_digest == r_off.log_digest
+        assert r_on.metrics == r_off.metrics
+        assert r_on.trace_digest == r_off.trace_digest
+        assert r_off.ok()
+        assert r_off.audit == {"enabled": False}
+        assert r_on.audit["digest"] != ""
+
+    def test_feed_chaos_audits_ingest_applies(self, tmp_path):
+        corpus = [f"SIM{i:04d}" for i in range(6)]
+        traffic = BurstyTraffic(
+            n_bursts=2, cohorts_per_burst=2, cohort_size=3
+        ).schedule(corpus, 11)
+        chaos = ChaosSchedule.seeded(
+            11, 600.0, corpus,
+            crash_events=1, reingests=2, lease_storms=1, ruleset_edits=1,
+            pooler_crashes=2, feed_outages=1, feed_faults=1,
+        )
+        sim = _tiny(tmp_path, "aud_feed", seed=11, n_studies=6,
+                    traffic=traffic, chaos=chaos, feed_mutations=12)
+        report = sim.run()
+        assert report.ok(), [v.detail for v in report.violations]
+        # every checkpointed outcome has its ledger record despite pooler
+        # crashes rebuilding the applier mid-run
+        applies = sim.ledger.records("ingest_apply")
+        assert len(applies) == len(sim.applier.checkpoint.outcomes)
+        # a ruleset edit mid-run leaves a policy_edit record after genesis
+        assert report.audit["by_kind"]["policy_edit"] >= 2
+
+    # -------------------------------------------------- negative controls
+    def test_negative_control_tampered_ledger_fails_verify(self, tmp_path):
+        """The tamper control: flip one payload byte mid-ledger — verify()
+        must fail and the chain clause of AuditCompleteness must fire."""
+        import json as _json
+
+        from repro.audit.records import canonical_json
+
+        sim = _tiny(tmp_path, "aud_tamper")
+        assert sim.run().ok()
+        lines = sim.ledger.path.read_text().splitlines()
+        mid = len(lines) // 2
+        rec = _json.loads(lines[mid])
+        rec["t"] = float(rec["t"]) + 1.0  # mutate one field, keep the sha
+        lines[mid] = canonical_json(rec)
+        sim.ledger.path.write_text("\n".join(lines) + "\n")
+        problems = sim.ledger.verify()
+        assert any("sha mismatch" in p for p in problems), problems
+        violations = AuditCompleteness().check(sim)
+        assert any(
+            v.detail.startswith("chain:") and "mutated" in v.detail
+            for v in violations
+        )
+
+    def test_negative_control_deleted_record_breaks_chain(self, tmp_path):
+        sim = _tiny(tmp_path, "aud_del")
+        assert sim.run().ok()
+        lines = sim.ledger.path.read_text().splitlines()
+        del lines[len(lines) // 2]
+        sim.ledger.path.write_text("\n".join(lines) + "\n")
+        assert any(
+            "chain:" in v.detail for v in AuditCompleteness().check(sim)
+        )
+
+    def test_negative_control_dropped_provenance_fires(self, tmp_path):
+        """Workers skip their provenance/delivery records: the journal and
+        event-log cross-checks must both fire."""
+        sim = _tiny(tmp_path, "aud_drop", audit_drop_provenance=True)
+        report = sim.run()
+        aud = [v for v in report.violations if v.checker == "audit_completeness"]
+        assert aud, [v.detail for v in report.violations]
+        assert any(v.detail.startswith("journal:") for v in aud)
+        assert any(v.detail.startswith("event log:") for v in aud)
+
+    def test_negative_control_lake_counter_tamper(self, tmp_path):
+        sim = _tiny(tmp_path, "aud_lake")
+        assert sim.run().ok()
+        sim.lake.stats.bytes_out += 1  # a byte out with no lake_hit record
+        assert any(
+            "lake:" in v.detail and "bytes_out" in v.detail
+            for v in AuditCompleteness().check(sim)
+        )
+
+    def test_negative_control_dlq_tamper(self, tmp_path):
+        chaos = ChaosSchedule([
+            ChaosEvent(0.0, "crash_keys", {"accessions": ["SIM0001"]}),
+        ])
+        sim = _tiny(tmp_path, "aud_dlq", chaos=chaos, max_deliveries=1)
+        assert sim.run().ok()
+        sim.broker.dead_letter.pop()  # quietly un-dead-letter a message
+        assert any(
+            v.detail.startswith("dlq:") for v in AuditCompleteness().check(sim)
+        )
+
+    def test_negative_control_forged_ingest_record(self, tmp_path):
+        from repro.audit.records import INGEST_APPLY
+
+        sim = _tiny(tmp_path, "aud_ingest", feed_mutations=4)
+        assert sim.run().ok()
+        sim.ledger.append(
+            INGEST_APPLY, feed_seq=999999, accession="FORGED", etag="e",
+            op="update", outcome="applied", rows=1,
+        )
+        assert any(
+            v.detail.startswith("ingest:")
+            for v in AuditCompleteness().check(sim)
+        )
+
+    def test_disclosure_report_accounts_every_delivery(self, tmp_path):
+        from repro.audit.report import DisclosureReport
+
+        sim = self._chaos_sim(tmp_path, "aud_disc")
+        assert sim.run().ok()
+        rep = DisclosureReport.from_ledger(sim.ledger)
+        total = sum(a.deliveries for a in rep.projects.values())
+        assert total == len(sim.delivery_log)
+        assert rep.ledger_digest == sim.ledger.digest()
